@@ -1,0 +1,52 @@
+"""Fig 6/16/17: query latency + RU vs search list size L, with recall@10.
+
+Note: synthetic gaussian clusters at 64D are near-worst-case for PQ (no
+low intrinsic dimension); M=32 (2 dims/subquantizer) matches the paper's
+effective navigation precision on real embeddings.
+
+Paper claim (10M × 768D): L=50 → p50 < 20 ms, recall ≈ 91.8%; larger L →
+higher recall at higher latency/RU. At bench scale the same monotone
+recall-vs-L and latency-vs-L curves must appear, and the modeled latency
+through the §4.4 access-time constants lands in the paper's regime when
+fed the paper's counter values.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import recall as rec
+
+from .common import build_index, clustered, in_dist_queries, pct, per_query_stats
+
+
+def run(n: int = 8000, dim: int = 64, n_queries: int = 64, seed: int = 0):
+    rng = np.random.RandomState(seed)
+    data = clustered(rng, n, dim)
+    idx = build_index(data, R=24, M=32, L_build=48)
+    q = in_dist_queries(data, rng, n_queries)
+    gt = rec.ground_truth(q, data, np.ones(n, bool), 10)
+
+    rows = []
+    for L in (10, 25, 50, 100):
+        ids, lat, ru = per_query_stats(idx, q, k=10, L=L)
+        r = rec.recall_at_k(ids, gt, 10)
+        rows.append(dict(L=L, recall=r, p50_ms=pct(lat, 50), p95_ms=pct(lat, 95),
+                         p99_ms=pct(lat, 99), ru=ru))
+    return rows
+
+
+def main():
+    rows = run()
+    print("bench_query (Fig 6): L, recall@10, p50/p95/p99 modeled ms, RU")
+    for r in rows:
+        print(f"  L={r['L']:4d} recall={r['recall']:.3f} "
+              f"p50={r['p50_ms']:.2f}ms p95={r['p95_ms']:.2f}ms "
+              f"p99={r['p99_ms']:.2f}ms RU={r['ru']:.1f}")
+    # monotone recall in L
+    rc = [r["recall"] for r in rows]
+    assert all(b >= a - 0.02 for a, b in zip(rc, rc[1:])), "recall not monotone in L"
+    return rows
+
+
+if __name__ == "__main__":
+    main()

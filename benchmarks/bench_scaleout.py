@@ -1,0 +1,66 @@
+"""Fig 10: scale-out — query cost/latency across partition counts.
+
+Paper: RU grows ~linearly with partitions (fan-out) but logarithmically
+with per-partition size; client latency tracks the max server latency, so
+fewer, fuller partitions are better. We sweep partition counts at fixed
+total N and report RU totals + simulated client latency (max over servers
+with lognormal jitter), with and without hedging.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import GraphConfig
+from repro.partition import Collection, CollectionConfig
+from repro.partition.fanout import fanout_search
+
+from .common import clustered, in_dist_queries, pct
+
+
+def run(total_n: int = 8000, dim: int = 32, parts=(1, 2, 4, 8), seed: int = 0):
+    rng = np.random.RandomState(seed)
+    data = clustered(rng, total_n, dim)
+    q = in_dist_queries(data, rng, 16)
+    rows = []
+    for p in parts:
+        g = GraphConfig(capacity=total_n // p + 256, R=12, M=8, L_build=40,
+                        L_search=48, bootstrap_sample=128,
+                        refine_sample=10**9, batch_size=64)
+        cc = CollectionConfig(dim=dim, graph=g,
+                              max_vectors_per_partition=total_n // p + 128,
+                              initial_partitions=p)
+        col = Collection(cc)
+        col.insert(list(range(total_n)), list(range(total_n)), data)
+        lat_model = lambda part, rr: float(np.exp(rr.normal(np.log(8), 0.35)))
+        lats, rus = [], []
+        for i in range(len(q)):
+            _, _, info = fanout_search(col.partitions, q[i : i + 1], 10,
+                                       latency_model=lat_model,
+                                       rng=np.random.RandomState(seed + i))
+            lats.append(info["client_latency_ms"])
+            rus.append(info["ru_total"])
+        lats_h = []
+        for i in range(len(q)):
+            _, _, info = fanout_search(col.partitions, q[i : i + 1], 10,
+                                       latency_model=lat_model, hedge_at_ms=14,
+                                       rng=np.random.RandomState(seed + i))
+            lats_h.append(info["client_latency_ms"])
+        rows.append(dict(partitions=p, ru=float(np.mean(rus)),
+                         client_p50=pct(lats, 50), client_p99=pct(lats, 99),
+                         client_p99_hedged=pct(lats_h, 99)))
+    return rows
+
+
+def main():
+    rows = run()
+    print("bench_scaleout (Fig 10): partitions, total RU, client p50/p99 (+hedged)")
+    for r in rows:
+        print(f"  P={r['partitions']} RU={r['ru']:.1f} p50={r['client_p50']:.1f}ms "
+              f"p99={r['client_p99']:.1f}ms p99_hedged={r['client_p99_hedged']:.1f}ms")
+    # fan-out cost should grow with partitions (paper: linear in partitions)
+    assert rows[-1]["ru"] > rows[0]["ru"]
+    return rows
+
+
+if __name__ == "__main__":
+    main()

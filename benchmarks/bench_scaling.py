@@ -1,0 +1,66 @@
+"""Fig 7/8: query cost vs index size and vs dimensionality.
+
+Paper claims: latencies and RU increase < 2× for a 100× index-size increase
+(logarithmic hop complexity), and dimensionality (100 → 768) barely moves
+latency/RU. At bench scale we verify the *scaling exponent*: fit
+cmps ≈ a + b·log N and report the predicted 100× growth factor, plus the
+dim comparison at fixed N.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import recall as rec
+
+from .common import build_index, clustered, in_dist_queries, per_query_stats, query_ru
+
+
+def run(sizes=(2000, 8000, 32000), dim: int = 64, L: int = 64, seed: int = 0):
+    rng = np.random.RandomState(seed)
+    rows = []
+    for n in sizes:
+        data = clustered(rng, n, dim)
+        idx = build_index(data, R=16, M=16, L_build=48)
+        q = in_dist_queries(data, rng, 32)
+        ids, lat, ru = per_query_stats(idx, q, k=10, L=L)
+        gt = rec.ground_truth(q, data, np.ones(n, bool), 10)
+        rows.append(dict(n=n, ru=ru, p50=float(np.percentile(lat, 50)),
+                         recall=rec.recall_at_k(ids, gt, 10)))
+    # log fit: ru = a + b ln n → growth factor for 100×
+    ns = np.array([r["n"] for r in rows], float)
+    rus = np.array([r["ru"] for r in rows], float)
+    b, a = np.polyfit(np.log(ns), rus, 1)
+    ru_10m = a + b * np.log(1e7)
+    ru_100k = a + b * np.log(1e5)
+    growth_100x = ru_10m / max(ru_100k, 1e-9)
+    return rows, growth_100x, ru_10m
+
+
+def run_dim_compare(n: int = 8000, dims=(32, 96), L: int = 64, seed: int = 1):
+    rng = np.random.RandomState(seed)
+    out = []
+    for d in dims:
+        data = clustered(rng, n, d)
+        idx = build_index(data, R=16, M=16 if d % 16 == 0 else 8, L_build=48)
+        q = in_dist_queries(data, rng, 32)
+        _, lat, ru = per_query_stats(idx, q, k=10, L=L)
+        out.append(dict(dim=d, ru=ru, p50=float(np.percentile(lat, 50))))
+    return out
+
+
+def main():
+    rows, growth, ru_10m = run()
+    print("bench_scaling (Fig 7/8): N, RU, p50 modeled ms, recall")
+    for r in rows:
+        print(f"  N={r['n']:6d} RU={r['ru']:.1f} p50={r['p50']:.2f}ms recall={r['recall']:.3f}")
+    print(f"  log-fit 100x growth factor: {growth:.2f} (paper: <2x)")
+    print(f"  extrapolated RU at 10M: {ru_10m:.0f} (paper Table 1: 70)")
+    dims = run_dim_compare()
+    print("  dim comparison (Fig 8):",
+          " vs ".join(f"D={d['dim']}: RU={d['ru']:.1f}" for d in dims))
+    assert growth < 3.0, f"scaling factor {growth} way off the paper's <2x"
+    return rows, growth, ru_10m, dims
+
+
+if __name__ == "__main__":
+    main()

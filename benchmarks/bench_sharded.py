@@ -1,0 +1,83 @@
+"""Table 3: sharded DiskANN (per-tenant indices) vs one big index.
+
+Paper (YFCC, year shards): sharded gives ~3× lower latency AND higher
+recall (98 vs 66) than filtering a non-sharded index at the same L — and
+beats even L=1000 non-sharded. We reproduce with tenant-labeled clusters.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import recall as rec
+from repro.store.ru import OpCounters, RUConfig, RUMeter
+
+from .common import build_index, clustered, pct
+
+
+def run(n_tenants: int = 6, per_tenant: int = 1200, dim: int = 32, seed: int = 0):
+    rng = np.random.RandomState(seed)
+    # tenants share the embedding space (the YFCC year-shard regime):
+    # per-tenant clusters interleave, so filtering the shared index must
+    # wade through non-matching neighbors — the Table 3 setting
+    tenant_data = [clustered(np.random.RandomState(seed + 100 + t), per_tenant, dim, k=8)
+                   for t in range(n_tenants)]
+    all_data = np.concatenate(tenant_data)
+    labels = np.repeat(np.arange(n_tenants), per_tenant)
+
+    big = build_index(all_data, R=16, M=8, L_build=48)
+    shard = build_index(tenant_data[0], R=16, M=8, L_build=48, seed=1)
+
+    target = 0
+    q = tenant_data[target][rng.choice(per_tenant, 24)] + 0.02
+    live = labels == target
+    gt = rec.ground_truth(q, all_data, live, 10)
+    meter = RUMeter(RUConfig())
+
+    def eval_filtered(L):
+        doc_filter = np.zeros(big.cfg.capacity, bool)
+        doc_filter[: len(all_data)][live] = True
+        lats, ids_all = [], []
+        for i in range(len(q)):
+            ids, _, st = big.filtered_search(q[i : i + 1], 10, doc_filter,
+                                             L=L, mode="beta")
+            ids_all.append(ids[0])
+            lats.append(meter.latency_ms(OpCounters(
+                quant_reads=int(st.cmps), adj_reads=int(st.hops),
+                full_reads=int(st.full_reads))))
+        return rec.recall_at_k(np.asarray(ids_all), gt, 10), lats
+
+    def eval_sharded(L):
+        lats, ids_all = [], []
+        gt_local = rec.ground_truth(q, tenant_data[target],
+                                    np.ones(per_tenant, bool), 10)
+        for i in range(len(q)):
+            ids, _, st = shard.search(q[i : i + 1], 10, L=L)
+            ids_all.append(ids[0])
+            lats.append(meter.latency_ms(OpCounters(
+                quant_reads=int(st.cmps), adj_reads=int(st.hops),
+                full_reads=int(st.full_reads))))
+        return rec.recall_at_k(np.asarray(ids_all), gt_local, 10), lats
+
+    r_sh, lat_sh = eval_sharded(50)
+    r_ns, lat_ns = eval_filtered(50)
+    r_ns_big, lat_ns_big = eval_filtered(200)
+    return dict(
+        sharded=dict(recall=r_sh, p50=pct(lat_sh, 50), p99=pct(lat_sh, 99)),
+        nonsharded_L50=dict(recall=r_ns, p50=pct(lat_ns, 50), p99=pct(lat_ns, 99)),
+        nonsharded_L200=dict(recall=r_ns_big, p50=pct(lat_ns_big, 50),
+                             p99=pct(lat_ns_big, 99)),
+    )
+
+
+def main():
+    out = run()
+    print("bench_sharded (Table 3): scenario, recall@10, p50/p99 modeled ms")
+    for k, v in out.items():
+        print(f"  {k:16s} recall={v['recall']:.3f} p50={v['p50']:.2f} p99={v['p99']:.2f}")
+    assert out["sharded"]["recall"] >= out["nonsharded_L50"]["recall"] - 0.05
+    assert out["sharded"]["p50"] <= out["nonsharded_L200"]["p50"]
+    return out
+
+
+if __name__ == "__main__":
+    main()

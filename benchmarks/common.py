@@ -1,0 +1,86 @@
+"""Shared benchmark helpers: data, index building, timing, reporting.
+
+CPU-container scaling: the paper runs 10M×768D; these benchmarks run
+2k–50k × 24–96D and report (a) raw measured numbers at bench scale and
+(b) *derived* quantities comparable to the paper (RU model outputs, recall
+curves, scaling exponents). EXPERIMENTS.md places both next to the paper's
+claims.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import DiskANNIndex, GraphConfig
+from repro.core import recall as rec
+from repro.store.ru import OpCounters, RUConfig, RUMeter
+
+
+def clustered(rng: np.random.RandomState, n: int, dim: int, k: int = 32,
+              spread: float = 0.15) -> np.ndarray:
+    centers = rng.randn(k, dim).astype(np.float32)
+    return (centers[rng.randint(0, k, n)] + spread * rng.randn(n, dim)).astype(np.float32)
+
+
+def build_index(data: np.ndarray, R: int = 24, M: int = 16, L_build: int = 48,
+                seed: int = 0, providers=None, batch_size: int = 100) -> DiskANNIndex:
+    n, d = data.shape
+    cfg = GraphConfig(capacity=n + 128, R=R, M=M, L_build=L_build,
+                      L_search=L_build, bootstrap_sample=min(1000, max(128, n // 8)),
+                      refine_sample=10**9, batch_size=batch_size)
+    idx = DiskANNIndex(cfg, d, seed=seed, providers=providers)
+    idx.insert(list(range(n)), data)
+    return idx
+
+
+def in_dist_queries(data: np.ndarray, rng: np.random.RandomState, n: int,
+                    noise: float = 0.05) -> np.ndarray:
+    pick = rng.choice(len(data), n, replace=False)
+    return (data[pick] + noise * rng.randn(n, data.shape[1])).astype(np.float32)
+
+
+def query_ru(stats, meter: RUMeter | None = None) -> float:
+    """Modeled per-query RU from search counters (the §4 cost currency)."""
+    meter = meter or RUMeter(RUConfig())
+    return meter.ru(OpCounters(
+        quant_reads=int(stats.cmps), adj_reads=int(stats.hops),
+        full_reads=int(stats.full_reads), cpu_ms=0.02 * stats.cmps / 100,
+    ))
+
+
+def query_latency_ms(stats, meter: RUMeter | None = None) -> float:
+    """Modeled single-replica latency from the §4.4 access-time constants."""
+    meter = meter or RUMeter(RUConfig())
+    return meter.latency_ms(OpCounters(
+        quant_reads=int(stats.cmps), adj_reads=int(stats.hops),
+        full_reads=int(stats.full_reads),
+    ))
+
+
+def timed(fn, *args, repeat: int = 3, **kw):
+    best = float("inf")
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def per_query_stats(idx: DiskANNIndex, queries: np.ndarray, k: int, L: int,
+                    rerank_multiplier: float = 5.0):
+    """Per-query modeled latencies (ms) + recall + mean RU."""
+    lat, rus = [], []
+    all_ids = []
+    for i in range(len(queries)):
+        ids, _, st = idx.search(queries[i : i + 1], k=k, L=L,
+                                rerank_multiplier=rerank_multiplier)
+        all_ids.append(ids[0])
+        lat.append(query_latency_ms(st))
+        rus.append(query_ru(st))
+    return np.asarray(all_ids), np.asarray(lat), float(np.mean(rus))
+
+
+def pct(a, p):
+    return float(np.percentile(np.asarray(a), p))

@@ -1,0 +1,69 @@
+"""§Perf experiments on the paper's own workload (cosmosann/query).
+
+Baseline: one DiskANN shard per device, batched beam search (gather-based
+ADC), all-gather top-k merge. Levers measured here:
+
+  * query batch size (compute/byte amortization of the graph stream);
+  * one-hot MXU ADC vs gather ADC inside the beam loop (the pq_adc kernel's
+    contraction trick at the HLO level);
+  * rerank candidate width (full-precision touches per query).
+
+    PYTHONPATH=src python -m benchmarks.perf_cosmos
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import json
+import time
+
+import jax
+
+from repro.configs import cosmosann as cz
+from repro.launch.dryrun import _compile_one
+from repro.launch.mesh import make_production_mesh
+from repro.partition.fanout import distributed_search_fn
+
+HOPS = 1.4 * 100  # beam while-body multiplier (see roofline.py)
+PEAK, HBM, ICI = 197e12, 819e9, 50e9
+
+
+def measure(tag: str, query_batch: int = 128, L: int = 100, k: int = 10):
+    cfg = cz.VectorWorkloadConfig(query_batch=query_batch, L_search=L, k=k)
+    mesh = make_production_mesh()
+    n_dev = 256
+    specs = cz.shard_specs(cfg, n_dev)
+    fn = distributed_search_fn(mesh, L=cfg.L_search, k=cfg.k,
+                               shard_axes=tuple(mesh.axis_names),
+                               max_hops=2 * cfg.L_search)
+    args = (specs["neighbors"], specs["codes"], specs["versions"], specs["live"],
+            specs["vectors"], specs["doc_ids"], specs["medoid"],
+            specs["codebooks"], specs["queries"])
+    rec = _compile_one(lambda: (fn, args), tag, want_memory=True)
+    flops = rec["flops"] * HOPS
+    bts = rec["bytes_accessed"] * HOPS
+    coll = sum((2 if kk == "all-reduce" else 1) * v["bytes"]
+               for kk, v in rec["collectives"].items())
+    out = dict(
+        tag=tag, query_batch=query_batch, L=L,
+        t_compute=flops / PEAK, t_memory=bts / HBM, t_collective=coll / ICI,
+        per_query_us=1e6 * max(flops / PEAK, bts / HBM, coll / ICI) / query_batch,
+        mem_gib=(rec["memory"]["argument_size_in_bytes"]
+                 + rec["memory"]["temp_size_in_bytes"]) / 2**30,
+    )
+    print(json.dumps(out, indent=1))
+    return out
+
+
+def main():
+    rows = [
+        measure("baseline_b128", 128),
+        measure("b1024", 1024),  # amortize the graph stream over 8x queries
+        measure("b4096", 4096),
+    ]
+    with open("results/perf_cosmos.json", "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""§Perf driver: hypothesis → change → re-lower → measure cycles.
+
+Each experiment compiles one (arch × shape × mesh) cell with a named set of
+overrides, extracts corrected roofline terms, and appends a row to
+results/perf_log.json. Run AFTER the baseline dry-run exists:
+
+    PYTHONPATH=src python -m benchmarks.perf_experiments --cell smollm-135m/train_4k --exp dots_remat
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import dataclasses
+import json
+import time
+
+from repro.launch import dryrun as dr
+
+from .roofline import analyse_cell
+
+
+EXPERIMENTS = {
+    # remat policy: keep matmul outputs → less recompute FLOPs, more memory
+    "dots_remat": {"remat": "dots"},
+    # no remat at all (upper bound on the memory cost of saving everything)
+    "no_remat": {"remat": "none"},
+    # deeper microbatching: activations shrink, collectives repeat
+    "accum8": {"accum": 8},
+    "accum2": {"accum": 2},
+    # MoE dispatch group size (dispatch/combine tensor ∝ G·E·C)
+    "moe_group_2048": {"cfg": lambda c: dataclasses.replace(
+        c, moe=dataclasses.replace(c.moe, group_size=2048)) if c.moe else c},
+    "moe_group_128": {"cfg": lambda c: dataclasses.replace(
+        c, moe=dataclasses.replace(c.moe, group_size=128)) if c.moe else c},
+    # context-parallel attention: shard S² attention over `model` via the
+    # query-seq dim (tiny-head archs otherwise replicate it per model shard)
+    "cp_attn": {"cfg": lambda c: dataclasses.replace(c, cp_attn=True)},
+    # fp32 params (baseline bf16): measures the dtype lever on mem/collectives
+    "fp32_params": {"cfg": lambda c: dataclasses.replace(c, param_dtype="float32")},
+    # compute in f32 (collective/memory cost of not using bf16 activations)
+    "fp32_compute": {"cfg": lambda c: dataclasses.replace(c, compute_dtype="float32")},
+}
+
+
+def run_experiment(cell: str, exp: str, mesh: str = "single",
+                   out_dir: str = "results/perf") -> dict:
+    arch, shape = cell.split("/")
+    dr.OVERRIDES.clear()
+    dr.OVERRIDES.update(EXPERIMENTS[exp])
+    try:
+        t0 = time.time()
+        r = dr.run_cell(arch, shape, mesh, os.path.join(out_dir, exp), force=True)
+        path = os.path.join(out_dir, exp, f"{arch}__{shape}__{mesh}.json")
+        # accum override must be visible to roofline's re-multiply
+        if "accum" in dr.OVERRIDES and r.get("accum"):
+            r["accum"] = dr.OVERRIDES["accum"]
+            with open(path, "w") as f:
+                json.dump(r, f)
+        row = analyse_cell(path)
+        row["experiment"] = exp
+        row["wall_s"] = round(time.time() - t0, 1)
+        return row
+    finally:
+        dr.OVERRIDES.clear()
+
+
+def append_log(row: dict, log_path: str = "results/perf_log.json"):
+    log = []
+    if os.path.exists(log_path):
+        with open(log_path) as f:
+            log = json.load(f)
+    log.append(row)
+    with open(log_path, "w") as f:
+        json.dump(log, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, help="arch/shape")
+    ap.add_argument("--exp", required=True, choices=sorted(EXPERIMENTS))
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    row = run_experiment(args.cell, args.exp, args.mesh)
+    append_log(row)
+    print(json.dumps({k: v for k, v in row.items()
+                      if k in ("arch", "shape", "experiment", "t_compute",
+                               "t_memory", "t_collective", "bottleneck",
+                               "useful_ratio", "hbm_gib_per_device")}, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,223 @@
+"""§Roofline: three-term roofline per (arch × shape × mesh) from dry-run JSON.
+
+Terms (per training/serving step, per device, TPU v5e constants from spec):
+
+    compute    = HLO_FLOPs_corrected / (devices × 197e12 bf16 FLOP/s)
+    memory     = HLO_bytes_corrected / (devices × 819e9 B/s HBM)
+    collective = collective_bytes    / (devices × 50e9 B/s per ICI link)
+
+Loop-count correction (XLA's cost analysis counts `while` bodies once —
+verified in launch/dryrun.py):
+
+  * uniform archs compile unrolled L=1 / L=2 variants at the real shape:
+        F_true = F(L1) + (num_layers − 1) · (F(L2) − F(L1))
+  * zamba2 train/prefill compiles the full (python-looped) pattern at
+    S ∈ {Q, 2Q, 4Q} with unrolled chunk loops and fits F(S) = a + b·S + c·S²
+    (attention blocks are quadratic in S), evaluated at the real S;
+  * cells with no inner loops use the full compile directly.
+
+Collective bytes get ring factors: all-reduce ×2 (reduce-scatter +
+all-gather phases), others ×1; bytes are per-device post-SPMD shapes.
+
+MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) per train step (3·fwd
+cost, incl. backward); decode/prefill use 2·N·D_tokens. The ratio
+MODEL_FLOPS / HLO_FLOPs exposes remat/recompute and attention overheads.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Optional
+
+import numpy as np
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s per link
+
+RING_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def _coll_bytes(rec: dict) -> float:
+    return sum(RING_FACTOR[k] * v["bytes"] for k, v in rec["collectives"].items())
+
+
+def _rec(cell: dict, tag: str) -> Optional[dict]:
+    for r in cell.get("records", []):
+        if r["tag"] == tag:
+            return r
+    return None
+
+
+def corrected_costs(cell: dict, num_layers: int, seq_len: int,
+                    pattern: tuple[str, ...]) -> dict:
+    """Returns dict(flops, bytes, coll_bytes) with loop corrections.
+
+    See launch/dryrun.py's variant-plan comment for the formulas. `seq_scaled`
+    (when set) means the L/M variants compiled at a reduced sequence S_v and
+    are linearly rescaled by S/S_v (valid: those variants only cover
+    linear-in-S blocks; quadratic attention comes from A-variants at full S).
+    """
+    full = _rec(cell, "full")
+    l1, l2 = _rec(cell, "L1"), _rec(cell, "L2")
+    m1, m2 = _rec(cell, "M1"), _rec(cell, "M2")
+    a1, a2 = _rec(cell, "A1"), _rec(cell, "A2")
+    sv = cell.get("seq_scaled") or seq_len
+    scale = seq_len / sv
+
+    def get(rec, metric):
+        return rec[metric] if metric != "coll" else _coll_bytes(rec)
+
+    def fix(metric):
+        if l1 and l2:
+            f1, f2 = get(l1, metric), get(l2, metric)
+            return (f1 + (num_layers - 1) * (f2 - f1)) * scale
+        if m1 and m2 and a1 and a2:
+            n_m = sum(k == "mamba2" for k in pattern)
+            n_a = sum(k == "attn" for k in pattern)
+            dM = get(m2, metric) - get(m1, metric)
+            dA = get(a2, metric) - get(a1, metric)
+            ovh = get(m1, metric) - dM
+            return (ovh + n_m * dM) * scale + n_a * dA
+        return get(full, metric)
+
+    accum = cell.get("accum", 1)  # identical microbatches → exact multiply
+    return dict(
+        flops=fix("flops") * accum,
+        bytes=fix("bytes_accessed") * accum,
+        coll_bytes=fix("coll") * accum,
+        raw_flops=full["flops"],
+        memory=full.get("memory", {}),
+    )
+
+
+def model_flops(arch: str, shape: str, params: int, active: int) -> float:
+    train_tokens = {"train_4k": 256 * 4096}
+    if shape == "train_4k":
+        return 6.0 * active * train_tokens[shape]
+    if shape == "prefill_32k":
+        return 2.0 * active * 32 * 32768
+    if shape == "decode_32k":
+        return 2.0 * active * 128  # one token × batch
+    if shape == "long_500k":
+        return 2.0 * active * 1
+    return 0.0
+
+
+def analyse_cell(path: str) -> Optional[dict]:
+    with open(path) as f:
+        cell = json.load(f)
+    if cell.get("skipped"):
+        return dict(arch=cell["arch"], shape=cell["shape"], mesh=cell["mesh"],
+                    skipped=cell["skipped"])
+    if not cell.get("ok"):
+        return dict(arch=cell["arch"], shape=cell["shape"], mesh=cell["mesh"],
+                    error=cell.get("error", "?"))
+    if cell["arch"] == "cosmosann":
+        full = _rec(cell, "full")
+        # the beam while-loop body is counted once; a search expands ≈1.4·L
+        # nodes (measured hop counts, benchmarks/bench_query.py), so the
+        # traversal portion is multiplied analytically.
+        hops = 1.4 * cell.get("workload", {}).get("L_search", 100)
+        costs = dict(flops=full["flops"] * hops, bytes=full["bytes_accessed"] * hops,
+                     coll_bytes=_coll_bytes(full), raw_flops=full["flops"],
+                     memory=full.get("memory", {}))
+        params, active = 0, 0
+    else:
+        import sys
+        sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+        from repro.configs import SHAPES, get_config
+        cfg = get_config(cell["arch"])
+        shape = SHAPES[cell["shape"]]
+        costs = corrected_costs(cell, cfg.num_layers, shape.seq_len, cfg.pattern)
+        params, active = cell.get("model_params", cfg.param_count()), cell.get(
+            "active_params", cfg.active_param_count())
+
+    # cost_analysis and memory_analysis of the post-SPMD module are
+    # PER-DEVICE (verified against a hand-partitioned matmul).
+    D = cell["devices"]
+    t_compute = costs["flops"] / PEAK_FLOPS
+    t_memory = costs["bytes"] / HBM_BW
+    t_coll = costs["coll_bytes"] / ICI_BW
+    terms = dict(compute=t_compute, memory=t_memory, collective=t_coll)
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(cell["arch"], cell.get("shape", ""), params, active)
+    mem = costs["memory"]
+    hbm_gib = (mem.get("argument_size_in_bytes", 0)
+               + mem.get("temp_size_in_bytes", 0)
+               + mem.get("output_size_in_bytes", 0)
+               - mem.get("alias_size_in_bytes", 0)) / 2**30
+    out = dict(
+        arch=cell["arch"], shape=cell["shape"], mesh=cell["mesh"], devices=D,
+        flops=costs["flops"], bytes=costs["bytes"], coll_bytes=costs["coll_bytes"],
+        t_compute=t_compute, t_memory=t_memory, t_collective=t_coll,
+        bottleneck=bottleneck,
+        model_flops=mf,
+        useful_ratio=(mf / (costs["flops"] * D)) if costs["flops"] else 0.0,
+        roofline_fraction=(
+            terms[bottleneck] and t_compute / max(terms.values()) or 0.0
+        ),
+        hbm_gib_per_device=hbm_gib,
+        fits_v5e=hbm_gib < 16.0,
+        mem_per_device=costs["memory"],
+    )
+    return out
+
+
+def analyse_dir(dry_dir: str = "results/dryrun") -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dry_dir, "*.json"))):
+        r = analyse_cell(path)
+        if r:
+            rows.append(r)
+    return rows
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.0f}µs"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def print_table(rows: list[dict]):
+    print(f"{'arch':24s} {'shape':12s} {'mesh':6s} "
+          f"{'compute':>9s} {'memory':>9s} {'collect':>9s} {'bound':>10s} "
+          f"{'useful':>7s} {'roofl%':>7s} {'HBM GiB':>8s}")
+    for r in rows:
+        if "skipped" in r:
+            print(f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:6s} "
+                  f"{'SKIP: ' + r['skipped']}")
+            continue
+        if "error" in r:
+            print(f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:6s} FAIL {r['error'][:60]}")
+            continue
+        fits = "" if r["fits_v5e"] else " OVER!"
+        print(f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:6s} "
+              f"{fmt_s(r['t_compute']):>9s} {fmt_s(r['t_memory']):>9s} "
+              f"{fmt_s(r['t_collective']):>9s} {r['bottleneck']:>10s} "
+              f"{r['useful_ratio']:7.2f} {100*r['roofline_fraction']:6.1f}% "
+              f"{r['hbm_gib_per_device']:7.2f}{fits}")
+
+
+def main():
+    rows = analyse_dir()
+    print_table(rows)
+    with open("results/roofline.json", "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"\n{len(rows)} cells -> results/roofline.json")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

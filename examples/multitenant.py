@@ -1,0 +1,71 @@
+"""Multi-tenancy with sharded DiskANN (§3.3/§4.6, Table 3).
+
+Tenants share one collection; a VectorIndexShardKey gives each tenant its
+own logical DiskANN index (disjoint key ranges in the same store). Tenant
+queries route to their shard: lower latency, higher recall than filtering
+a shared index — the Table 3 effect.
+
+    PYTHONPATH=src python examples/multitenant.py
+"""
+import numpy as np
+
+from repro.core import GraphConfig
+from repro.core import recall as rec
+from repro.serve import VectorCollectionService, VectorQuery
+
+
+def main():
+    rng = np.random.RandomState(0)
+    dim, tenants, per_tenant = 32, 5, 600
+    n = tenants * per_tenant
+
+    svc = VectorCollectionService(
+        dim=dim,
+        graph=GraphConfig(capacity=n + 512, R=12, M=8, L_build=32, L_search=48,
+                          bootstrap_sample=256, refine_sample=10**9),
+        max_vectors_per_partition=n + 256,
+        shard_key_path="tenant",
+    )
+
+    all_vecs, docs = [], []
+    for t in range(tenants):
+        centers = rng.randn(6, dim).astype(np.float32) + 4.0 * t
+        vecs = (centers[rng.randint(0, 6, per_tenant)]
+                + 0.2 * rng.randn(per_tenant, dim)).astype(np.float32)
+        all_vecs.append(vecs)
+        docs += [{"id": t * per_tenant + i, "tenant": f"tenant-{t}"}
+                 for i in range(per_tenant)]
+    vectors = np.concatenate(all_vecs)
+    svc.upsert(docs, vectors)
+    print(f"ingested {n} docs across {tenants} tenants (sharded indices)")
+
+    # tenant-scoped query through the shard key vs filtering the big index
+    t = 2
+    tq = all_vecs[t][rng.choice(per_tenant, 16)] + 0.02
+    live = np.zeros(n, bool)
+    live[t * per_tenant : (t + 1) * per_tenant] = True
+    gt = rec.ground_truth(tq, vectors, live, 10)
+
+    sharded_ids, sharded_ru = [], 0.0
+    for q in tq:
+        res = svc.query(VectorQuery(vector=q, k=10, shard_key=f"tenant-{t}"))
+        sharded_ids.append(res.ids)
+        sharded_ru += res.ru
+    r_sharded = rec.recall_at_k(np.stack(sharded_ids), gt, 10)
+
+    filt_ids, filt_ru = [], 0.0
+    for q in tq:
+        res = svc.query(VectorQuery(vector=q, k=10,
+                                    filter=lambda d: d["tenant"] == f"tenant-{t}"))
+        filt_ids.append(res.ids)
+        filt_ru += res.ru
+    r_filt = rec.recall_at_k(np.stack(filt_ids), gt, 10)
+
+    print(f"sharded index : recall@10={r_sharded:.3f} RU/query={sharded_ru/16:.1f}")
+    print(f"filtered big  : recall@10={r_filt:.3f} RU/query={filt_ru/16:.1f}")
+    print("Table 3's effect: sharded ≥ filtered recall at lower cost:",
+          r_sharded >= r_filt - 0.02)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""End-to-end driver: serve a small LM with batched requests, with the
+vector index as the semantic-retrieval layer (the paper's workload).
+
+Pipeline per request batch:
+  1. encode the query tokens with the LM backbone (mean-pooled hidden
+     state = embedding — the stub for a production embedding model);
+  2. DiskANN search over the indexed corpus (quantized space + re-rank);
+  3. fetch the hit documents;
+  4. decode a short continuation with the serving engine.
+
+    PYTHONPATH=src python examples/serve_semantic.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import GraphConfig
+from repro.models import model as M
+from repro.serve import ServeEngine, VectorCollectionService, VectorQuery
+
+
+def embed(params, cfg, tokens: np.ndarray) -> np.ndarray:
+    """Mean-pooled final hidden state as the document/query embedding."""
+    logits, _, _ = M.forward_train(params, cfg, {"tokens": jnp.asarray(tokens)},
+                                   remat="none")
+    # reuse the pre-head representation via the lm head pseudo-inverse-free
+    # trick: just pool logits' top-k energy — cheap and deterministic for the
+    # demo; a production system would return the hidden state directly.
+    x = jax.nn.softmax(logits, axis=-1) @ params["embed"]
+    return np.asarray(x.mean(axis=1), np.float32)
+
+
+def main():
+    cfg = get_smoke_config("smollm-135m")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.RandomState(0)
+
+    # corpus: 600 synthetic "documents" of 16 tokens
+    corpus = rng.randint(0, cfg.vocab_size, (600, 16)).astype(np.int32)
+    t0 = time.time()
+    doc_vecs = np.concatenate(
+        [embed(params, cfg, corpus[i : i + 64]) for i in range(0, 600, 64)]
+    )
+    print(f"embedded 600 docs in {time.time()-t0:.1f}s (dim={doc_vecs.shape[1]})")
+
+    svc = VectorCollectionService(
+        dim=doc_vecs.shape[1],
+        graph=GraphConfig(capacity=1024, R=12, M=8, L_build=32, L_search=48,
+                          bootstrap_sample=128, refine_sample=10**9),
+        max_vectors_per_partition=1000,
+    )
+    docs = [{"id": i, "tokens": corpus[i].tolist()} for i in range(600)]
+    svc.upsert(docs, doc_vecs)
+    print("corpus indexed")
+
+    # batched requests: retrieve + generate
+    engine = ServeEngine(cfg, params, batch_slots=4, s_max=64)
+    queries = corpus[rng.choice(600, 4)]  # look up near-duplicates
+    qv = embed(params, cfg, queries)
+    for rid in range(4):
+        res = svc.query(VectorQuery(vector=qv[rid], k=3))
+        hits = [int(i) for i in res.ids if i >= 0]
+        print(f"request {rid}: retrieved docs {hits} (RU={res.ru:.1f})")
+        # generation conditioned on the query tokens (retrieval-augmented
+        # prompting would concatenate the hit docs; kept short for CPU)
+        engine.submit(rid, queries[rid], max_new_tokens=8)
+    out = engine.run()
+    for rid, toks in sorted(out.items()):
+        print(f"request {rid}: generated {toks}")
+    print("served", len(out), "requests end-to-end")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,152 @@
+"""In-place delete (Algorithm 6) + lightweight background consolidation.
+
+The paper (§2.1 "In-place Deletion", Fig 13) shows that rewiring the deleted
+node's critical connections keeps recall stable over long update streams,
+whereas simply dropping the vector ("Drop Policy") degrades — dramatically so
+under distribution shift. We implement both so the runbook benchmarks can
+reproduce the comparison.
+
+Alg 6, faithfully:
+  * B = in-neighbors of p found within p's two-hop out-neighborhood;
+  * every b ∈ B: drop p, splice in the c closest of N_out(p) to b, prune if
+    over the degree bound;
+  * every b ∈ N_out(p): connect b to its c closest siblings in N_out(p);
+  * a background sweep (``consolidate_chunk``) erases remaining dangling
+    edges to dead nodes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import prune as prmod
+
+INF = jnp.float32(jnp.inf)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("R", "R_slack", "alpha", "c_replace", "metric"),
+    donate_argnames=("neighbors",),
+)
+def inplace_delete(
+    neighbors: jax.Array,  # (N, R_slack)
+    live: jax.Array,  # (N,) bool — p should already be marked dead
+    vectors: jax.Array,  # (N, D) decoded-PQ or full coordinates for pruning
+    p: jax.Array,  # () int32 node being deleted
+    *,
+    R: int,
+    R_slack: int,
+    alpha: float,
+    c_replace: int = 3,
+    metric: str = "l2",
+) -> jax.Array:
+    """Rewire the graph around deleted node p. Returns new neighbors."""
+    nout_p = neighbors[p]  # (R_slack,)
+    safe_out = jnp.maximum(nout_p, 0)
+    valid_out = (nout_p >= 0) & live[safe_out]
+
+    # --- two-hop out-neighborhood ---------------------------------------
+    twohop = neighbors[safe_out].reshape(-1)  # (R_slack^2,)
+    twohop = jnp.where(jnp.repeat(valid_out, R_slack), twohop, -1)
+    hood = jnp.concatenate([nout_p, twohop])  # candidate in-neighbors
+    hood = jnp.where(hood == p, -1, hood)
+
+    # --- loop over the hood: b with p ∈ N_out(b) get rewired -------------
+    def fix_b(nb, b):
+        row = nb[jnp.maximum(b, 0)]
+        has_p = jnp.any(row == p) & (b >= 0) & live[jnp.maximum(b, 0)]
+
+        # remove p, compact left
+        no_p = jnp.where(row == p, -1, row)
+        order = jnp.argsort(jnp.where(no_p >= 0, 0, 1), stable=True)
+        no_p = no_p[order]
+
+        # c closest live members of N_out(p) to b, excluding b itself
+        b_vec = vectors[jnp.maximum(b, 0)]
+        cand_vecs = vectors[safe_out]
+        if metric == "l2":
+            dd = jnp.sum((cand_vecs - b_vec[None, :]) ** 2, -1)
+        else:
+            dd = -cand_vecs @ b_vec
+        dd = jnp.where(valid_out & (nout_p != b), dd, INF)
+        closest = jnp.where(
+            jnp.isfinite(jnp.sort(dd)[:c_replace]),
+            nout_p[jnp.argsort(dd)[:c_replace]],
+            -1,
+        )
+
+        merged = jnp.concatenate([no_p, closest])  # (R_slack + c,)
+        # dedup + prune to R if above bound, else compact to R_slack
+        pruned = prmod.prune_with_vectors(
+            b_vec,
+            merged,
+            vectors[jnp.maximum(merged, 0)],
+            alpha=alpha,
+            R=R,
+            metric=metric,
+            self_id=b,
+        )
+        deg_merged = (merged >= 0).sum() - jnp.sum(
+            (merged[:, None] == merged[None, :])
+            & (merged[:, None] >= 0)
+            & jnp.tril(jnp.ones((merged.shape[0],) * 2, bool), k=-1)
+        )
+        use_prune = deg_merged > R_slack
+        # non-prune path: first R_slack unique entries of merged
+        eq = (merged[:, None] == merged[None, :]) & (merged[None, :] >= 0)
+        dup = jnp.any(eq & jnp.tril(jnp.ones_like(eq), k=-1).astype(bool), axis=1)
+        uniq = jnp.where(dup, -1, merged)
+        order2 = jnp.argsort(jnp.where(uniq >= 0, 0, 1), stable=True)
+        compacted = uniq[order2][:R_slack]
+        padded_prune = jnp.concatenate([pruned, jnp.full((R_slack - R,), -1, jnp.int32)])
+        new_row = jnp.where(use_prune, padded_prune, compacted)
+
+        out = jnp.where(has_p, new_row, row)
+        return nb.at[jnp.maximum(b, 0)].set(out), None
+
+    neighbors, _ = jax.lax.scan(fix_b, neighbors, hood)
+
+    # --- second loop of Alg 6: stitch N_out(p) among themselves ----------
+    def stitch(nb, b):
+        ok = (b >= 0) & live[jnp.maximum(b, 0)]
+        b_vec = vectors[jnp.maximum(b, 0)]
+        cand_vecs = vectors[safe_out]
+        if metric == "l2":
+            dd = jnp.sum((cand_vecs - b_vec[None, :]) ** 2, -1)
+        else:
+            dd = -cand_vecs @ b_vec
+        dd = jnp.where(valid_out & (nout_p != b), dd, INF)
+        closest = jnp.argsort(dd)[:1]  # c=1 sibling link keeps degree churn low
+        sib = jnp.where(jnp.isfinite(dd[closest]), nout_p[closest], -1)[0]
+
+        row = nb[jnp.maximum(b, 0)]
+        deg = (row >= 0).sum()
+        already = jnp.any(row == sib) | (sib < 0)
+        appended = jnp.where(jnp.arange(row.shape[0]) == deg, sib, row)
+        can = ok & ~already & (deg < row.shape[0])
+        return nb.at[jnp.maximum(b, 0)].set(jnp.where(can, appended, row)), None
+
+    neighbors, _ = jax.lax.scan(stitch, neighbors, nout_p)
+
+    # clear p's own list
+    neighbors = neighbors.at[p].set(jnp.full((R_slack,), -1, jnp.int32))
+    return neighbors
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",), donate_argnames=("neighbors",))
+def consolidate_chunk(
+    neighbors: jax.Array, live: jax.Array, start_row: jax.Array, chunk: int = 1024
+) -> jax.Array:
+    """Background sweep (§2.1): erase edges to dead nodes in rows
+    [start_row, start_row + chunk), compacting left."""
+    rows = start_row + jnp.arange(chunk)
+    rows = jnp.minimum(rows, neighbors.shape[0] - 1)
+    block = neighbors[rows]  # (chunk, R_slack)
+    dead = ~live[jnp.maximum(block, 0)] | (block < 0)
+    cleaned = jnp.where(dead, -1, block)
+    order = jnp.argsort(jnp.where(cleaned >= 0, 0, 1), axis=1, stable=True)
+    compacted = jnp.take_along_axis(cleaned, order, axis=1)
+    return neighbors.at[rows].set(compacted)

@@ -1,0 +1,93 @@
+"""Flat, Q-Flat, and full-precision re-ranking (§3 "System Design").
+
+The paper's query planner escalates through three physical plans:
+  * brute force over documents        (< ~1000 docs),
+  * Flat  — full vectors as contiguous index terms,
+  * Q-Flat — exhaustive scan in quantized space + re-rank (< ~5000 matches,
+    or small tenants in multi-tenant collections),
+  * DiskANN graph search              (everything else).
+
+``rerank`` is shared by Q-Flat and the DiskANN path: fetch full-precision
+vectors for k' = multiplier·k candidates from the document store and re-order
+by exact distance (Fig 5).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import pq as pqmod
+
+INF = jnp.float32(jnp.inf)
+
+# §3.5 defaults
+QUANTIZED_LIST_MULTIPLIER = 5.0  # k' = multiplier * k candidates to re-rank
+BRUTE_FORCE_MAX_DOCS = 1000
+QFLAT_MAX_MATCHES = 5000
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric"))
+def brute_force(
+    queries: jax.Array, vectors: jax.Array, live: jax.Array, *, k: int, metric: str = "l2"
+) -> tuple[jax.Array, jax.Array]:
+    """Exact top-k by scanning the document store. (B, k) ids, dists."""
+    d = pqmod.pairwise_distance(queries, vectors, metric)
+    d = jnp.where(live[None, :], d, INF)
+    neg, idx = jax.lax.top_k(-d, k)
+    return idx.astype(jnp.int32), -neg
+
+
+@functools.partial(jax.jit, static_argnames=("kprime", "metric"))
+def qflat_scan(
+    luts: jax.Array,  # (B, V, M, K)
+    codes: jax.Array,  # (N, M)
+    versions: jax.Array,  # (N,)
+    live: jax.Array,
+    *,
+    kprime: int,
+    metric: str = "l2",
+    filter_mask: jax.Array | None = None,  # (B, N) bool predicate matches
+) -> tuple[jax.Array, jax.Array]:
+    """Exhaustive scan in quantized space: top-k' candidates per query."""
+
+    def one(lut, fm):
+        d = pqmod.adc_distance_versioned(lut, codes, versions)  # (N,)
+        d = jnp.where(live, d, INF)
+        if fm is not None:
+            d = jnp.where(fm, d, INF)
+        neg, idx = jax.lax.top_k(-d, kprime)
+        return idx.astype(jnp.int32), -neg
+
+    if filter_mask is None:
+        return jax.vmap(lambda lut: one(lut, None))(luts)
+    return jax.vmap(one)(luts, filter_mask)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric"))
+def rerank(
+    queries: jax.Array,  # (B, D)
+    cand_ids: jax.Array,  # (B, C) — -1 padded
+    vectors: jax.Array,  # (N, D) document store (full precision)
+    *,
+    k: int,
+    metric: str = "l2",
+) -> tuple[jax.Array, jax.Array]:
+    """Fig 5: exact re-ranking of quantized-space candidates.
+
+    Fetches C full-precision vectors per query (the rare document-store
+    access) and returns exact top-k. Duplicate / -1 candidates excluded.
+    """
+
+    def one(q, ids):
+        safe = jnp.maximum(ids, 0)
+        vecs = vectors[safe]  # (C, D)
+        d = pqmod.exact_distance(q[None, :], vecs, metric)
+        eq = (ids[:, None] == ids[None, :]) & (ids[None, :] >= 0)
+        dup = jnp.any(eq & jnp.tril(jnp.ones_like(eq), k=-1).astype(bool), axis=1)
+        d = jnp.where((ids >= 0) & ~dup, d, INF)
+        neg, pos = jax.lax.top_k(-d, k)
+        return jnp.where(jnp.isfinite(-neg), ids[pos], -1), -neg
+
+    return jax.vmap(one)(queries, cand_ids)

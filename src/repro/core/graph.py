@@ -1,0 +1,131 @@
+"""Graph index state — the DiskANN index terms, decoupled from the algorithms.
+
+The paper's central systems idea (§3.1) is that the DiskANN *algorithms* do
+not own the index layout: quantized-vector terms and adjacency-list terms are
+read/written through Provider traits, and the database owns persistence.
+
+In this JAX port the "materialized cache" of those terms is a pytree of dense
+arrays (`GraphState`) — the form the jitted kernels consume — while
+``repro.store`` holds the durable Bw-Tree-analogue encoding of the very same
+terms. ``providers.py`` bridges the two.
+
+Conventions:
+  * capacity-bounded arrays: N_max rows, a `count` watermark, `live` mask;
+  * `neighbors` is (N_max, R_slack) int32, padded with -1;
+  * `codes` is (N_max, M) uint8 PQ codes; `versions` tags the PQ schema used
+    for each row (re-quantization support, §3.4);
+  * `medoid` is the graph entry point (start node s in Algorithms 1-6).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import pq as pqmod
+
+
+class GraphConfig(NamedTuple):
+    """Static index configuration (paper defaults from §4 "Configuration")."""
+
+    capacity: int
+    R: int = 32  # degree bound
+    slack: float = 1.3  # degree slack before a secondary prune (§4)
+    L_build: int = 100  # search list size during construction
+    L_search: int = 100  # default search list size for queries
+    alpha: float = 1.2  # RobustPrune distance threshold
+    M: int = 16  # PQ subspaces (navigation compression)
+    metric: str = "l2"
+    max_visits: int = 4096  # visited-set capacity for search stats
+    batch_size: int = 100  # mini-batch insert size (§2.1: "about 100")
+    bootstrap_sample: int = 1000  # §3.4: first PQ schema after this many docs
+    refine_sample: int = 25000  # §3.4: re-quantization trigger
+    c_replace: int = 3  # Alg 6 replace parameter
+
+    @property
+    def R_slack(self) -> int:
+        return int(self.R * self.slack)
+
+
+class GraphState(NamedTuple):
+    """The mutable index terms as dense arrays (the jit-side cache)."""
+
+    neighbors: jax.Array  # (N_max, R_slack) int32, -1 padded
+    codes: jax.Array  # (N_max, M) uint8
+    versions: jax.Array  # (N_max,) uint8 PQ schema version per row
+    live: jax.Array  # (N_max,) bool
+    count: jax.Array  # () int32 high-watermark of allocated slots
+    medoid: jax.Array  # () int32 start node
+
+    @property
+    def capacity(self) -> int:
+        return self.neighbors.shape[0]
+
+
+def empty_state(cfg: GraphConfig) -> GraphState:
+    return GraphState(
+        neighbors=jnp.full((cfg.capacity, cfg.R_slack), -1, dtype=jnp.int32),
+        codes=jnp.zeros((cfg.capacity, cfg.M), dtype=jnp.uint8),
+        versions=jnp.zeros((cfg.capacity,), dtype=jnp.uint8),
+        live=jnp.zeros((cfg.capacity,), dtype=bool),
+        count=jnp.int32(0),
+        medoid=jnp.int32(0),
+    )
+
+
+def degree(state: GraphState) -> jax.Array:
+    """Out-degree per node."""
+    return (state.neighbors >= 0).sum(axis=-1)
+
+
+def num_live(state: GraphState) -> jax.Array:
+    return state.live.sum()
+
+
+def compute_medoid(vectors: jax.Array, live: jax.Array) -> jax.Array:
+    """Pick the live vector closest to the live centroid as the start node."""
+    w = live.astype(vectors.dtype)
+    centroid = (vectors * w[:, None]).sum(0) / jnp.maximum(w.sum(), 1.0)
+    d = jnp.sum((vectors - centroid) ** 2, -1)
+    d = jnp.where(live, d, jnp.inf)
+    return jnp.argmin(d).astype(jnp.int32)
+
+
+# -- packed visited bitmap ---------------------------------------------------
+# Alg 1 needs the set V of visited nodes for dedup. On TPU we keep it as a
+# packed uint32 bitmap (capacity/32 words) — O(N/8) bytes, constant-time
+# test/set via shifts, vmappable across a query batch.
+
+
+def bitmap_words(capacity: int) -> int:
+    return (capacity + 31) // 32
+
+
+def bitmap_init(capacity: int) -> jax.Array:
+    return jnp.zeros((bitmap_words(capacity),), dtype=jnp.uint32)
+
+
+def bitmap_test(bm: jax.Array, ids: jax.Array) -> jax.Array:
+    """ids (K,) int32 -> (K,) bool. ids < 0 report True (treated as seen)."""
+    safe = jnp.maximum(ids, 0)
+    word = bm[safe >> 5]
+    bit = (word >> (safe.astype(jnp.uint32) & 31)) & 1
+    return jnp.where(ids < 0, True, bit.astype(bool))
+
+
+def bitmap_set(bm: jax.Array, ids: jax.Array) -> jax.Array:
+    """OR bits for ids (K,) into bm; ids < 0 are ignored. Duplicate-safe.
+
+    K is small on the hot path (one adjacency list, ≤ R_slack), so a
+    sequential fori OR is cheap and avoids the scatter-OR-with-duplicates
+    hazard (two ids mapping to the same word must not lose bits).
+    """
+    safe = jnp.maximum(ids, 0)
+    words = safe >> 5
+    masks = jnp.where(ids < 0, jnp.uint32(0), jnp.uint32(1) << (safe.astype(jnp.uint32) & 31))
+
+    def body(i, acc):
+        return acc.at[words[i]].set(acc[words[i]] | masks[i])
+
+    return jax.lax.fori_loop(0, ids.shape[0], body, bm)

@@ -1,0 +1,582 @@
+"""DiskANNIndex — the host-side orchestrator tying the pieces together.
+
+Mirrors the paper's control flow for one replica:
+
+  * documents arrive → full vector to the document store, quantized term
+    generated inline (once a schema exists), graph updates applied in
+    mini-batches *outside* the transactional path (§3.4);
+  * first PQ schema trained after ``bootstrap_sample`` docs; re-quantization
+    at ``refine_sample`` docs re-encodes terms in place, old/new schemas
+    coexisting via versioned codes (§3.4);
+  * queries run in quantized space over the graph, then re-rank
+    ``quantizedVectorListMultiplier × k`` candidates with full-precision
+    vectors from the document store (§3.5, Fig 5);
+  * the query planner routes by selectivity: brute force for tiny
+    collections, Q-Flat below ~5000 predicate matches, graph search with
+    post-filtering or filter-aware β-search otherwise (§3.5);
+  * deletes are in-place (Alg 6) with a background consolidation sweep.
+
+All distance-heavy work is jitted; this class only sequences it and applies
+term writes through the Provider interface — the same split as
+IndexManager / DiskANN-library / Bw-Tree in Fig 15.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import delete as dmod
+from . import flat as fmod
+from . import graph as g
+from . import insert as imod
+from . import paginate as pgmod
+from . import pq as pqmod
+from . import prune as prmod
+from . import search as smod
+from .providers import ArrayProviderSet, Context, ProviderSet
+
+
+@dataclasses.dataclass
+class QueryStats:
+    hops: float = 0.0
+    cmps: float = 0.0  # quantized distance comparisons (≈3500 @ L=100 in paper)
+    full_reads: float = 0.0  # full-precision vectors touched (≈50 in paper)
+    plan: str = "graph"
+
+
+class DiskANNIndex:
+    def __init__(
+        self,
+        cfg: g.GraphConfig,
+        dim: int,
+        providers: Optional[ProviderSet] = None,
+        seed: int = 0,
+        context: Context = Context(),
+    ):
+        assert dim % cfg.M == 0, f"dim {dim} must divide into M={cfg.M} subspaces"
+        self.cfg = cfg
+        self.dim = dim
+        self.ctx = context
+        self.pv: ProviderSet = providers or ArrayProviderSet(
+            cfg.capacity, cfg.R_slack, cfg.M, dim
+        )
+        self.key = jax.random.PRNGKey(seed)
+        self.schemas: list[pqmod.PQSchema] = []  # ≤2 coexisting (§3.4)
+        self.count = 0  # slot high-watermark
+        self.medoid = 0
+        self.doc_to_slot: dict[int, int] = {}
+        self.slot_to_doc = np.full((cfg.capacity,), -1, np.int64)
+        self._graph_built = False
+        self._pending: list[int] = []  # slots awaiting first graph build
+        self._requant_cursor = 0  # background re-encode progress
+        self._consolidate_cursor = 0
+
+    # ------------------------------------------------------------------
+    # helpers
+    # ------------------------------------------------------------------
+    @property
+    def num_live(self) -> int:
+        return int(self.pv.live.sum())
+
+    def _codebook_stack(self) -> jax.Array:
+        return jnp.stack([s.codebooks for s in self.schemas], axis=0)
+
+    def _luts(self, queries: np.ndarray) -> jax.Array:
+        schemas = tuple(self.schemas)
+        q = jnp.asarray(queries, jnp.float32)
+        return jax.vmap(lambda qq: pqmod.multi_lut(schemas, qq, self.cfg.metric))(q)
+
+    def _next_key(self) -> jax.Array:
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    # ------------------------------------------------------------------
+    # ingestion
+    # ------------------------------------------------------------------
+    def insert(self, doc_ids: Sequence[int], vectors: np.ndarray) -> QueryStats:
+        """Insert documents. Returns aggregate ingest stats."""
+        vectors = np.asarray(vectors, np.float32)
+        assert vectors.shape[1] == self.dim
+        stats = QueryStats(plan="insert")
+        for start in range(0, len(doc_ids), self.cfg.batch_size):
+            ids = list(doc_ids[start : start + self.cfg.batch_size])
+            vecs = vectors[start : start + self.cfg.batch_size]
+            self._insert_batch(ids, vecs, stats)
+        return stats
+
+    def _alloc(self, n: int) -> np.ndarray:
+        if self.count + n > self.cfg.capacity:
+            raise RuntimeError(
+                f"partition full ({self.count}+{n} > {self.cfg.capacity}); "
+                "split required (repro.partition handles this)"
+            )
+        slots = np.arange(self.count, self.count + n, dtype=np.int64)
+        self.count += n
+        return slots
+
+    def _insert_batch(self, ids: list[int], vecs: np.ndarray, stats: QueryStats):
+        replace_mask = np.array([d in self.doc_to_slot for d in ids])
+        if replace_mask.any():
+            # Replace = overwrite vector + re-insert (§2.1 "Inserts and
+            # Replaces"); old edges cleaned lazily by later prunes.
+            keep = ~replace_mask
+            for d, v in zip(np.asarray(ids)[replace_mask], vecs[replace_mask]):
+                self._replace_one(int(d), v)
+            ids = list(np.asarray(ids)[keep])
+            vecs = vecs[keep]
+            if len(ids) == 0:
+                return
+
+        slots = self._alloc(len(ids))
+        for d, s in zip(ids, slots):
+            self.doc_to_slot[int(d)] = int(s)
+            self.slot_to_doc[s] = int(d)
+        self.pv.set_full(self.ctx, slots, vecs)
+
+        if not self.schemas:
+            self._pending.extend(int(s) for s in slots)
+            self.pv.set_live(self.ctx, slots, True)
+            if self.count >= min(self.cfg.bootstrap_sample, self.cfg.capacity):
+                self._bootstrap_schema()
+            return
+
+        # quantized term inline with the document write (§3.4)
+        codes = np.asarray(pqmod.encode(self.schemas[-1], jnp.asarray(vecs)))
+        ver = np.full((len(slots),), len(self.schemas) - 1, np.uint8)
+        self.pv.set_quant(self.ctx, slots, codes, ver)
+        self.pv.set_live(self.ctx, slots, True)
+
+        if self._graph_built:
+            self._graph_insert(slots, vecs, stats)
+        else:
+            self._pending.extend(int(s) for s in slots)
+
+        if (
+            len(self.schemas) == 1
+            and self.count >= min(self.cfg.refine_sample, self.cfg.capacity)
+        ):
+            self.requantize()
+
+    def _bootstrap_schema(self):
+        """Train the first PQ schema from the earliest docs (§3.4), backfill
+        quantized terms, then build the graph over the backlog."""
+        sample = self.pv.vectors[: min(self.count, self.cfg.bootstrap_sample)]
+        self.schemas = [
+            pqmod.train_pq(self._next_key(), jnp.asarray(sample), self.cfg.M)
+        ]
+        backlog = np.asarray(self._pending, np.int64)
+        codes = np.asarray(
+            pqmod.encode(self.schemas[0], jnp.asarray(self.pv.vectors[backlog]))
+        )
+        self.pv.set_quant(self.ctx, backlog, codes, np.zeros(len(backlog), np.uint8))
+        self._pending = []
+        self._build_initial_graph(backlog)
+
+    def _build_initial_graph(self, slots: np.ndarray):
+        self.medoid = int(
+            g.compute_medoid(jnp.asarray(self.pv.vectors), jnp.asarray(self.pv.live))
+        )
+        self._graph_built = True
+        order = np.random.RandomState(0).permutation(slots)
+        st = QueryStats()
+        # Ramp-up: batch-inserting into a near-empty graph funnels every new
+        # node's single candidate (the medoid) into one overflowing adjacency
+        # list — the losers end up with zero in-degree, permanently
+        # unreachable. Grow batches 4 → 8 → … so early nodes wire densely.
+        i, bs = 0, 4
+        while i < len(order):
+            batch = order[i : i + bs]
+            i += bs
+            bs = min(bs * 2, self.cfg.batch_size)
+            batch = batch[batch != self.medoid]
+            if len(batch) == 0:
+                continue
+            self._graph_insert(batch, self.pv.vectors[batch], st)
+        self.repair_orphans()
+
+    def repair_orphans(self) -> int:
+        """Re-insert live nodes with zero in-degree (background maintenance;
+        guarantees every vector is reachable from the medoid's side)."""
+        nb = self.pv.neighbors[: self.count]
+        indeg = np.bincount(nb[nb >= 0], minlength=self.cfg.capacity)
+        live = self.pv.live
+        orphans = np.nonzero((indeg[: self.count] == 0) & live[: self.count])[0]
+        orphans = orphans[orphans != self.medoid]
+        if len(orphans) == 0:
+            return 0
+        st = QueryStats()
+        for i in range(0, len(orphans), self.cfg.batch_size):
+            batch = orphans[i : i + self.cfg.batch_size]
+            self._graph_insert(batch, self.pv.vectors[batch], st)
+        return len(orphans)
+
+    def _graph_insert(self, slots: np.ndarray, vecs: np.ndarray, stats: QueryStats):
+        """Mini-batch graph update (Alg 5): jitted search+prune, then one
+        consolidated reverse-edge append per touched node."""
+        cfg = self.cfg
+        neighbors, codes, versions, live, _ = self.pv.materialize(self.ctx)
+        cand_ids, _cand_d, istats = imod.insert_candidates(
+            neighbors, codes, versions, live, self._codebook_stack(),
+            jnp.asarray(vecs), jnp.int32(self.medoid),
+            L_build=cfg.L_build, metric=cfg.metric,
+        )
+        nbrs = np.asarray(
+            imod.prune_batch(
+                codes, versions, self._codebook_stack(), jnp.asarray(vecs),
+                cand_ids, R=cfg.R, alpha=cfg.alpha, metric=cfg.metric,
+            )
+        )  # (B, R)
+        stats.hops += float(np.asarray(istats.hops).sum())
+        stats.cmps += float(np.asarray(istats.cmps).sum())
+
+        rows = np.full((len(slots), cfg.R_slack), -1, np.int32)
+        rows[:, : cfg.R] = nbrs
+        self.pv.set_neighbors(self.ctx, slots, rows)
+
+        # group reverse edges by target: ONE consolidated append per node —
+        # the Bw-Tree "no duplicate patch for a key" contract (§2.1)
+        rev: dict[int, list[int]] = {}
+        for i, s in enumerate(slots):
+            for b in nbrs[i]:
+                if b >= 0 and b != s:
+                    rev.setdefault(int(b), []).append(int(s))
+        overflow: list[int] = []
+        for b, ps in rev.items():
+            row = self.pv.neighbors[b]
+            existing = set(int(x) for x in row[row >= 0])
+            ps = [p for p in dict.fromkeys(ps) if p not in existing]
+            if not ps:
+                continue
+            fitted = self.pv.append_neighbors(self.ctx, b, np.asarray(ps, np.int32))
+            if fitted < len(ps):
+                row = self.pv.neighbors[b].copy()
+                merged = list(dict.fromkeys(list(row[row >= 0]) + ps))
+                self._prune_node(b, np.asarray(merged, np.int64))
+                overflow.append(b)
+
+    def _decoded(self, ids: np.ndarray) -> np.ndarray:
+        """Quantized-space coordinates for pruning (§3.2)."""
+        codes, versions = self.pv.get_quant(self.ctx, ids)
+        out = np.zeros((len(ids), self.dim), np.float32)
+        for v, schema in enumerate(self.schemas):
+            m = versions == v
+            if m.any():
+                out[m] = np.asarray(pqmod.decode(schema, jnp.asarray(codes[m])))
+        return out
+
+    def _prune_node(self, node: int, cand: np.ndarray):
+        cfg = self.cfg
+        cap = cfg.R_slack + cfg.batch_size
+        cand = cand[:cap]
+        ids = np.full((cap,), -1, np.int64)
+        ids[: len(cand)] = cand
+        live_mask = self.pv.live[np.maximum(ids, 0)] & (ids >= 0)
+        ids = np.where(live_mask, ids, -1)
+        pruned = np.asarray(
+            prmod.prune_with_vectors(
+                jnp.asarray(self._decoded(np.asarray([node]))[0]),
+                jnp.asarray(ids.astype(np.int32)),
+                jnp.asarray(self._decoded(np.maximum(ids, 0))),
+                alpha=cfg.alpha,
+                R=cfg.R,
+                metric=cfg.metric,
+                self_id=node,
+            )
+        )
+        row = np.full((cfg.R_slack,), -1, np.int32)
+        row[: cfg.R] = pruned
+        self.pv.set_neighbors(self.ctx, np.asarray([node]), row[None, :])
+
+    def _replace_one(self, doc_id: int, vec: np.ndarray):
+        slot = self.doc_to_slot[doc_id]
+        self.pv.set_full(self.ctx, np.asarray([slot]), vec[None, :])
+        if self.schemas:
+            codes = np.asarray(pqmod.encode(self.schemas[-1], jnp.asarray(vec[None, :])))
+            self.pv.set_quant(
+                self.ctx, np.asarray([slot]), codes,
+                np.asarray([len(self.schemas) - 1], np.uint8),
+            )
+        if self._graph_built:
+            st = QueryStats()
+            self._graph_insert(np.asarray([slot]), vec[None, :], st)
+
+    # ------------------------------------------------------------------
+    # re-quantization (§3.4)
+    # ------------------------------------------------------------------
+    def requantize(self):
+        """Refine the PQ schema from a larger sample; terms re-encode in
+        place (background chunks via requantize_step); the graph is NOT
+        rebuilt — old/new codes coexist through versioned LUTs."""
+        n = min(self.count, self.cfg.refine_sample)
+        sample = self.pv.vectors[:n]
+        refined = pqmod.refine_pq(self._next_key(), self.schemas[-1], jnp.asarray(sample))
+        self.schemas = [self.schemas[-1], refined][-2:]
+        self._requant_cursor = 0
+
+    def requantize_step(self, chunk: int = 4096) -> bool:
+        """Re-encode one chunk with the newest schema. True when done."""
+        if len(self.schemas) < 2:
+            return True
+        lo = self._requant_cursor
+        hi = min(lo + chunk, self.count)
+        if lo >= hi:
+            # transition complete: retire the old schema
+            self.schemas = [self.schemas[-1]]
+            self.pv.versions[: self.count] = 0
+            self.pv._dirty()
+            return True
+        ids = np.arange(lo, hi)
+        codes = np.asarray(
+            pqmod.encode(self.schemas[-1], jnp.asarray(self.pv.vectors[ids]))
+        )
+        self.pv.set_quant(self.ctx, ids, codes, np.full(len(ids), 1, np.uint8))
+        self._requant_cursor = hi
+        return False
+
+    def requantize_all(self):
+        while not self.requantize_step():
+            pass
+
+    # ------------------------------------------------------------------
+    # deletion (Alg 6) + background consolidation
+    # ------------------------------------------------------------------
+    def delete(self, doc_ids: Sequence[int], policy: str = "inplace"):
+        cfg = self.cfg
+        for d in doc_ids:
+            slot = self.doc_to_slot.pop(int(d), None)
+            if slot is None:
+                continue
+            self.slot_to_doc[slot] = -1
+            self.pv.set_live(self.ctx, np.asarray([slot]), False)
+            if policy == "inplace" and self._graph_built:
+                neighbors, _, _, live, _ = self.pv.materialize(self.ctx)
+                decoded = jnp.asarray(self._decoded(np.arange(self.count)))
+                pad = jnp.zeros((cfg.capacity - self.count, self.dim), jnp.float32)
+                new_nb = dmod.inplace_delete(
+                    neighbors, live, jnp.concatenate([decoded, pad]),
+                    jnp.int32(slot),
+                    R=cfg.R, R_slack=cfg.R_slack, alpha=cfg.alpha,
+                    c_replace=cfg.c_replace, metric=cfg.metric,
+                )
+                self.pv.neighbors[:] = np.asarray(new_nb)
+                self.pv._dirty()
+            if slot == self.medoid and self.num_live:
+                self.medoid = int(
+                    g.compute_medoid(
+                        jnp.asarray(self.pv.vectors), jnp.asarray(self.pv.live)
+                    )
+                )
+
+    def recompute_medoid(self):
+        """Start-point maintenance (FreshDiskANN practice): after heavy
+        churn the medoid should track the live distribution."""
+        if self.num_live:
+            self.medoid = int(
+                g.compute_medoid(jnp.asarray(self.pv.vectors), jnp.asarray(self.pv.live))
+            )
+
+    def consolidate(self, chunk: int = 1024):
+        """One background-sweep step: clear dangling edges to dead nodes."""
+        neighbors, _, _, live, _ = self.pv.materialize(self.ctx)
+        new_nb = dmod.consolidate_chunk(
+            neighbors, live, jnp.int32(self._consolidate_cursor), chunk
+        )
+        self.pv.neighbors[:] = np.asarray(new_nb)
+        self.pv._dirty()
+        self._consolidate_cursor = (self._consolidate_cursor + chunk) % max(self.count, 1)
+
+    # ------------------------------------------------------------------
+    # queries (§3.5)
+    # ------------------------------------------------------------------
+    def search(
+        self,
+        queries: np.ndarray,
+        k: int,
+        L: Optional[int] = None,
+        rerank_multiplier: float = fmod.QUANTIZED_LIST_MULTIPLIER,
+    ) -> tuple[np.ndarray, np.ndarray, QueryStats]:
+        """Top-k ANN: graph search in quantized space + full-precision
+        re-rank. Returns (doc_ids (B,k), dists (B,k), stats)."""
+        queries = np.asarray(queries, np.float32)
+        L = L or self.cfg.L_search
+        stats = QueryStats()
+        kprime = max(k, int(round(rerank_multiplier * k)))
+
+        if not self._graph_built:
+            stats.plan = "brute_force"
+            neighbors, codes, versions, live, vectors = self.pv.materialize(self.ctx)
+            ids, dists = fmod.brute_force(
+                jnp.asarray(queries), vectors, live, k=k, metric=self.cfg.metric
+            )
+            stats.full_reads = self.num_live
+            return self._to_doc_ids(np.asarray(ids)), np.asarray(dists), stats
+
+        neighbors, codes, versions, live, vectors = self.pv.materialize(self.ctx)
+        luts = self._luts(queries)
+        L_eff = max(L, kprime)
+        res = smod.batch_greedy_search(
+            neighbors, codes, versions, live, luts, jnp.int32(self.medoid), L=L_eff
+        )
+        ids, dists = fmod.rerank(
+            jnp.asarray(queries), res.beam_ids[:, :kprime], vectors,
+            k=k, metric=self.cfg.metric,
+        )
+        stats.hops = float(np.asarray(res.n_hops).mean())
+        stats.cmps = float(np.asarray(res.n_cmps).mean())
+        stats.full_reads = float(kprime)
+        return self._to_doc_ids(np.asarray(ids)), np.asarray(dists), stats
+
+    def _to_doc_ids(self, slots: np.ndarray) -> np.ndarray:
+        out = np.where(slots >= 0, self.slot_to_doc[np.maximum(slots, 0)], -1)
+        return out
+
+    # -- filtered queries (§3.5, Fig 9) ---------------------------------
+    def filtered_search(
+        self,
+        queries: np.ndarray,
+        k: int,
+        doc_filter: np.ndarray,  # bool over doc slots (the PES bitmap role)
+        L: Optional[int] = None,
+        mode: str = "auto",  # auto | post | beta | qflat | brute
+        beta: float = 0.3,
+        rerank_multiplier: float = fmod.QUANTIZED_LIST_MULTIPLIER,
+    ) -> tuple[np.ndarray, np.ndarray, QueryStats]:
+        """Query-planner routing by selectivity, then post-filter or
+        β-biased graph search."""
+        queries = np.asarray(queries, np.float32)
+        L = L or self.cfg.L_search
+        matches = int((doc_filter & self.pv.live).sum())
+        stats = QueryStats()
+        if mode == "auto":
+            if self.num_live <= fmod.BRUTE_FORCE_MAX_DOCS or not self._graph_built:
+                mode = "brute"
+            elif matches < fmod.QFLAT_MAX_MATCHES:
+                mode = "qflat"
+            else:
+                mode = "beta"
+        stats.plan = mode
+        kprime = max(k, int(round(rerank_multiplier * k)))
+        neighbors, codes, versions, live, vectors = self.pv.materialize(self.ctx)
+        fmask = jnp.asarray(doc_filter & self.pv.live)
+
+        if mode == "brute":
+            ids, dists = fmod.brute_force(
+                jnp.asarray(queries), vectors, fmask, k=k, metric=self.cfg.metric
+            )
+            stats.full_reads = matches
+            return self._to_doc_ids(np.asarray(ids)), np.asarray(dists), stats
+
+        if mode == "qflat":
+            luts = self._luts(queries)
+            cand, _ = fmod.qflat_scan(
+                luts, codes, versions, fmask, kprime=kprime, metric=self.cfg.metric
+            )
+            ids, dists = fmod.rerank(
+                jnp.asarray(queries), cand, vectors, k=k, metric=self.cfg.metric
+            )
+            stats.cmps = matches
+            stats.full_reads = kprime
+            return self._to_doc_ids(np.asarray(ids)), np.asarray(dists), stats
+
+        luts = self._luts(queries)
+        if mode == "post":
+            res = smod.batch_greedy_search(
+                neighbors, codes, versions, live, luts, jnp.int32(self.medoid), L=max(L, kprime)
+            )
+            beam = np.asarray(res.beam_ids)
+            passes = doc_filter[np.maximum(beam, 0)] & (beam >= 0)
+            beam = np.where(passes, beam, -1)
+        else:  # beta (Alg 7)
+            fbits = self._pack_bits(np.asarray(doc_filter))
+            B = len(queries)
+            fb = jnp.asarray(np.broadcast_to(fbits, (B,) + fbits.shape))
+            res = smod.batch_greedy_search(
+                neighbors, codes, versions, live, luts, jnp.int32(self.medoid),
+                L=max(L, kprime), filter_bits=fb, beta=beta,
+            )
+            beam = np.asarray(res.beam_ids)
+            passes = doc_filter[np.maximum(beam, 0)] & (beam >= 0)
+            beam = np.where(passes, beam, -1)
+        ids, dists = fmod.rerank(
+            jnp.asarray(queries), jnp.asarray(beam[:, : max(L, kprime)]), vectors,
+            k=k, metric=self.cfg.metric,
+        )
+        stats.hops = float(np.asarray(res.n_hops).mean())
+        stats.cmps = float(np.asarray(res.n_cmps).mean())
+        stats.full_reads = float(kprime)
+        return self._to_doc_ids(np.asarray(ids)), np.asarray(dists), stats
+
+    @staticmethod
+    def _pack_bits(mask: np.ndarray) -> np.ndarray:
+        words = np.zeros(((len(mask) + 31) // 32,), np.uint32)
+        idx = np.nonzero(mask)[0]
+        np.bitwise_or.at(words, idx >> 5, np.uint32(1) << (idx & 31).astype(np.uint32))
+        return words
+
+    # -- pagination (§3.2 / §3.5 Continuations) ---------------------------
+    def start_pagination(self, query: np.ndarray, L: Optional[int] = None,
+                         backup_cap: int = 512) -> pgmod.PageState:
+        L = L or self.cfg.L_search
+        _, codes, versions, _, _ = self.pv.materialize(self.ctx)
+        lut = self._luts(query[None, :])[0]
+        return pgmod.start_pagination(
+            self.cfg.capacity, L, backup_cap, codes, versions, lut,
+            jnp.int32(self.medoid),
+        )
+
+    def next_page(
+        self, query: np.ndarray, state: pgmod.PageState, k: int,
+        rerank: bool = True,
+    ) -> tuple[np.ndarray, np.ndarray, pgmod.PageState]:
+        neighbors, codes, versions, live, vectors = self.pv.materialize(self.ctx)
+        lut = self._luts(query[None, :])[0]
+        ids, dists, state = pgmod.next_page(
+            neighbors, codes, versions, live, lut, state, k=k
+        )
+        if rerank:
+            rids, rd = fmod.rerank(
+                jnp.asarray(query[None, :]), ids[None, :], vectors,
+                k=k, metric=self.cfg.metric,
+            )
+            return self._to_doc_ids(np.asarray(rids))[0], np.asarray(rd)[0], state
+        return self._to_doc_ids(np.asarray(ids[None, :]))[0], np.asarray(dists), state
+
+    # ------------------------------------------------------------------
+    # persistence (fault tolerance)
+    # ------------------------------------------------------------------
+    def snapshot(self) -> dict:
+        return dict(
+            neighbors=self.pv.neighbors.copy(),
+            codes=self.pv.codes.copy(),
+            versions=self.pv.versions.copy(),
+            live=self.pv.live.copy(),
+            vectors=self.pv.vectors.copy(),
+            slot_to_doc=self.slot_to_doc.copy(),
+            count=self.count,
+            medoid=self.medoid,
+            schemas=[np.asarray(s.codebooks) for s in self.schemas],
+            graph_built=self._graph_built,
+        )
+
+    def restore(self, snap: dict):
+        self.pv.neighbors[:] = snap["neighbors"]
+        self.pv.codes[:] = snap["codes"]
+        self.pv.versions[:] = snap["versions"]
+        self.pv.live[:] = snap["live"]
+        self.pv.vectors[:] = snap["vectors"]
+        self.pv._dirty()
+        self.slot_to_doc[:] = snap["slot_to_doc"]
+        self.count = snap["count"]
+        self.medoid = snap["medoid"]
+        self.schemas = [
+            pqmod.PQSchema(codebooks=jnp.asarray(cb), version=jnp.int32(i))
+            for i, cb in enumerate(snap["schemas"])
+        ]
+        self._graph_built = snap["graph_built"]
+        self.doc_to_slot = {
+            int(d): int(s) for s, d in enumerate(self.slot_to_doc) if d >= 0
+        }

@@ -1,0 +1,176 @@
+"""Paginated search (§3.2, Fig 3).
+
+Hybrid queries may need more candidates than one greedy pass returns, and
+Cosmos DB preempts backend requests after 5 s, resuming from a continuation
+token. Paginated search supports both: two priority queues — ``best`` (size
+L, as in standard greedy search) and ``backup`` (unbounded in the paper;
+capacity-bounded here, with the drop count surfaced rather than silently
+truncated) — plus a visited set that persists across paginations so pages
+never repeat results.
+
+Each page: refill ``best`` from ``backup``, expand until every entry of
+``best`` is expanded, pop the top-k as the page's results. The whole
+``PageState`` is an explicit pytree — it *is* the continuation token (the
+paper returns partial results to the client; we can serialize this state or
+hold it server-side, both demonstrated in `serve/vector_service.py`).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import graph as g
+from . import pq as pqmod
+from .search import _mask_dup_within
+
+INF = jnp.float32(jnp.inf)
+
+
+class PageState(NamedTuple):
+    best_ids: jax.Array  # (L,)
+    best_dists: jax.Array
+    best_expanded: jax.Array
+    backup_ids: jax.Array  # (Bcap,) ascending
+    backup_dists: jax.Array
+    backup_expanded: jax.Array
+    bitmap: jax.Array  # visited set, persists across pages
+    hops: jax.Array
+    cmps: jax.Array
+    dropped: jax.Array  # candidates lost to the backup capacity bound
+
+
+def start_pagination(
+    capacity: int, L: int, backup_cap: int, codes: jax.Array, versions: jax.Array,
+    luts: jax.Array, start: jax.Array,
+) -> PageState:
+    start_d = pqmod.adc_distance_versioned(luts, codes[start][None], versions[start][None])[0]
+    return PageState(
+        best_ids=jnp.full((L,), -1, jnp.int32).at[0].set(start),
+        best_dists=jnp.full((L,), INF).at[0].set(start_d),
+        best_expanded=jnp.ones((L,), bool).at[0].set(False),
+        backup_ids=jnp.full((backup_cap,), -1, jnp.int32),
+        backup_dists=jnp.full((backup_cap,), INF),
+        backup_expanded=jnp.ones((backup_cap,), bool),
+        bitmap=g.bitmap_set(g.bitmap_init(capacity), jnp.array([start], jnp.int32)),
+        hops=jnp.int32(0),
+        cmps=jnp.int32(1),
+        dropped=jnp.int32(0),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("k", "max_hops", "has_filter"))
+def next_page(
+    neighbors: jax.Array,
+    codes: jax.Array,
+    versions: jax.Array,
+    live: jax.Array,
+    luts: jax.Array,
+    state: PageState,
+    *,
+    k: int,
+    max_hops: int = 512,
+    has_filter: bool = False,
+    filter_bits: Optional[jax.Array] = None,
+    beta: jax.Array | float = 1.0,
+) -> tuple[jax.Array, jax.Array, PageState]:
+    """Produce the next k results. Returns (ids (k,), dists (k,), state)."""
+    L = state.best_ids.shape[0]
+    Bcap = state.backup_ids.shape[0]
+    beta = jnp.float32(beta)
+    if not has_filter:
+        filter_bits = None
+
+    def refill(st: PageState) -> PageState:
+        pool_ids = jnp.concatenate([st.best_ids, st.backup_ids])
+        pool_d = jnp.concatenate([st.best_dists, st.backup_dists])
+        pool_e = jnp.concatenate([st.best_expanded, st.backup_expanded])
+        order = jnp.argsort(pool_d)
+        pool_ids, pool_d, pool_e = pool_ids[order], pool_d[order], pool_e[order]
+        return st._replace(
+            best_ids=pool_ids[:L],
+            best_dists=pool_d[:L],
+            best_expanded=jnp.where(pool_ids[:L] >= 0, pool_e[:L], True),
+            backup_ids=pool_ids[L : L + Bcap],
+            backup_dists=pool_d[L : L + Bcap],
+            backup_expanded=pool_e[L : L + Bcap],
+        )
+
+    st = refill(state)
+    hop_limit = st.hops + max_hops
+
+    def cond(st: PageState):
+        frontier = (~st.best_expanded) & (st.best_ids >= 0)
+        return jnp.any(frontier) & (st.hops < hop_limit)
+
+    def body(st: PageState) -> PageState:
+        masked = jnp.where(st.best_expanded | (st.best_ids < 0), INF, st.best_dists)
+        p_idx = jnp.argmin(masked)
+        p = st.best_ids[p_idx]
+        best_expanded = st.best_expanded.at[p_idx].set(True)
+
+        nbrs = neighbors[jnp.maximum(p, 0)]
+        safe = jnp.maximum(nbrs, 0)
+        valid = (nbrs >= 0) & live[safe] & ~g.bitmap_test(st.bitmap, nbrs)
+        valid &= ~_mask_dup_within(nbrs)
+        bitmap = g.bitmap_set(st.bitmap, jnp.where(valid, nbrs, -1))
+
+        d = pqmod.adc_distance_versioned(luts, codes[safe], versions[safe])
+        if filter_bits is not None:
+            passes = g.bitmap_test(filter_bits, safe) & (nbrs >= 0)
+            d = jnp.where(passes, beta * d, d)
+        d = jnp.where(valid, d, INF)
+
+        R_sl = nbrs.shape[0]
+        all_ids = jnp.concatenate([st.best_ids, jnp.where(valid, nbrs, -1)])
+        all_d = jnp.concatenate([st.best_dists, d])
+        all_e = jnp.concatenate([best_expanded, jnp.zeros((R_sl,), bool)])
+        order = jnp.argsort(all_d)
+        all_ids, all_d, all_e = all_ids[order], all_d[order], all_e[order]
+
+        # overflow beyond L → backup ("vertices popped out of best")
+        ov_ids, ov_d, ov_e = all_ids[L:], all_d[L:], all_e[L:]
+        bk_ids = jnp.concatenate([st.backup_ids, ov_ids])
+        bk_d = jnp.concatenate([st.backup_dists, ov_d])
+        bk_e = jnp.concatenate([st.backup_expanded, ov_e])
+        bo = jnp.argsort(bk_d)
+        dropped = st.dropped + (jnp.isfinite(bk_d[bo][Bcap:])).sum()
+
+        return st._replace(
+            best_ids=all_ids[:L],
+            best_dists=all_d[:L],
+            best_expanded=jnp.where(all_ids[:L] >= 0, all_e[:L], True),
+            backup_ids=bk_ids[bo][:Bcap],
+            backup_dists=bk_d[bo][:Bcap],
+            backup_expanded=bk_e[bo][:Bcap],
+            bitmap=bitmap,
+            hops=st.hops + 1,
+            cmps=st.cmps + valid.sum(),
+            dropped=dropped,
+        )
+
+    st = jax.lax.while_loop(cond, body, st)
+
+    # pop top-k from best as the page results
+    order = jnp.argsort(st.best_dists)
+    ids_sorted = st.best_ids[order]
+    d_sorted = st.best_dists[order]
+    res_ids, res_d = ids_sorted[:k], d_sorted[:k]
+    res_ids = jnp.where(jnp.isfinite(res_d), res_ids, -1)
+
+    remaining_ids = ids_sorted.at[:k].set(-1)
+    remaining_d = d_sorted.at[:k].set(INF)
+    remaining_e = st.best_expanded[order].at[:k].set(True)
+    st = st._replace(
+        best_ids=remaining_ids, best_dists=remaining_d, best_expanded=remaining_e
+    )
+    return res_ids, res_d, st
+
+
+def exhausted(state: PageState) -> jax.Array:
+    """True when no further results can be produced."""
+    return ~(
+        jnp.any(jnp.isfinite(state.best_dists)) | jnp.any(jnp.isfinite(state.backup_dists))
+    )

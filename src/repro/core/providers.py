@@ -1,0 +1,128 @@
+"""Provider traits — the paper's stateless-DiskANN interface (§3.1).
+
+The 2025 rewrite's core idea: the index layout is not visible to the
+algorithms. The library reads/writes *index terms* — quantized vectors,
+full-precision vectors, neighbor lists — through Provider implementations
+owned by the database, addressed by an execution ``Context`` that selects
+the target replica/collection (one DiskANN instance serves many indices).
+
+Here the jitted algorithms consume dense arrays (the Bw-Tree page cache's
+role), and Providers define where those arrays come from and where updates
+are persisted:
+
+  * ``ArrayProviderSet`` — memory-backed terms ("the new library is at least
+    as fast as the previous monolithic DiskANN" — §3.1): numpy canonical
+    state + a cached jnp materialization for the query path.
+  * ``StoreProviderSet`` (repro.store.provider) — terms encoded in the
+    Bw-Tree analogue, with RU metering; write-through into the array cache.
+
+The async MaybeDone future of the Rust rewrite has no TPU analogue (device
+steps are synchronous); its *purpose* — overlapping slow term fetches —
+reappears as batched gathers, and the latency asymmetry it hides is captured
+by the RU/latency model in ``repro.store.ru``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Protocol
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Context:
+    """Execution context (§3.1): identifies the logical index a call targets
+    and carries telemetry identity. The database (not the library) interprets
+    it; our store uses it to select term-key prefixes and meter RUs."""
+
+    collection: str = "default"
+    replica: int = 0
+    shard_key: Optional[int] = None  # sharded-DiskANN logical index (§3.3)
+    activity_id: str = ""
+    lsn: int = 0
+
+
+class ProviderSet(Protocol):
+    """The union of the paper's Neighbor/QuantVector/FullVector providers."""
+
+    def get_neighbors(self, ctx: Context, ids: np.ndarray) -> np.ndarray: ...
+    def set_neighbors(self, ctx: Context, ids: np.ndarray, rows: np.ndarray) -> None: ...
+    def append_neighbors(self, ctx: Context, node: int, new_ids: np.ndarray) -> None: ...
+    def get_quant(self, ctx: Context, ids: np.ndarray) -> tuple[np.ndarray, np.ndarray]: ...
+    def set_quant(self, ctx: Context, ids: np.ndarray, codes: np.ndarray, versions: np.ndarray) -> None: ...
+    def get_full(self, ctx: Context, ids: np.ndarray) -> np.ndarray: ...
+    def set_full(self, ctx: Context, ids: np.ndarray, vecs: np.ndarray) -> None: ...
+    def set_live(self, ctx: Context, ids: np.ndarray, value: bool) -> None: ...
+    def materialize(self, ctx: Context): ...
+
+
+class ArrayProviderSet:
+    """Memory-backed providers: numpy canonical state, jnp cache for jit."""
+
+    def __init__(self, capacity: int, R_slack: int, M: int, dim: int):
+        self.neighbors = np.full((capacity, R_slack), -1, np.int32)
+        self.codes = np.zeros((capacity, M), np.uint8)
+        self.versions = np.zeros((capacity,), np.uint8)
+        self.live = np.zeros((capacity,), bool)
+        self.vectors = np.zeros((capacity, dim), np.float32)
+        self._cache = None  # jnp materialization
+        self.write_count = 0
+
+    # -- invalidation ------------------------------------------------------
+    def _dirty(self):
+        self._cache = None
+        self.write_count += 1
+
+    def materialize(self, ctx: Context = Context()):
+        """jnp views of (neighbors, codes, versions, live, vectors) for the
+        jitted query/update kernels; rebuilt only after writes."""
+        if self._cache is None:
+            self._cache = (
+                jnp.asarray(self.neighbors),
+                jnp.asarray(self.codes),
+                jnp.asarray(self.versions),
+                jnp.asarray(self.live),
+                jnp.asarray(self.vectors),
+            )
+        return self._cache
+
+    # -- neighbor terms ------------------------------------------------------
+    def get_neighbors(self, ctx: Context, ids):
+        return self.neighbors[np.asarray(ids)]
+
+    def set_neighbors(self, ctx: Context, ids, rows):
+        self.neighbors[np.asarray(ids)] = rows
+        self._dirty()
+
+    def append_neighbors(self, ctx: Context, node: int, new_ids):
+        """Blind incremental append (the Bw-Tree forward-term fast path)."""
+        row = self.neighbors[node]
+        deg = int((row >= 0).sum())
+        n = min(len(new_ids), row.shape[0] - deg)
+        row[deg : deg + n] = new_ids[:n]
+        self._dirty()
+        return n  # how many fit; caller prunes on overflow
+
+    # -- quantized terms ---------------------------------------------------
+    def get_quant(self, ctx: Context, ids):
+        ids = np.asarray(ids)
+        return self.codes[ids], self.versions[ids]
+
+    def set_quant(self, ctx: Context, ids, codes, versions):
+        ids = np.asarray(ids)
+        self.codes[ids] = codes
+        self.versions[ids] = versions
+        self._dirty()
+
+    # -- full-precision vectors (document store role) ----------------------
+    def get_full(self, ctx: Context, ids):
+        return self.vectors[np.asarray(ids)]
+
+    def set_full(self, ctx: Context, ids, vecs):
+        self.vectors[np.asarray(ids)] = vecs
+        self._dirty()
+
+    def set_live(self, ctx: Context, ids, value: bool):
+        self.live[np.asarray(ids)] = value
+        self._dirty()

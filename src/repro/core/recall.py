@@ -1,0 +1,31 @@
+"""Ground truth + Recall k@k (§2.1: "how many of the k results returned by a
+search are the true top-k nearest neighbors")."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import pq as pqmod
+
+
+def ground_truth(
+    queries: np.ndarray, vectors: np.ndarray, live: np.ndarray, k: int, metric: str = "l2"
+) -> np.ndarray:
+    """Exact top-k ids per query, (B, k)."""
+    q = jnp.asarray(queries)
+    v = jnp.asarray(vectors)
+    d = pqmod.pairwise_distance(q, v, metric)
+    d = jnp.where(jnp.asarray(live)[None, :], d, jnp.inf)
+    _, idx = jax.lax.top_k(-d, k)
+    return np.asarray(idx)
+
+
+def recall_at_k(result_ids: np.ndarray, gt_ids: np.ndarray, k: int) -> float:
+    """Average |result ∩ gt| / k over the query batch."""
+    res = np.asarray(result_ids)[:, :k]
+    gt = np.asarray(gt_ids)[:, :k]
+    hits = 0
+    for r, t in zip(res, gt):
+        hits += len(set(int(x) for x in r if x >= 0) & set(int(x) for x in t))
+    return hits / (len(res) * k)

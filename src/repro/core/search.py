@@ -1,0 +1,221 @@
+"""GreedySearch (Algorithm 1) — batched, fixed-shape, TPU-native.
+
+The paper's search walks the graph one hop at a time with async SSD reads.
+On TPU we keep the L-entry search list ("beam") as a sorted array, expand the
+best unexpanded node each `lax.while_loop` step, and do all neighbor
+processing (visited-set dedup, ADC distances, beam merge) as vectorized ops.
+Queries are batched with `vmap`; all lanes advance in lockstep until every
+lane's beam is fully expanded.
+
+Search runs in *quantized space* (§3.2): distances come from per-query ADC
+LUTs against the uint8 PQ codes; full-precision vectors are only touched by
+the re-rank stage (``repro.core.flat.rerank``), preserving the paper's ≈70×
+access-frequency asymmetry.
+
+Filter-aware (β) search — Algorithm 7 — is folded in: when a packed filter
+bitmap is supplied, distances of filter-passing nodes are scaled by β < 1 so
+the frontier drifts toward the filtered region (§3.5, Fig 9).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import graph as g
+from . import pq as pqmod
+
+INF = jnp.float32(jnp.inf)
+
+
+class SearchResult(NamedTuple):
+    beam_ids: jax.Array  # (L,) int32, ascending distance, -1 padded
+    beam_dists: jax.Array  # (L,) f32 (quantized-space, β-scaled if filtered)
+    visited_ids: jax.Array  # (V,) int32 expanded nodes in order, -1 padded
+    visited_dists: jax.Array  # (V,) f32
+    n_hops: jax.Array  # () int32 — number of expansions
+    n_cmps: jax.Array  # () int32 — number of quantized distance comps
+
+
+class _LoopState(NamedTuple):
+    ids: jax.Array
+    dists: jax.Array
+    expanded: jax.Array
+    bitmap: jax.Array
+    visited_ids: jax.Array
+    visited_dists: jax.Array
+    hops: jax.Array
+    cmps: jax.Array
+
+
+def _mask_dup_within(ids: jax.Array) -> jax.Array:
+    """True where ids[i] duplicates an earlier entry (ids small: R_slack)."""
+    eq = ids[:, None] == ids[None, :]
+    earlier = jnp.tril(jnp.ones_like(eq), k=-1)
+    return jnp.any(eq & earlier.astype(bool), axis=1)
+
+
+def _expand_once(
+    st: _LoopState,
+    neighbors: jax.Array,
+    codes: jax.Array,
+    versions: jax.Array,
+    live: jax.Array,
+    luts: jax.Array,
+    filter_bits: Optional[jax.Array],
+    beta: jax.Array,
+) -> _LoopState:
+    """Expand the best unexpanded beam entry; merge its neighbors in."""
+    L = st.ids.shape[0]
+    masked = jnp.where(st.expanded | (st.ids < 0), INF, st.dists)
+    p_idx = jnp.argmin(masked)
+    p = st.ids[p_idx]
+    expanded = st.expanded.at[p_idx].set(True)
+
+    visited_ids = st.visited_ids.at[st.hops % st.visited_ids.shape[0]].set(p)
+    visited_dists = st.visited_dists.at[st.hops % st.visited_ids.shape[0]].set(st.dists[p_idx])
+
+    nbrs = neighbors[jnp.maximum(p, 0)]  # (R_slack,)
+    safe = jnp.maximum(nbrs, 0)
+    valid = (nbrs >= 0) & live[safe] & ~g.bitmap_test(st.bitmap, nbrs)
+    valid &= ~_mask_dup_within(nbrs)
+    bitmap = g.bitmap_set(st.bitmap, jnp.where(valid, nbrs, -1))
+
+    cand_codes = codes[safe]  # (R_slack, M)
+    cand_ver = versions[safe]
+    d = pqmod.adc_distance_versioned(luts, cand_codes, cand_ver)  # (R_slack,)
+    if filter_bits is not None:
+        passes = g.bitmap_test(filter_bits, jnp.where(nbrs >= 0, nbrs, 0)) & (nbrs >= 0)
+        d = jnp.where(passes, beta * d, d)
+    d = jnp.where(valid, d, INF)
+
+    all_ids = jnp.concatenate([st.ids, jnp.where(valid, nbrs, -1)])
+    all_d = jnp.concatenate([st.dists, d])
+    all_e = jnp.concatenate([expanded, jnp.zeros_like(valid)])
+    order = jnp.argsort(all_d)[:L]
+    return _LoopState(
+        ids=all_ids[order],
+        dists=all_d[order],
+        expanded=all_e[order],
+        bitmap=bitmap,
+        visited_ids=visited_ids,
+        visited_dists=visited_dists,
+        hops=st.hops + 1,
+        cmps=st.cmps + valid.sum(),
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("L", "max_hops", "visited_cap", "has_filter")
+)
+def greedy_search(
+    neighbors: jax.Array,
+    codes: jax.Array,
+    versions: jax.Array,
+    live: jax.Array,
+    luts: jax.Array,  # (Vschemas, M, K) from pq.multi_lut
+    start: jax.Array,  # () int32
+    *,
+    L: int,
+    max_hops: int = 0,
+    visited_cap: int = 0,
+    has_filter: bool = False,
+    filter_bits: Optional[jax.Array] = None,
+    beta: jax.Array | float = 1.0,
+) -> SearchResult:
+    """Single-query GreedySearch. vmap over (luts, filter_bits) for batches."""
+    if max_hops == 0:
+        max_hops = 2 * L + 16
+    if visited_cap == 0:
+        visited_cap = max_hops
+    if not has_filter:
+        filter_bits = None
+    beta = jnp.float32(beta)
+    cap = neighbors.shape[0]
+
+    start_d = pqmod.adc_distance_versioned(
+        luts, codes[start][None], versions[start][None]
+    )[0]
+    ids0 = jnp.full((L,), -1, jnp.int32).at[0].set(start)
+    dists0 = jnp.full((L,), INF).at[0].set(start_d)
+    expanded0 = jnp.ones((L,), bool).at[0].set(False)
+    bm0 = g.bitmap_set(g.bitmap_init(cap), jnp.array([start], jnp.int32))
+
+    st0 = _LoopState(
+        ids=ids0,
+        dists=dists0,
+        expanded=expanded0,
+        bitmap=bm0,
+        visited_ids=jnp.full((visited_cap,), -1, jnp.int32),
+        visited_dists=jnp.full((visited_cap,), INF),
+        hops=jnp.int32(0),
+        cmps=jnp.int32(1),
+    )
+
+    def cond(st: _LoopState):
+        frontier = (~st.expanded) & (st.ids >= 0)
+        return jnp.any(frontier) & (st.hops < max_hops)
+
+    def body(st: _LoopState):
+        return _expand_once(
+            st, neighbors, codes, versions, live, luts, filter_bits, beta
+        )
+
+    st = jax.lax.while_loop(cond, body, st0)
+    return SearchResult(
+        beam_ids=st.ids,
+        beam_dists=st.dists,
+        visited_ids=st.visited_ids,
+        visited_dists=st.visited_dists,
+        n_hops=st.hops,
+        n_cmps=st.cmps,
+    )
+
+
+def batch_greedy_search(
+    neighbors: jax.Array,
+    codes: jax.Array,
+    versions: jax.Array,
+    live: jax.Array,
+    luts: jax.Array,  # (B, Vschemas, M, K)
+    start: jax.Array,
+    *,
+    L: int,
+    max_hops: int = 0,
+    visited_cap: int = 0,
+    filter_bits: Optional[jax.Array] = None,  # (B, Nw) or None
+    beta: float = 1.0,
+) -> SearchResult:
+    """vmapped GreedySearch over a query batch (lockstep beam expansion)."""
+    fn = functools.partial(
+        greedy_search,
+        neighbors,
+        codes,
+        versions,
+        live,
+        L=L,
+        max_hops=max_hops,
+        visited_cap=visited_cap,
+        has_filter=filter_bits is not None,
+        beta=beta,
+    )
+    if filter_bits is not None:
+        return jax.vmap(lambda lut, fb: fn(lut, start, filter_bits=fb))(luts, filter_bits)
+    return jax.vmap(lambda lut: fn(lut, start))(luts)
+
+
+def search_candidates(res: SearchResult) -> tuple[jax.Array, jax.Array]:
+    """Union of expanded set and final beam — the prune candidate pool used
+    by Insert (Algorithm 2 consumes the visited set V)."""
+    ids = jnp.concatenate([res.visited_ids, res.beam_ids], axis=-1)
+    dists = jnp.concatenate([res.visited_dists, res.beam_dists], axis=-1)
+    # dedup: keep first occurrence (visited log wins; beam dupes masked)
+    def dedup_one(i, d):
+        dup = _mask_dup_within(i)
+        return jnp.where(dup, -1, i), jnp.where(dup, INF, d)
+
+    if ids.ndim == 1:
+        return dedup_one(ids, dists)
+    return jax.vmap(dedup_one)(ids, dists)

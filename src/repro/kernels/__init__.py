@@ -1,0 +1,25 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+The paper's profile (Fig 11) is dominated by quantized-vector access and
+distance computation; the query path touches ~3500 quantized vectors and
+~50 full-precision vectors per search (§3.2). The kernels here tile exactly
+those loops for the TPU memory hierarchy:
+
+    pq_adc       ADC distance scan: LUT in VMEM, PQ codes streamed in tiles,
+                 table lookups expressed as one-hot × LUT contractions (MXU)
+    pq_encode    PQ encoding: per-subspace nearest-centroid (MXU matmuls)
+    topk_select  blockwise partial top-k for candidate selection
+    flat_l2      tiled full-precision distance matrix (re-rank / brute force)
+
+Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper with an interpret-mode fallback for CPU), ref.py (pure-jnp oracle).
+TPU is the *target*; on this CPU container kernels run under interpret=True
+and are validated against the oracles across shape/dtype sweeps in
+tests/test_kernels.py.
+"""
+from .pq_adc import ops as pq_adc_ops
+from .pq_encode import ops as pq_encode_ops
+from .topk_select import ops as topk_ops
+from .flat_l2 import ops as flat_l2_ops
+
+__all__ = ["pq_adc_ops", "pq_encode_ops", "topk_ops", "flat_l2_ops"]

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for flat_l2 (same math as repro.core.pq.pairwise_distance)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def flat_l2_ref(q: jax.Array, x: jax.Array, *, metric: str = "l2") -> jax.Array:
+    q = q.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    if metric == "l2":
+        d = (
+            jnp.sum(q * q, -1, keepdims=True)
+            - 2.0 * q @ x.T
+            + jnp.sum(x * x, -1)[None, :]
+        )
+        return jnp.maximum(d, 0.0)
+    return -(q @ x.T)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for pq_adc."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def pq_adc_ref(lut: jax.Array, codes: jax.Array) -> jax.Array:
+    """lut (B, M, K) f32, codes (C, M) u8 -> (B, C) f32."""
+    c = codes.astype(jnp.int32)  # (C, M)
+    picked = jnp.take_along_axis(
+        lut[:, None, :, :],  # (B, 1, M, K)
+        c[None, :, :, None],  # (1, C, M, 1)
+        axis=3,
+    )[..., 0]  # (B, C, M)
+    return picked.sum(-1)

@@ -1,0 +1,54 @@
+"""pq_encode — PQ encoding (nearest centroid per subspace) tiled for TPU.
+
+Workload: x (N, D) float32, codebooks (M, K, dsub) → codes (N, M).
+Per subspace m: scores (Nb, K) = ‖x_m‖² − 2·x_m·C_mᵀ + ‖c‖² → argmin.
+
+Grid: (N/Nb, M). Per step the (Nb, dsub) slice of x and the (K, dsub)
+codebook for subspace m sit in VMEM; the −2·x·Cᵀ term is an MXU matmul.
+The ‖x‖² term is constant across K and irrelevant to the argmin, so the
+kernel skips it — scores are shifted but the codes are identical.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _encode_kernel(x_ref, cent_ref, out_ref):
+    """x_ref: (Nb, 1, dsub); cent_ref: (1, K, dsub); out_ref: (Nb, 1) i32."""
+    x = x_ref[:, 0, :]  # (Nb, dsub)
+    cent = cent_ref[0]  # (K, dsub)
+    scores = -2.0 * jnp.dot(x, cent.T) + jnp.sum(cent * cent, -1)[None, :]
+    out_ref[:, 0] = jnp.argmin(scores, axis=-1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def pq_encode_pallas(
+    x: jax.Array,  # (N, D)
+    codebooks: jax.Array,  # (M, K, dsub)
+    *,
+    block_n: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    N, D = x.shape
+    M, K, dsub = codebooks.shape
+    assert D == M * dsub
+    Np = ((N + block_n - 1) // block_n) * block_n
+    xp = jnp.pad(x, ((0, Np - N), (0, 0))) if Np != N else x
+
+    out = pl.pallas_call(
+        _encode_kernel,
+        grid=(Np // block_n, M),
+        in_specs=[
+            # x viewed as (N, M, dsub): block (Nb, 1, dsub) → squeeze in spec
+            pl.BlockSpec((block_n, 1, dsub), lambda n, m: (n, m, 0)),
+            pl.BlockSpec((1, K, dsub), lambda n, m: (m, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, 1), lambda n, m: (n, m)),
+        out_shape=jax.ShapeDtypeStruct((Np, M), jnp.int32),
+        interpret=interpret,
+    )(xp.reshape(Np, M, dsub), codebooks)
+    return out[:N].astype(jnp.uint8)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for pq_encode (same math as repro.core.pq.encode)."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def pq_encode_ref(x: jax.Array, codebooks: jax.Array) -> jax.Array:
+    """x (N, D), codebooks (M, K, dsub) -> (N, M) uint8."""
+    N, D = x.shape
+    M, K, dsub = codebooks.shape
+    sub = x.reshape(N, M, dsub)
+    d = (
+        jnp.sum(sub * sub, -1, keepdims=True)
+        - 2.0 * jnp.einsum("nmd,mkd->nmk", sub, codebooks)
+        + jnp.sum(codebooks * codebooks, -1)[None]
+    )
+    return jnp.argmin(d, axis=-1).astype(jnp.uint8)

@@ -1,0 +1,67 @@
+"""topk_select — blockwise partial top-k (smallest distances first).
+
+Candidate selection after a Q-Flat scan (and the rerank cut) needs the L
+smallest of N distances. A full sort is O(N log N) and serializes badly on
+the VPU; instead each grid block extracts its local top-L by L iterated
+masked argmins over a VMEM-resident tile (L ≪ Nb), and the host-side
+wrapper merges the (num_blocks · L) survivors with one small `lax.top_k`.
+This is the classic two-level TPU k-selection: the candidate set shrinks by
+Nb/L per level while staying rectangular.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _topk_kernel(d_ref, vals_ref, idx_ref, *, L: int, block_n: int):
+    d = d_ref[0, :].astype(jnp.float32)  # (Nb,)
+    base = pl.program_id(1) * block_n
+
+    def body(i, dd):
+        j = jnp.argmin(dd)
+        pl.store(vals_ref, (0, pl.ds(i, 1)), dd[j][None])
+        pl.store(idx_ref, (0, pl.ds(i, 1)), (base + j).astype(jnp.int32)[None])
+        return dd.at[j].set(jnp.inf)
+
+    jax.lax.fori_loop(0, L, body, d)
+
+
+@functools.partial(jax.jit, static_argnames=("L", "block_n", "interpret"))
+def topk_select_pallas(
+    dists: jax.Array,  # (B, N) float32 — smaller is better
+    *,
+    L: int,
+    block_n: int = 1024,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (vals (B, L), idx (B, L)) of the L smallest per row."""
+    B, N = dists.shape
+    Np = ((N + block_n - 1) // block_n) * block_n
+    d = jnp.pad(dists, ((0, 0), (0, Np - N)), constant_values=jnp.inf) if Np != N else dists
+    nblk = Np // block_n
+
+    vals, idx = pl.pallas_call(
+        functools.partial(_topk_kernel, L=L, block_n=block_n),
+        grid=(B, nblk),
+        in_specs=[pl.BlockSpec((1, block_n), lambda b, n: (b, n))],
+        out_specs=[
+            pl.BlockSpec((1, L), lambda b, n: (b, n)),
+            pl.BlockSpec((1, L), lambda b, n: (b, n)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, nblk * L), jnp.float32),
+            jax.ShapeDtypeStruct((B, nblk * L), jnp.int32),
+        ],
+        interpret=interpret,
+    )(d)
+
+    # second level: merge block winners (small)
+    neg, pos = jax.lax.top_k(-vals, L)
+    out_idx = jnp.take_along_axis(idx, pos, axis=1)
+    out_vals = -neg
+    out_idx = jnp.where(jnp.isfinite(out_vals), out_idx, -1)
+    return out_vals, out_idx

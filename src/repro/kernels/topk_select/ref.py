@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for topk_select."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("L",))
+def topk_select_ref(dists: jax.Array, *, L: int) -> tuple[jax.Array, jax.Array]:
+    """(B, N) -> (vals (B, L), idx (B, L)), smallest first."""
+    neg, idx = jax.lax.top_k(-dists, L)
+    vals = -neg
+    idx = jnp.where(jnp.isfinite(vals), idx, -1)
+    return vals, idx.astype(jnp.int32)

@@ -1,0 +1,319 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each supported cell this produces, with ZERO device allocation
+(ShapeDtypeStruct lowering):
+
+  * proof the sharded program compiles on the production meshes
+    (16×16 single-pod and 2×16×16 multi-pod);
+  * `memory_analysis()` — per-device bytes (argument/output/temp), proving
+    the cell fits a 16 GB v5e;
+  * `cost_analysis()` — HLO FLOPs / bytes;
+  * a collective inventory parsed from the post-SPMD HLO text
+    (all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute, with per-op result bytes);
+  * correction variants (L=1, L=2, and chunk-doubling for SSM archs) — XLA's
+    cost analysis counts `while` bodies once (verified), so
+    benchmarks/roofline.py reconstructs true totals from these deltas.
+
+Results go to results/dryrun/<arch>__<shape>__<mesh>.json, incrementally
+(reruns skip completed cells). The paper's own workload (`--arch
+cosmosann`) lowers the shard_map distributed vector search instead.
+"""
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import (ARCH_IDS, SHAPES, cell_supported, get_config,
+                       input_specs)
+from ..configs import cosmosann as cosmos_cfg
+from ..models import steps as steps_mod
+from ..models.config import ModelConfig
+from .mesh import make_production_mesh
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo: str) -> dict:
+    """Per-op-kind {count, result_bytes} from post-SPMD HLO text.
+
+    Shapes in the partitioned module are per-device; result bytes of each
+    collective instruction approximate the data it moves per device (ring
+    factors applied later in roofline.py).
+    """
+    out = {k: {"count": 0, "bytes": 0} for k in COLLECTIVE_OPS}
+    for line in hlo.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        lhs, rhs = s.split("=", 1)
+        rhs = rhs.strip()
+        m = re.match(r"^(\([^)]*\)|\S+)\s+([a-z0-9-]+)", rhs)
+        if not m:
+            continue
+        op = m.group(2)
+        # strip -start/-done variants
+        base = op.replace("-start", "").replace("-done", "")
+        if base in out and not op.endswith("-done"):
+            out[base]["count"] += 1
+            out[base]["bytes"] += _shape_bytes(m.group(1))
+    return out
+
+
+def _mem_dict(ma) -> dict:
+    keys = (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    )
+    return {k: int(getattr(ma, k, 0) or 0) for k in keys}
+
+
+def _compile_one(build_fn, tag: str, want_memory: bool) -> dict:
+    t0 = time.time()
+    fn, arg_shapes = build_fn()
+    lowered = fn.lower(*arg_shapes)
+    compiled = lowered.compile()
+    rec: dict = {"tag": tag, "compile_s": round(time.time() - t0, 2)}
+    ca = compiled.cost_analysis() or {}
+    rec["flops"] = float(ca.get("flops", 0.0))
+    rec["bytes_accessed"] = float(ca.get("bytes accessed", 0.0))
+    rec["collectives"] = parse_collectives(compiled.as_text())
+    if want_memory:
+        rec["memory"] = _mem_dict(compiled.memory_analysis())
+    return rec
+
+
+def _variant_cfg(cfg: ModelConfig, num_layers: int = None, unroll: bool = False,
+                 pattern_kind: str = None) -> ModelConfig:
+    """Cost-extraction variants: unrolled layers / chunk loops so every op
+    is visible to the while-body-once cost analysis."""
+    kw: dict = {}
+    if num_layers is not None:
+        kw["num_layers"] = num_layers
+        if pattern_kind is not None:
+            kw["block_pattern"] = (pattern_kind,) * num_layers
+        elif cfg.block_pattern:
+            kw["block_pattern"] = cfg.block_pattern[:num_layers]
+    if unroll:
+        kw["force_unroll"] = True
+        if cfg.ssm is not None:
+            kw["ssm"] = dataclasses.replace(cfg.ssm, unroll_chunks=True)
+    return dataclasses.replace(cfg, **kw)
+
+
+# production trains always microbatch at global_batch 256: activations and
+# the (B,S,V) loss block shrink ×ACCUM; roofline.py multiplies the reported
+# (single-microbatch) costs back up — microbatches are identical, so this is
+# exact up to the optimizer step being counted once per microbatch (<0.1%).
+TRAIN_ACCUM = 4
+
+# §Perf experiment hook (benchmarks/perf_experiments.py): step-level knobs
+# applied to every compile of a cell. Keys: remat ('full'|'dots'|'none'),
+# accum (int), cfg (fn(ModelConfig) -> ModelConfig).
+OVERRIDES: dict = {}
+
+
+def _build_step(cfg: ModelConfig, shape, mesh, seq_override: int = None):
+    sh = shape
+    if seq_override is not None:
+        sh = dataclasses.replace(shape, seq_len=seq_override)
+    if OVERRIDES.get("cfg"):
+        cfg = OVERRIDES["cfg"](cfg)
+    specs = input_specs(cfg, sh)
+    if sh.kind == "train":
+        bundle = steps_mod.make_train_step(
+            cfg, mesh, specs,
+            accum=OVERRIDES.get("accum", TRAIN_ACCUM),
+            remat=OVERRIDES.get("remat", "full"),
+        )
+        return bundle.fn, (bundle.arg_shapes[0], specs)
+    if sh.kind == "prefill":
+        bundle = steps_mod.make_prefill_step(cfg, mesh, specs, s_max=sh.seq_len)
+        return bundle.fn, (bundle.arg_shapes[0], specs)
+    bundle = steps_mod.make_decode_step(
+        cfg, mesh, batch=sh.global_batch, s_max=sh.seq_len
+    )
+    return bundle.fn, bundle.arg_shapes
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, out_dir: str,
+             force: bool = False) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_name}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    result: dict = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "devices": int(len(mesh.devices.reshape(-1))),
+    }
+
+    if arch == "cosmosann":
+        result.update(_run_cosmos_cell(mesh))
+    else:
+        cfg = get_config(arch)
+        shape = SHAPES[shape_name]
+        ok, reason = cell_supported(cfg, shape)
+        if not ok:
+            result["skipped"] = reason
+            _write(path, result)
+            return result
+        try:
+            # Variant plan (cost extraction — see module docstring):
+            #   uniform non-SSM archs: L1/L2 fully unrolled at the real
+            #       shape → F_true = F(L1) + (L−1)·(F(L2) − F(L1));
+            #   uniform SSM archs (rwkv6): same, but at a reduced sequence
+            #       S_v = 8·chunk (unrolled chunk loops); everything in an
+            #       attention-free arch is linear in S, so roofline.py
+            #       rescales by S/S_v;
+            #   hetero (zamba2): per-block-type deltas — M1/M2 (all-mamba
+            #       pattern, reduced S_v, linear rescale) and A1/A2
+            #       (all-attn pattern at the real S: attention is quadratic
+            #       in S so it must be compiled at full length) →
+            #       F = (ovh + n_mamba·ΔM)·S/S_v + n_attn·ΔA.
+            variants: list = [("full", cfg, None)]  # _build_step applies OVERRIDES
+            seq_scaled = None
+            if cfg.uniform and cfg.ssm is None:
+                variants.append(("L1", _variant_cfg(cfg, 1, unroll=True), None))
+                variants.append(("L2", _variant_cfg(cfg, 2, unroll=True), None))
+            elif cfg.uniform:  # rwkv6-style pure SSM
+                if shape.kind in ("train", "prefill"):
+                    seq_scaled = min(shape.seq_len, 8 * cfg.ssm.chunk)
+                variants.append(("L1", _variant_cfg(cfg, 1, unroll=True), seq_scaled))
+                variants.append(("L2", _variant_cfg(cfg, 2, unroll=True), seq_scaled))
+            else:  # zamba2 hybrid
+                if shape.kind in ("train", "prefill"):
+                    seq_scaled = min(shape.seq_len, 8 * cfg.ssm.chunk)
+                m1 = _variant_cfg(cfg, 1, unroll=True, pattern_kind="mamba2")
+                m2 = _variant_cfg(cfg, 2, unroll=True, pattern_kind="mamba2")
+                a1 = _variant_cfg(cfg, 1, unroll=True, pattern_kind="attn")
+                a2 = _variant_cfg(cfg, 2, unroll=True, pattern_kind="attn")
+                variants += [("M1", m1, seq_scaled), ("M2", m2, seq_scaled),
+                             ("A1", a1, None), ("A2", a2, None)]
+            result["seq_scaled"] = seq_scaled
+            result["accum"] = TRAIN_ACCUM if shape.kind == "train" else 1
+            result["records"] = []
+            for tag, vcfg, seq in variants:
+                rec = _compile_one(
+                    lambda vcfg=vcfg, seq=seq: _build_step(vcfg, shape, mesh, seq),
+                    tag, want_memory=(tag == "full"),
+                )
+                result["records"].append(rec)
+                print(f"  [{arch}|{shape_name}|{mesh_name}|{tag}] "
+                      f"flops={rec['flops']:.3e} compile={rec['compile_s']}s",
+                      flush=True)
+            result["ok"] = True
+            result["model_params"] = cfg.param_count()
+            result["active_params"] = cfg.active_param_count()
+        except Exception as e:  # noqa: BLE001 — cell failures are data
+            result["ok"] = False
+            result["error"] = f"{type(e).__name__}: {e}"
+            result["traceback"] = traceback.format_exc()[-4000:]
+            print(f"  [{arch}|{shape_name}|{mesh_name}] FAILED: {e}", flush=True)
+    _write(path, result)
+    return result
+
+
+def _run_cosmos_cell(mesh) -> dict:
+    from ..partition.fanout import distributed_search_fn
+
+    cfg = cosmos_cfg.config()
+    n_dev = int(len(mesh.devices.reshape(-1)))
+    specs = cosmos_cfg.shard_specs(cfg, n_dev)
+    shard_axes = tuple(mesh.axis_names)
+    fn = distributed_search_fn(
+        mesh, L=cfg.L_search, k=cfg.k, metric=cfg.metric, shard_axes=shard_axes,
+        max_hops=2 * cfg.L_search,
+    )
+    args = (
+        specs["neighbors"], specs["codes"], specs["versions"], specs["live"],
+        specs["vectors"], specs["doc_ids"], specs["medoid"],
+        specs["codebooks"], specs["queries"],
+    )
+    rec = _compile_one(lambda: (fn, args), "full", want_memory=True)
+    return {"ok": True, "records": [rec], "workload": dataclasses.asdict(cfg)}
+
+
+def _write(path: str, result: dict):
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(result, f, indent=1)
+    os.replace(tmp, path)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all",
+                    help=f"arch id, 'all', or comma list; known: {ARCH_IDS + ['cosmosann']}")
+    ap.add_argument("--shape", default="all", help="train_4k|prefill_32k|decode_32k|long_500k|all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+
+    archs = (ARCH_IDS + ["cosmosann"]) if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    summary = []
+    for arch in archs:
+        arch_shapes = ["n/a"] if arch == "cosmosann" else shapes
+        for shp in arch_shapes:
+            for mesh_name in meshes:
+                print(f"=== {arch} × {shp} × {mesh_name} ===", flush=True)
+                r = run_cell(arch, shp if arch != "cosmosann" else "query",
+                             mesh_name, args.out, force=args.force)
+                status = ("SKIP: " + r["skipped"]) if r.get("skipped") else (
+                    "OK" if r.get("ok") else "FAIL")
+                summary.append((arch, shp, mesh_name, status))
+    print("\n=== DRY-RUN SUMMARY ===")
+    bad = 0
+    for arch, shp, mesh_name, status in summary:
+        print(f"{arch:24s} {shp:12s} {mesh_name:6s} {status}")
+        bad += status == "FAIL"
+    print(f"{len(summary)} cells, {bad} failures")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

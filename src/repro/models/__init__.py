@@ -1,0 +1,5 @@
+"""repro.models — the assigned architecture pool as composable JAX models."""
+from .config import MLAConfig, ModelConfig, MoEConfig, SSMConfig
+from . import model, sharding, steps
+
+__all__ = ["ModelConfig", "MoEConfig", "MLAConfig", "SSMConfig", "model", "sharding", "steps"]

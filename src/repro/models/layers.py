@@ -1,0 +1,118 @@
+"""Shared building blocks: norms, RoPE, MLPs, initializers.
+
+Raw-JAX (no flax): params are nested dicts of arrays; init fns mirror apply
+fns. Everything is shape-polymorphic over leading batch/seq dims and uses
+``compute_dtype`` internally with f32 accumulations where it matters.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, scale: float = 1.0):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    std = scale / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2, 2, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.truncated_normal(key, -2, 2, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm with an f32 *reduction* but no full-tensor f32 materialization.
+
+    Upcasting x wholesale (x.astype(f32)) lets XLA hoist the convert in
+    front of the scan-remat save buffer, storing the per-layer residual
+    stream in f32 — measured +12.5 GiB/device on qwen3-14b train_4k. The
+    einsum accumulates the variance in f32 while x stays bf16.
+    """
+    var = jnp.einsum(
+        "...d,...d->...", x, x, preferred_element_type=jnp.float32
+    ) / x.shape[-1]
+    inv = jax.lax.rsqrt(var + eps)[..., None].astype(x.dtype)
+    return x * inv * params["scale"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE — full, partial (chatglm-style "2d": rotate half the head dims)
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float, rotate_dims: int) -> jax.Array:
+    """inv_freq (rotate_dims/2,)."""
+    return 1.0 / (
+        theta ** (jnp.arange(0, rotate_dims, 2, dtype=jnp.float32) / rotate_dims)
+    )
+
+
+def apply_rope(
+    x: jax.Array,  # (..., S, H, Dh)
+    positions: jax.Array,  # (..., S)
+    theta: float,
+    mode: str = "full",
+) -> jax.Array:
+    if mode == "none":
+        return x
+    Dh = x.shape[-1]
+    rot = Dh if mode == "full" else Dh // 2
+    inv = rope_frequencies(Dh, theta, rot)  # (rot/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # (..., S, rot/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., :, None, :]  # (..., S, 1, rot/2)
+    sin = sin[..., :, None, :]
+    xr = x[..., :rot].astype(jnp.float32)
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    rotated = jnp.stack([out1, out2], axis=-1).reshape(xr.shape).astype(x.dtype)
+    if rot == Dh:
+        return rotated
+    return jnp.concatenate([rotated, x[..., rot:]], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d_model: int, d_ff: int, kind: str, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    if kind == "swiglu":
+        return {
+            "w1": dense_init(ks[0], (d_model, d_ff), dtype),
+            "w3": dense_init(ks[1], (d_model, d_ff), dtype),
+            "w2": dense_init(ks[2], (d_ff, d_model), dtype),
+        }
+    return {
+        "w1": dense_init(ks[0], (d_model, d_ff), dtype),
+        "w2": dense_init(ks[1], (d_ff, d_model), dtype),
+    }
+
+
+def mlp_apply(params: dict, x: jax.Array, kind: str) -> jax.Array:
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ params["w1"]) * (x @ params["w3"])
+    else:
+        h = jax.nn.gelu(x @ params["w1"])
+    return h @ params["w2"]

@@ -1,0 +1,356 @@
+"""Model assembly: blocks → stacks → train/prefill/decode applies.
+
+Pre-norm residual blocks. Homogeneous stacks (9 of the 10 assigned archs)
+store per-layer params stacked on a leading L axis and run under
+``lax.scan`` — HLO size stays O(1) in depth, which keeps 94-layer dry-runs
+compilable and is remat-friendly. Heterogeneous stacks (zamba2's
+Mamba2-with-periodic-attention pattern) use a python loop over per-layer
+param dicts.
+
+Modality frontends are stubs per the assignment: ``audio`` consumes
+precomputed frame embeddings (B, S, dm); ``vlm`` consumes precomputed patch
+embeddings prepended to the token stream (prefix simplification of
+PaliGemma's prefix-LM attention is noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import ssm as ssmmod
+from .attention import KVCache
+from .config import ModelConfig
+from .layers import dtype_of, embed_init, mlp_apply, mlp_init, rmsnorm, rmsnorm_init
+from .moe import moe_apply, moe_init
+from .sharding import constrain_batch_dim
+
+
+def _has_ffn(cfg: ModelConfig, kind: str) -> bool:
+    return kind == "attn" or cfg.family == "ssm"
+
+
+# ---------------------------------------------------------------------------
+# per-block init / apply
+# ---------------------------------------------------------------------------
+
+
+def block_init(key, cfg: ModelConfig, kind: str) -> dict:
+    dt = dtype_of(cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: dict[str, Any] = {"norm1": rmsnorm_init(cfg.d_model, dt)}
+    if kind == "attn":
+        p["mixer"] = attn.mla_init(k1, cfg, dt) if cfg.mla else attn.gqa_init(k1, cfg, dt)
+    elif kind == "mamba2":
+        p["mixer"] = ssmmod.mamba2_init(k1, cfg, dt)
+    elif kind == "rwkv6":
+        p["mixer"] = ssmmod.rwkv6_init(k1, cfg, dt)
+    else:
+        raise ValueError(kind)
+    if _has_ffn(cfg, kind):
+        p["norm2"] = rmsnorm_init(cfg.d_model, dt)
+        p["ffn"] = moe_init(k2, cfg, dt) if cfg.moe else mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.mlp, dt)
+    return p
+
+
+def _ffn_apply(p: dict, cfg: ModelConfig, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    if cfg.moe:
+        return moe_apply(p, cfg, x)
+    return mlp_apply(p, x, cfg.mlp), jnp.float32(0.0)
+
+
+def block_train(p: dict, cfg: ModelConfig, kind: str, x, positions):
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if kind == "attn":
+        mix = attn.mla_train(p["mixer"], cfg, h, positions) if cfg.mla else attn.gqa_train(p["mixer"], cfg, h, positions)
+    elif kind == "mamba2":
+        mix = ssmmod.mamba2_forward(p["mixer"], cfg, h)
+    else:
+        mix = ssmmod.rwkv6_forward(p["mixer"], cfg, h)
+    x = x + mix
+    aux = jnp.float32(0.0)
+    if _has_ffn(cfg, kind):
+        h = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        y, aux = _ffn_apply(p["ffn"], cfg, h)
+        x = x + y
+    return x, aux
+
+
+def block_prefill(p: dict, cfg: ModelConfig, kind: str, x, positions, cache):
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if kind == "attn":
+        fn = attn.mla_prefill if cfg.mla else attn.gqa_prefill
+        mix, cache = fn(p["mixer"], cfg, h, positions, cache)
+    elif kind == "mamba2":
+        mix, cache = ssmmod.mamba2_forward(p["mixer"], cfg, h, return_state=True)
+    else:
+        mix, cache = ssmmod.rwkv6_forward(p["mixer"], cfg, h, return_state=True)
+    x = x + mix
+    if _has_ffn(cfg, kind):
+        h = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        y, _ = _ffn_apply(p["ffn"], cfg, h)
+        x = x + y
+    return x, cache
+
+
+def block_decode(p: dict, cfg: ModelConfig, kind: str, x, cache, cache_len):
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if kind == "attn":
+        fn = attn.mla_decode if cfg.mla else attn.gqa_decode
+        mix, cache = fn(p["mixer"], cfg, h, cache, cache_len)
+    elif kind == "mamba2":
+        mix, cache = ssmmod.mamba2_step(p["mixer"], cfg, h, cache)
+    else:
+        mix, cache = ssmmod.rwkv6_step(p["mixer"], cfg, h, cache)
+    x = x + mix
+    if _has_ffn(cfg, kind):
+        h = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        y, _ = _ffn_apply(p["ffn"], cfg, h)
+        x = x + y
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+
+def segments(cfg: ModelConfig) -> list[tuple[str, int]]:
+    """Partition the layer pattern into runs of identical block kinds.
+
+    Each run is stacked on a leading axis and executed with one
+    `lax.scan` — uniform archs get a single segment, zamba2 gets
+    alternating mamba2/attn segments. With ``force_unroll`` every layer is
+    its own length-1 segment (dry-run cost extraction)."""
+    pat = cfg.pattern
+    if cfg.force_unroll:
+        return [(k, 1) for k in pat]
+    runs: list[tuple[str, int]] = []
+    for k in pat:
+        if runs and runs[-1][0] == k:
+            runs[-1] = (k, runs[-1][1] + 1)
+        else:
+            runs.append((k, 1))
+    return runs
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    dt = dtype_of(cfg.param_dtype)
+    keys = jax.random.split(key, cfg.num_layers + 3)
+    p: dict[str, Any] = {}
+    if cfg.input_mode in ("tokens", "vlm"):
+        p["embed"] = embed_init(keys[-1], (cfg.vocab_size, cfg.d_model), dt)
+    p["final_norm"] = rmsnorm_init(cfg.d_model, dt)
+    if not cfg.tie_embeddings or cfg.input_mode == "frames":
+        p["lm_head"] = embed_init(keys[-2], (cfg.d_model, cfg.vocab_size), dt)
+
+    blocks = []
+    off = 0
+    for kind, ln in segments(cfg):
+        blocks.append(
+            jax.vmap(lambda k, kind=kind: block_init(k, cfg, kind))(keys[off : off + ln])
+        )
+        off += ln
+    p["blocks"] = blocks
+    return p
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch: dict):
+    """Returns (x (B,S,dm), positions (B,S), target_mask (B,S))."""
+    cd = dtype_of(cfg.compute_dtype)
+    if cfg.input_mode == "tokens":
+        tok = batch["tokens"]
+        x = params["embed"][tok].astype(cd)
+        B, S = tok.shape
+        pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+        return x, pos, jnp.ones((B, S), bool)
+    if cfg.input_mode == "frames":
+        x = batch["frames"].astype(cd)
+        B, S = x.shape[:2]
+        pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+        return x, pos, jnp.ones((B, S), bool)
+    # vlm: image embeddings prepended to token embeddings
+    img = batch["image_embeds"].astype(cd)  # (B, Ni, dm)
+    tok = batch["tokens"]
+    xt = params["embed"][tok].astype(cd)
+    x = jnp.concatenate([img, xt], axis=1)
+    B, S = x.shape[:2]
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    mask = jnp.concatenate(
+        [jnp.zeros((B, img.shape[1]), bool), jnp.ones(tok.shape, bool)], axis=1
+    )
+    return x, pos, mask
+
+
+def _logits(params, cfg: ModelConfig, x):
+    head = params["embed"].T if cfg.tie_embeddings and "embed" in params else params["lm_head"]
+    return (x @ head.astype(x.dtype)).astype(jnp.float32)
+
+
+def _remat_wrap(fn, remat):
+    """remat: 'none' | 'full' (save nothing) | 'dots' (save matmul outputs).
+
+    The policy choice is a §Perf lever: 'full' minimizes the memory roofline
+    term at the cost of recompute FLOPs; 'dots' trades some memory back for
+    a MODEL_FLOPS/HLO_FLOPs ratio closer to 1.
+    """
+    if remat in (False, "none"):
+        return fn
+    if remat in (True, "full"):
+        return jax.checkpoint(fn)
+    if remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    raise ValueError(remat)
+
+
+def _run_blocks_train(params, cfg: ModelConfig, x, positions, remat="full"):
+    aux_total = jnp.float32(0.0)
+    x = constrain_batch_dim(x)
+    for (kind, ln), seg in zip(segments(cfg), params["blocks"]):
+        fn = functools.partial(block_train, cfg=cfg, kind=kind)
+        f = _remat_wrap(lambda p, xx, fn=fn: fn(p, x=xx, positions=positions), remat)
+        if ln == 1:
+            x, a = f(jax.tree.map(lambda t: t[0], seg), x)
+            x = constrain_batch_dim(x)
+            aux_total = aux_total + a
+        else:
+            def body(carry, layer_params, f=f):
+                xc, aux = carry
+                xc, a = f(layer_params, xc)
+                return (constrain_batch_dim(xc), aux + a), None
+
+            (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), seg)
+    return x, aux_total
+
+
+def forward_train(params, cfg: ModelConfig, batch: dict, remat="full"):
+    """Returns (logits (B,S,V) f32, target_mask, aux_loss)."""
+    x, pos, mask = _embed_inputs(params, cfg, batch)
+    x, aux = _run_blocks_train(params, cfg, x, pos, remat)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return _logits(params, cfg, x), mask, aux
+
+
+def _xent(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Sharding-friendly CE: the target log-prob comes from a one-hot
+    *contraction* over the vocab dim, not a gather — with vocab sharded over
+    the `model` axis a gather forces GSPMD to all-gather the full (B,S,V)
+    logits (measured: 100s of GB/device at train_4k scale); the contraction
+    lowers to a partial sum + tiny all-reduce instead."""
+    V = logits.shape[-1]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(targets, V, dtype=logits.dtype)
+    tgt_logit = jnp.einsum("...v,...v->...", logits, onehot)
+    return (lse - tgt_logit).mean()
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict, remat="full"):
+    """Next-token CE for causal archs; frame classification for encoders."""
+    logits, mask, aux = forward_train(params, cfg, batch, remat)
+    if cfg.causal:
+        targets = batch["tokens"]
+        if cfg.input_mode == "vlm":
+            Ni = batch["image_embeds"].shape[1]
+            logits_txt = logits[:, Ni:, :]
+        else:
+            logits_txt = logits
+        loss = _xent(logits_txt[:, :-1], targets[:, 1:])
+    else:  # encoder: per-frame classification against labels
+        loss = _xent(logits, batch["labels"])
+    return loss + 0.01 * aux, (loss, aux)
+
+
+# ---------------------------------------------------------------------------
+# serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int, dtype=jnp.bfloat16):
+    """Decode state: a list of per-segment stacked pytrees, leaves
+    (seg_len, B, ...) — one entry per `segments(cfg)` run."""
+
+    def one(kind: str):
+        if kind == "attn":
+            if cfg.mla:
+                m = cfg.mla
+                return KVCache(
+                    k=jnp.zeros((batch, s_max, m.kv_lora_rank + m.qk_rope_head_dim), dtype),
+                    v=jnp.zeros((batch, 0), dtype),
+                )
+            return KVCache(
+                k=jnp.zeros((batch, s_max, cfg.num_kv_heads, cfg.resolved_head_dim), dtype),
+                v=jnp.zeros((batch, s_max, cfg.num_kv_heads, cfg.resolved_head_dim), dtype),
+            )
+        if kind == "mamba2":
+            return ssmmod.mamba2_init_state(cfg, batch, dtype)
+        return ssmmod.rwkv6_init_state(cfg, batch, dtype)
+
+    out = []
+    for kind, ln in segments(cfg):
+        single = one(kind)
+        out.append(
+            jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (ln,) + a.shape).copy(), single
+            )
+        )
+    return out
+
+
+def prefill(params, cfg: ModelConfig, batch: dict, cache):
+    """Process the prompt; returns (last-position logits, filled cache)."""
+    x, pos, _ = _embed_inputs(params, cfg, batch)
+    x = constrain_batch_dim(x)
+    new_cache = []
+    for (kind, ln), seg, cseg in zip(segments(cfg), params["blocks"], cache):
+        if ln == 1:
+            x, c = block_prefill(
+                jax.tree.map(lambda t: t[0], seg), cfg, kind, x, pos,
+                jax.tree.map(lambda t: t[0], cseg),
+            )
+            x = constrain_batch_dim(x)
+            new_cache.append(jax.tree.map(lambda t: t[None], c))
+        else:
+            def body(xc, scan_in, kind=kind):
+                layer_params, layer_cache = scan_in
+                xo, c = block_prefill(layer_params, cfg, kind, xc, pos, layer_cache)
+                return constrain_batch_dim(xo), c
+
+            x, nc = jax.lax.scan(body, x, (seg, cseg))
+            new_cache.append(nc)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return _logits(params, cfg, x[:, -1:, :]), new_cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache, cache_len):
+    """One decode step. tokens (B, 1) int32 (or (B,1,dm) frames)."""
+    cd = dtype_of(cfg.compute_dtype)
+    if cfg.input_mode in ("tokens", "vlm"):
+        x = params["embed"][tokens].astype(cd)  # (B,1,dm)
+    else:
+        x = tokens.astype(cd)
+
+    x = constrain_batch_dim(x)
+    new_cache = []
+    for (kind, ln), seg, cseg in zip(segments(cfg), params["blocks"], cache):
+        if ln == 1:
+            x, c = block_decode(
+                jax.tree.map(lambda t: t[0], seg), cfg, kind, x,
+                jax.tree.map(lambda t: t[0], cseg), cache_len,
+            )
+            x = constrain_batch_dim(x)
+            new_cache.append(jax.tree.map(lambda t: t[None], c))
+        else:
+            def body(xc, scan_in, kind=kind):
+                layer_params, layer_cache = scan_in
+                xo, c = block_decode(layer_params, cfg, kind, xc, layer_cache, cache_len)
+                return constrain_batch_dim(xo), c
+
+            x, nc = jax.lax.scan(body, x, (seg, cseg))
+            new_cache.append(nc)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return _logits(params, cfg, x), new_cache

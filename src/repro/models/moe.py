@@ -1,0 +1,97 @@
+"""Mixture-of-Experts: grouped capacity-based dispatch (Switch/Mesh-TF style).
+
+Tokens are processed in groups of ``group_size``; within each group, top-k
+routing builds dispatch/combine tensors (G, E, C) with
+C = G·k/E·capacity_factor slots per expert. Everything is einsum-shaped so
+GSPMD can shard experts over the `model` axis (EP) and groups over `data`
+(DP) — token→expert movement lowers to all-to-alls instead of scatters.
+Shared experts (DeepSeek) run densely alongside.
+
+Capacity overflow drops tokens (the residual passes through); the router
+uses softmax-after-top-k gates normalized over the selected experts, and
+an auxiliary load-balancing loss is returned for training.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig, MoEConfig
+from .layers import dense_init, mlp_apply, mlp_init
+
+
+def moe_init(key, cfg: ModelConfig, dtype) -> dict:
+    e: MoEConfig = cfg.moe
+    dm = cfg.d_model
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (dm, e.num_experts), jnp.float32),
+        "w1": dense_init(ks[1], (e.num_experts, dm, e.d_ff_expert), dtype),
+        "w3": dense_init(ks[2], (e.num_experts, dm, e.d_ff_expert), dtype),
+        "w2": dense_init(ks[3], (e.num_experts, e.d_ff_expert, dm), dtype),
+    }
+    if e.num_shared_experts:
+        p["shared"] = mlp_init(
+            ks[4], dm, e.d_ff_shared * e.num_shared_experts, "swiglu", dtype
+        )
+    return p
+
+
+def moe_apply(params: dict, cfg: ModelConfig, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x (B, S, dm) -> (y (B, S, dm), aux_loss ())."""
+    e = cfg.moe
+    B, S, dm = x.shape
+    n_tok = B * S
+    # decode / small batches: collapse to a single group
+    G = e.group_size if n_tok % e.group_size == 0 else n_tok
+    ngroups = n_tok // G
+    C = max(4, int(G * e.top_k * e.capacity_factor / e.num_experts))
+    xg = x.reshape(ngroups, G, dm)
+
+    logits = (xg.astype(jnp.float32) @ params["router"]).astype(jnp.float32)  # (n,G,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # top-k routing: iterate k slots, masking chosen experts
+    gates_list, masks_list = [], []
+    remaining = probs
+    for _ in range(e.top_k):
+        gate, idx = jnp.max(remaining, -1), jnp.argmax(remaining, -1)  # (n,G)
+        onehot = jax.nn.one_hot(idx, e.num_experts, dtype=jnp.float32)
+        gates_list.append(gate)
+        masks_list.append(onehot)
+        remaining = remaining * (1.0 - onehot)
+
+    # normalize gates over the selected k
+    gates = jnp.stack(gates_list, -1)  # (n,G,k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # capacity assignment: position of each (token, slot) within its expert
+    dispatch = jnp.zeros((ngroups, G, e.num_experts, C), jnp.float32)
+    combine = jnp.zeros((ngroups, G, e.num_experts, C), jnp.float32)
+    prev_count = jnp.zeros((ngroups, 1, e.num_experts), jnp.float32)
+    for j in range(e.top_k):
+        m = masks_list[j]  # (n,G,E)
+        pos_in_expert = jnp.cumsum(m, axis=1) - m + prev_count  # (n,G,E)
+        fits = (pos_in_expert < C) & (m > 0)
+        pos_oh = jax.nn.one_hot(pos_in_expert.astype(jnp.int32), C, dtype=jnp.float32)
+        d_j = pos_oh * (fits.astype(jnp.float32) * m)[..., None]  # (n,G,E,C)
+        dispatch = dispatch + d_j
+        combine = combine + d_j * gates[..., j][:, :, None, None]
+        prev_count = prev_count + m.sum(axis=1, keepdims=True)
+
+    cd = x.dtype
+    x_e = jnp.einsum("ngec,ngd->necd", dispatch.astype(cd), xg)  # (n,E,C,dm)
+    h = jax.nn.silu(jnp.einsum("necd,edf->necf", x_e, params["w1"])) * jnp.einsum(
+        "necd,edf->necf", x_e, params["w3"]
+    )
+    y_e = jnp.einsum("necf,efd->necd", h, params["w2"])  # (n,E,C,dm)
+    y = jnp.einsum("ngec,necd->ngd", combine.astype(cd), y_e).reshape(B, S, dm)
+
+    if e.num_shared_experts:
+        y = y + mlp_apply(params["shared"], x, "swiglu")
+
+    # Switch-style load-balance aux: E · Σ_e (frac_tokens_e · frac_probs_e)
+    frac_tokens = jnp.stack(masks_list, 0).sum(0).mean(axis=1)  # (n,E)
+    frac_probs = probs.mean(axis=1)  # (n,E)
+    aux = e.num_experts * jnp.mean(jnp.sum(frac_tokens * frac_probs, -1)) / e.top_k
+    return y, aux.astype(jnp.float32)

@@ -1,0 +1,325 @@
+"""State-space sequence mixers: Mamba2 (SSD) and RWKV6 (Finch).
+
+Both are implemented in the *chunkwise-parallel* form — the TPU-native
+formulation where within-chunk interactions are (Q, Q) masked matmuls (MXU
+work, visible FLOPs in the HLO) and only the O(S/Q) chunk-carry runs as a
+`lax.scan`. Single-token recurrent steps are provided for decode; the pure
+recurrent forms also serve as oracles in tests/test_ssm.py.
+
+Mamba2 recurrence (per head h, state S ∈ R^{hd×ds}):
+    S_t = exp(dt_t·A_h)·S_{t-1} + dt_t·(x_t ⊗ B_t);   y_t = S_t·C_t + D_h·x_t
+
+RWKV6 recurrence (per head, state S ∈ R^{dk×dv}, per-channel decay w):
+    o_t = r_t·(S_{t-1} + diag(u)·k_tᵀv_t);   S_t = diag(w_t)·S_{t-1} + k_tᵀv_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig, SSMConfig
+from .layers import dense_init, rmsnorm, rmsnorm_init
+
+def _chunk_scan(step, init, xs, unroll: bool):
+    """lax.scan, or a python loop when `unroll` (dry-run cost extraction —
+    XLA's cost analysis counts while bodies once; see launch/dryrun.py)."""
+    if not unroll:
+        return jax.lax.scan(step, init, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    carry, ys = init, []
+    for i in range(n):
+        carry, y = step(carry, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    import jax.numpy as _jnp
+    return carry, _jnp.stack(ys, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2
+# ---------------------------------------------------------------------------
+
+
+def mamba2_init(key, cfg: ModelConfig, dtype) -> dict:
+    s: SSMConfig = cfg.ssm
+    dm = cfg.d_model
+    din = s.expand * dm
+    nh = din // s.head_dim
+    conv_dim = din + 2 * s.d_state
+    ks = jax.random.split(key, 4)
+    return {
+        # projections: z (gate), x, B, C, dt
+        "in_proj": dense_init(ks[0], (dm, 2 * din + 2 * s.d_state + nh), dtype),
+        "conv_w": dense_init(ks[1], (s.conv_width, conv_dim), dtype, scale=1.0),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),  # A = -exp(A_log) ∈ (-∞,0)
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "out_norm": rmsnorm_init(din, dtype),
+        "out_proj": dense_init(ks[2], (din, dm), dtype),
+    }
+
+
+def _split_mamba(cfg: ModelConfig, proj: jax.Array):
+    s = cfg.ssm
+    din = s.expand * cfg.d_model
+    nh = din // s.head_dim
+    z, xs, Bc, Cc, dt = jnp.split(
+        proj, [din, 2 * din, 2 * din + s.d_state, 2 * din + 2 * s.d_state], axis=-1
+    )
+    return z, xs, Bc, Cc, dt, din, nh
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv along seq: x (B,S,C), w (W,C)."""
+    W = w.shape[0]
+    out = jnp.zeros_like(x)
+    for i in range(W):
+        shift = W - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1], :]
+        out = out + xi * w[i]
+    return jax.nn.silu(out + b)
+
+
+def mamba2_forward(params: dict, cfg: ModelConfig, x: jax.Array,
+                   return_state: bool = False):
+    """Full-sequence chunked SSD. x (B, S, dm) -> (B, S, dm)[, final state]."""
+    s = cfg.ssm
+    B, S, dm = x.shape
+    proj = x @ params["in_proj"]
+    z, xs, Bc, Cc, dt, din, nh = _split_mamba(cfg, proj)
+    conv_in = jnp.concatenate([xs, Bc, Cc], axis=-1)
+    conv_out = _causal_conv(conv_in, params["conv_w"], params["conv_b"])
+    xs, Bc, Cc = jnp.split(conv_out, [din, din + s.d_state], axis=-1)
+
+    hd, ds = s.head_dim, s.d_state
+    xh = xs.reshape(B, S, nh, hd).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,nh)
+    A = -jnp.exp(params["A_log"])  # (nh,)
+    Bc = Bc.astype(jnp.float32)
+    Cc = Cc.astype(jnp.float32)
+
+    Q = min(s.chunk, S)
+    Sp = ((S + Q - 1) // Q) * Q
+    if Sp != S:
+        assert not return_state, "prefill length must be a chunk multiple"
+        xh = jnp.pad(xh, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+        Bc = jnp.pad(Bc, ((0, 0), (0, Sp - S), (0, 0)))
+        Cc = jnp.pad(Cc, ((0, 0), (0, Sp - S), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, Sp - S), (0, 0)))
+    nchunk = Sp // Q
+
+    def chunk_step(S_in, inp):
+        xq, bq, cq, dtq = inp  # (B,Q,nh,hd),(B,Q,ds),(B,Q,ds),(B,Q,nh)
+        la = jnp.cumsum(dtq * A, axis=1)  # (B,Q,nh) cumulative log-decay ≤0
+        # intra-chunk: M_{ijh} = exp(l_i - l_j) · (C_i·B_j) · dt_j, i ≥ j
+        cb = jnp.einsum("bis,bjs->bij", cq, bq)  # (B,Q,Q)
+        dmat = jnp.exp(la[:, :, None, :] - la[:, None, :, :])  # (B,Q,Q,nh)
+        mask = jnp.tril(jnp.ones((Q, Q), bool))
+        M = jnp.where(mask[None, :, :, None], dmat * cb[..., None], 0.0)
+        M = M * dtq[:, None, :, :]  # dt at the j (source) index
+        y = jnp.einsum("bijh,bjhd->bihd", M, xh_c := xq)
+        # carry from previous chunks
+        y = y + jnp.exp(la)[..., None] * jnp.einsum("bhds,bis->bihd", S_in, cq)
+        # new carry state
+        wj = dtq * jnp.exp(la[:, -1:, :] - la)  # (B,Q,nh)
+        S_out = jnp.exp(la[:, -1])[:, :, None, None] * S_in + jnp.einsum(
+            "bjhd,bjs,bjh->bhds", xq, bq, wj
+        )
+        return S_out, y
+
+    S0 = jnp.zeros((B, nh, hd, ds), jnp.float32)
+    inp = (
+        xh.reshape(B, nchunk, Q, nh, hd).swapaxes(0, 1),
+        Bc.reshape(B, nchunk, Q, ds).swapaxes(0, 1),
+        Cc.reshape(B, nchunk, Q, ds).swapaxes(0, 1),
+        dt.reshape(B, nchunk, Q, nh).swapaxes(0, 1),
+    )
+    S_fin, ys = _chunk_scan(chunk_step, S0, inp, s.unroll_chunks)
+    y = ys.swapaxes(0, 1).reshape(B, Sp, nh, hd)[:, :S]
+    y = y + params["D"][None, None, :, None] * xh[:, :S]
+    y = y.reshape(B, S, din).astype(x.dtype)
+    y = rmsnorm(params["out_norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    out = y @ params["out_proj"]
+    if return_state:
+        cw = params["conv_w"].shape[0]
+        state = {"S": S_fin, "conv": conv_in[:, S - (cw - 1):, :]}
+        return out, state
+    return out
+
+
+def mamba2_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    s = cfg.ssm
+    din = s.expand * cfg.d_model
+    nh = din // s.head_dim
+    conv_dim = din + 2 * s.d_state
+    return {
+        "S": jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_dim), dtype),
+    }
+
+
+def mamba2_step(params: dict, cfg: ModelConfig, x: jax.Array, state: dict):
+    """One-token decode. x (B, 1, dm) -> (y (B, 1, dm), state)."""
+    s = cfg.ssm
+    B = x.shape[0]
+    proj = x[:, 0] @ params["in_proj"]
+    z, xs, Bc, Cc, dt, din, nh = _split_mamba(cfg, proj[:, None, :])
+    z, xs, Bc, Cc, dt = z[:, 0], xs[:, 0], Bc[:, 0], Cc[:, 0], dt[:, 0]
+    conv_in = jnp.concatenate([xs, Bc, Cc], axis=-1)  # (B, conv_dim)
+    window = jnp.concatenate([state["conv"], conv_in[:, None, :]], axis=1)  # (B,W,C)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", window, params["conv_w"]) + params["conv_b"]
+    )
+    xs, Bc, Cc = jnp.split(conv_out, [din, din + s.d_state], axis=-1)
+
+    hd, ds = s.head_dim, s.d_state
+    xh = xs.reshape(B, nh, hd).astype(jnp.float32)
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,nh)
+    a = jnp.exp(dtp * (-jnp.exp(params["A_log"])))  # (B,nh)
+    S_new = a[:, :, None, None] * state["S"] + jnp.einsum(
+        "bhd,bs,bh->bhds", xh, Bc.astype(jnp.float32), dtp
+    )
+    y = jnp.einsum("bhds,bs->bhd", S_new, Cc.astype(jnp.float32))
+    y = y + params["D"][None, :, None] * xh
+    y = y.reshape(B, din).astype(x.dtype)
+    y = rmsnorm(params["out_norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    out = (y @ params["out_proj"])[:, None, :]
+    return out, {"S": S_new, "conv": window[:, 1:, :]}
+
+
+# ---------------------------------------------------------------------------
+# RWKV6
+# ---------------------------------------------------------------------------
+
+
+def rwkv6_init(key, cfg: ModelConfig, dtype) -> dict:
+    s: SSMConfig = cfg.ssm
+    dm = cfg.d_model
+    din = s.expand * dm
+    ks = jax.random.split(key, 8)
+    nh = din // s.head_dim
+    return {
+        # token-shift interpolation weights per stream
+        "mu": jnp.full((5, dm), 0.5, dtype),  # r,k,v,g,w
+        "wr": dense_init(ks[0], (dm, din), dtype),
+        "wk": dense_init(ks[1], (dm, din), dtype),
+        "wv": dense_init(ks[2], (dm, din), dtype),
+        "wg": dense_init(ks[3], (dm, din), dtype),
+        # data-dependent decay (low-rank, as in Finch): dm -> 64 -> din
+        "w_lora_a": dense_init(ks[4], (dm, 64), dtype),
+        "w_lora_b": dense_init(ks[5], (64, din), dtype, scale=0.1),
+        "w0": jnp.full((din,), -2.0, jnp.float32),
+        "u": jnp.zeros((din,), jnp.float32),  # current-token bonus
+        "out_norm": rmsnorm_init(din, dtype),
+        "wo": dense_init(ks[6], (din, dm), dtype),
+    }
+
+
+def _rwkv_streams(params, x, x_prev):
+    """Token-shifted input streams. x (B,S,dm); x_prev (B,1,dm) carry."""
+    shifted = jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+    mu = params["mu"]
+    mix = lambda i: x + (shifted - x) * mu[i]
+    r_in, k_in, v_in, g_in, w_in = (mix(i) for i in range(5))
+    r = r_in @ params["wr"]
+    k = k_in @ params["wk"]
+    v = v_in @ params["wv"]
+    g = jax.nn.silu(g_in @ params["wg"])
+    logw = -jnp.exp(
+        params["w0"]
+        + (jnp.tanh(w_in @ params["w_lora_a"]) @ params["w_lora_b"]).astype(jnp.float32)
+    )  # (B,S,din) ≤ 0
+    return r, k, v, g, logw
+
+
+def rwkv6_forward(params: dict, cfg: ModelConfig, x: jax.Array,
+                  x_prev: jax.Array | None = None, return_state: bool = False):
+    """Full-sequence chunked WKV. x (B,S,dm) -> (B,S,dm)[, final state]."""
+    s = cfg.ssm
+    B, S, dm = x.shape
+    din = s.expand * dm
+    hd = s.head_dim
+    nh = din // hd
+    if x_prev is None:
+        x_prev = jnp.zeros((B, 1, dm), x.dtype)
+    r, k, v, g, logw = _rwkv_streams(params, x, x_prev)
+
+    rh = r.reshape(B, S, nh, hd).astype(jnp.float32)
+    kh = k.reshape(B, S, nh, hd).astype(jnp.float32)
+    vh = v.reshape(B, S, nh, hd).astype(jnp.float32)
+    lw = logw.reshape(B, S, nh, hd)
+    u = params["u"].reshape(nh, hd)
+
+    Q = min(s.chunk, S)
+    Sp = ((S + Q - 1) // Q) * Q
+    if Sp != S:
+        assert not return_state, "prefill length must be a chunk multiple"
+        pad = lambda a: jnp.pad(a, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+        rh, kh, vh, lw = pad(rh), pad(kh), pad(vh), pad(lw)
+    nchunk = Sp // Q
+
+    def chunk_step(S_in, inp):  # S_in (B,nh,hd_k,hd_v)
+        rq, kq, vq, lq = inp  # (B,Q,nh,hd)...
+        l = jnp.cumsum(lq, axis=1)  # (B,Q,nh,hd) cumulative log decay
+        l_prev = l - lq  # l_{i-1} (decay up to but excluding i)
+        r_t = rq * jnp.exp(l_prev)  # (B,Q,nh,hd)
+        k_t = kq * jnp.exp(-l)
+        A = jnp.einsum("bihd,bjhd->bhij", r_t, k_t)  # strict lower part valid
+        mask = jnp.tril(jnp.ones((Q, Q), bool), k=-1)
+        A = jnp.where(mask[None, None], A, 0.0)
+        diag = jnp.einsum("bihd,hd,bihd->bhi", rq, u, kq)  # current-token bonus
+        y = jnp.einsum("bhij,bjhd->bihd", A, vq)
+        y = y + diag.transpose(0, 2, 1)[..., None] * vq
+        # carry
+        y = y + jnp.einsum("bihk,bhkv->bihv", rq * jnp.exp(l_prev), S_in)
+        # state update
+        decay_out = jnp.exp(l[:, -1])  # (B,nh,hd)
+        S_out = decay_out[..., None] * S_in + jnp.einsum(
+            "bjhk,bjhv->bhkv", kq * jnp.exp(l[:, -1:] - l), vq
+        )
+        return S_out, y
+
+    S0 = jnp.zeros((B, nh, hd, hd), jnp.float32)
+    inp = tuple(
+        a.reshape(B, nchunk, Q, nh, hd).swapaxes(0, 1) for a in (rh, kh, vh, lw)
+    )
+    S_fin, ys = _chunk_scan(chunk_step, S0, inp, s.unroll_chunks)
+    y = ys.swapaxes(0, 1).reshape(B, Sp, din)[:, :S].astype(x.dtype)
+    y = rmsnorm(params["out_norm"], y, cfg.norm_eps) * g
+    out = y @ params["wo"]
+    if return_state:
+        return out, {"S": S_fin, "shift": x[:, -1:, :]}
+    return out
+
+
+def rwkv6_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    s = cfg.ssm
+    din = s.expand * cfg.d_model
+    nh = din // s.head_dim
+    return {
+        "S": jnp.zeros((batch, nh, s.head_dim, s.head_dim), jnp.float32),
+        "shift": jnp.zeros((batch, 1, cfg.d_model), dtype),
+    }
+
+
+def rwkv6_step(params: dict, cfg: ModelConfig, x: jax.Array, state: dict):
+    """One-token decode. x (B,1,dm)."""
+    s = cfg.ssm
+    B, _, dm = x.shape
+    din = s.expand * dm
+    hd = s.head_dim
+    nh = din // hd
+    r, k, v, g, logw = _rwkv_streams(params, x, state["shift"])
+    rh = r.reshape(B, nh, hd).astype(jnp.float32)
+    kh = k.reshape(B, nh, hd).astype(jnp.float32)
+    vh = v.reshape(B, nh, hd).astype(jnp.float32)
+    w = jnp.exp(logw.reshape(B, nh, hd))
+    u = params["u"].reshape(nh, hd)
+
+    kv = jnp.einsum("bhk,bhv->bhkv", kh, vh)
+    y = jnp.einsum("bhk,bhkv->bhv", rh, state["S"] + u[None, :, :, None] * kv)
+    S_new = w[..., None] * state["S"] + kv
+    y = y.reshape(B, din).astype(x.dtype)
+    y = rmsnorm(params["out_norm"], y, cfg.norm_eps) * g[:, 0]
+    out = (y @ params["wo"])[:, None, :]
+    return out, {"S": S_new, "shift": x}

@@ -1,0 +1,27 @@
+"""repro.partition — scale-out: logical→physical partitioning, fan-out.
+
+Cosmos DB collections span physical partitions by hashed partition-key
+ranges (§2.2); vector queries fan out to every partition and the SDK merges
+partial results client-side (§3.5 "SDK Query Plan", §4.3). Reproduced here:
+
+    partitioner.py  Collection: hash ranges → PhysicalPartition (each its own
+                    DiskANN index + store + RU governor), split/merge
+                    elasticity, 50 GB-partition-limit analogue
+    fanout.py       cross-partition scatter/gather with client-side top-k
+                    merge, continuation handling, hedged requests
+                    (straggler mitigation), and the jitted `shard_map`
+                    device-parallel search used by the multi-pod dry-run
+    replica.py      replica sets: quorum writes, failover, read spreading
+"""
+from .partitioner import Collection, CollectionConfig, PhysicalPartition
+from .fanout import fanout_search, distributed_search_fn
+from .replica import ReplicaSet
+
+__all__ = [
+    "Collection",
+    "CollectionConfig",
+    "PhysicalPartition",
+    "fanout_search",
+    "distributed_search_fn",
+    "ReplicaSet",
+]

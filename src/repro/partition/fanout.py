@@ -1,0 +1,159 @@
+"""Cross-partition query fan-out (§3.5 "SDK Query Plan", §4.3, Fig 10).
+
+Two implementations of the same scatter/gather:
+
+  * ``fanout_search`` — the client-side SDK path: issue the query to every
+    physical partition (through its replica set), merge partial top-k
+    results, track per-partition RU and the max-latency effect the paper
+    highlights ("client end-to-end latency is sensitive to the worst
+    latency on the server side"). Includes hedged requests: when a replica
+    is slower than the hedge threshold, a duplicate request goes to another
+    replica and the fastest answer wins — the standard tail-latency /
+    straggler mitigation at fleet scale.
+
+  * ``distributed_search_fn`` — the jitted `shard_map` path: one DiskANN
+    shard per device, lockstep beam search over the local shard, local
+    re-rank, then a global top-k merge via all_gather. This is what the
+    multi-pod dry-run lowers for the production meshes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..core import flat as fmod
+from ..core import pq as pqmod
+from ..core import search as smod
+
+INF = jnp.float32(jnp.inf)
+
+
+# ---------------------------------------------------------------------------
+# client-side fan-out (host path)
+# ---------------------------------------------------------------------------
+
+
+def merge_topk(
+    ids_list: Sequence[np.ndarray], dists_list: Sequence[np.ndarray], k: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Merge per-partition (B, k_i) partial results into global (B, k)."""
+    ids = np.concatenate(ids_list, axis=1)
+    dists = np.concatenate(dists_list, axis=1)
+    dists = np.where(ids >= 0, dists, np.inf)
+    order = np.argsort(dists, axis=1)[:, :k]
+    return np.take_along_axis(ids, order, 1), np.take_along_axis(dists, order, 1)
+
+
+def fanout_search(
+    partitions,  # Sequence[PhysicalPartition] or Sequence[ReplicaSet]
+    queries: np.ndarray,
+    k: int,
+    L: Optional[int] = None,
+    latency_model=None,
+    hedge_at_ms: Optional[float] = None,
+    rng: Optional[np.random.RandomState] = None,
+) -> tuple[np.ndarray, np.ndarray, dict]:
+    """Scatter to all partitions, gather, merge. Returns (ids, dists, info).
+
+    info: per-partition RU, modelled server latencies, client latency
+    (= max over partitions), hedges issued.
+    """
+    rng = rng or np.random.RandomState(0)
+    ids_l, dists_l, rus, lats = [], [], [], []
+    hedges = 0
+    for p in partitions:
+        ids, dists, ru = p.search(queries, k, L)
+        ids_l.append(ids)
+        dists_l.append(dists)
+        rus.append(ru)
+        if latency_model is not None:
+            lat = latency_model(p, rng)
+            if hedge_at_ms is not None and lat > hedge_at_ms:
+                hedges += 1
+                lat = min(lat, latency_model(p, rng))  # hedged duplicate
+            lats.append(lat)
+    ids, dists = merge_topk(ids_l, dists_l, k)
+    info = dict(
+        ru_per_partition=rus,
+        ru_total=float(np.sum(rus)),
+        server_latencies_ms=lats,
+        client_latency_ms=float(np.max(lats)) if lats else 0.0,
+        hedges=hedges,
+    )
+    return ids, dists, info
+
+
+# ---------------------------------------------------------------------------
+# device-parallel fan-out (jitted shard_map path — used by the dry-run)
+# ---------------------------------------------------------------------------
+
+
+def distributed_search_fn(
+    mesh: jax.sharding.Mesh,
+    *,
+    L: int,
+    k: int,
+    metric: str = "l2",
+    shard_axes: tuple[str, ...] = ("data",),
+    max_hops: int = 0,
+):
+    """Build the jitted cross-partition search step for a device mesh.
+
+    The returned fn takes shard-stacked index arrays (leading axis = number
+    of shards = product of `shard_axes` sizes) and a replicated query batch;
+    each device searches its shard and the results merge with one
+    all_gather — the SDK's scatter/gather as collectives.
+    """
+    spec_sharded = P(shard_axes)
+    spec_repl = P()
+
+    def local_search(neighbors, codes, versions, live, vectors, doc_ids,
+                     medoid, codebooks, queries):
+        # leading shard axis is 1 inside shard_map; codebooks are PER SHARD
+        # (each partition quantizes independently, as in the paper — using
+        # one shard's schema for all shards silently wrecks distances)
+        neighbors, codes, versions = neighbors[0], codes[0], versions[0]
+        live, vectors, doc_ids, medoid = live[0], vectors[0], doc_ids[0], medoid[0]
+
+        schema = pqmod.PQSchema(codebooks=codebooks[0], version=jnp.int32(0))
+        luts = jax.vmap(lambda q: pqmod.adc_lut(schema, q, metric))(queries)[:, None]
+        res = smod.batch_greedy_search(
+            neighbors, codes, versions, live, luts, medoid,
+            L=L, max_hops=max_hops,
+        )
+        lids, ldists = fmod.rerank(queries, res.beam_ids[:, : 2 * k], vectors,
+                                   k=k, metric=metric)
+        gdoc = jnp.where(lids >= 0, doc_ids[jnp.maximum(lids, 0)], -1)
+
+        # gather partial results from every shard and merge
+        all_ids = gdoc
+        all_d = jnp.where(lids >= 0, ldists, INF)
+        for ax in shard_axes:
+            all_ids = jax.lax.all_gather(all_ids, ax, axis=0, tiled=False)
+            all_d = jax.lax.all_gather(all_d, ax, axis=0, tiled=False)
+            all_ids = all_ids.reshape((-1,) + all_ids.shape[2:]) if all_ids.ndim > 3 else all_ids
+            all_d = all_d.reshape((-1,) + all_d.shape[2:]) if all_d.ndim > 3 else all_d
+        # (S, B, k) -> (B, S*k) -> top-k
+        S = all_d.shape[0]
+        flat_d = jnp.moveaxis(all_d, 0, 1).reshape(queries.shape[0], S * k)
+        flat_i = jnp.moveaxis(all_ids, 0, 1).reshape(queries.shape[0], S * k)
+        neg, pos = jax.lax.top_k(-flat_d, k)
+        out_ids = jnp.take_along_axis(flat_i, pos, axis=1)
+        return out_ids, -neg
+
+    shmapped = jax.shard_map(
+        local_search,
+        mesh=mesh,
+        in_specs=(
+            spec_sharded, spec_sharded, spec_sharded, spec_sharded,
+            spec_sharded, spec_sharded, spec_sharded, spec_sharded, spec_repl,
+        ),
+        out_specs=(spec_repl, spec_repl),
+        check_vma=False,
+    )
+    return jax.jit(shmapped)

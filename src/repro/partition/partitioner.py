@@ -1,0 +1,195 @@
+"""Logical partitioning and elasticity (§2.2, §4.3).
+
+A Collection hashes each document's partition key into a 32-bit keyspace
+split into contiguous ranges, one per PhysicalPartition. Partitions are
+capacity-bounded (the paper's 50 GB limit → a vector-count budget here);
+when one fills, `split()` halves its hash range and re-homes documents —
+the scale-out path that takes collections to a billion vectors across ~50
+partitions (Fig 10). `merge()` is the scale-in inverse.
+
+Each PhysicalPartition owns a DiskANN index over *its* documents plus a
+store and resource governor — faithfully one-vector-index-per-partition,
+queried via fanout.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Optional, Sequence
+
+import numpy as np
+
+from ..core import DiskANNIndex, GraphConfig
+from ..core.providers import Context
+from ..store.provider import StoreProviderSet
+from ..store.ru import ResourceGovernor, RUMeter
+
+
+def hash_key(key) -> int:
+    """32-bit stable hash of a logical partition-key value."""
+    return int.from_bytes(
+        hashlib.blake2b(repr(key).encode(), digest_size=4).digest(), "big"
+    )
+
+
+@dataclasses.dataclass
+class CollectionConfig:
+    dim: int
+    graph: GraphConfig
+    max_vectors_per_partition: int  # the 50 GB limit analogue
+    initial_partitions: int = 1
+    provisioned_ru_s: float = 10000.0
+    vector_path: str = "/embedding"
+    shard_key_path: Optional[str] = None  # sharded DiskANN (§3.3) when set
+
+
+class PhysicalPartition:
+    def __init__(self, cfg: CollectionConfig, lo: int, hi: int, pid: int):
+        self.cfg = cfg
+        self.lo, self.hi = lo, hi  # hash range [lo, hi)
+        self.pid = pid
+        self.providers = StoreProviderSet(
+            cfg.graph.capacity, cfg.graph.R_slack, cfg.graph.M, cfg.dim,
+            path=cfg.vector_path,
+        )
+        self.index = DiskANNIndex(cfg.graph, cfg.dim, providers=self.providers,
+                                  seed=pid, context=Context(replica=pid))
+        self.governor = ResourceGovernor(cfg.provisioned_ru_s)
+        self.doc_pk: dict[int, int] = {}  # doc id -> partition key hash
+
+    def owns(self, h: int) -> bool:
+        return self.lo <= h < self.hi
+
+    @property
+    def num_docs(self) -> int:
+        return len(self.doc_pk)
+
+    def insert(self, doc_ids: Sequence[int], pk_hashes: Sequence[int],
+               vectors: np.ndarray) -> tuple[float, float]:
+        self.providers.begin_op()
+        self.index.insert(doc_ids, vectors)
+        for d, h in zip(doc_ids, pk_hashes):
+            self.doc_pk[int(d)] = int(h)
+        ru, lat = self.providers.end_op()
+        delay = self.governor.request(ru)
+        return ru, lat + delay * 1000.0
+
+    def delete(self, doc_ids: Sequence[int]) -> float:
+        self.providers.begin_op()
+        self.index.delete(doc_ids)
+        for d in doc_ids:
+            self.doc_pk.pop(int(d), None)
+        ru, _ = self.providers.end_op()
+        self.governor.request(ru)
+        return ru
+
+    def search(self, queries: np.ndarray, k: int, L: Optional[int] = None,
+               **kw) -> tuple[np.ndarray, np.ndarray, float]:
+        self.providers.begin_op()
+        ids, dists, stats = self.index.search(queries, k, L, **kw)
+        self.providers.op.quant_reads += int(stats.cmps * len(queries))
+        self.providers.op.adj_reads += int(stats.hops * len(queries))
+        self.providers.op.full_reads += int(stats.full_reads * len(queries))
+        ru, _ = self.providers.end_op()
+        self.governor.request(ru)
+        return ids, dists, ru / max(len(queries), 1)
+
+
+class Collection:
+    """A scaled-out collection: hash ranges → physical partitions."""
+
+    def __init__(self, cfg: CollectionConfig):
+        self.cfg = cfg
+        n = cfg.initial_partitions
+        span = 1 << 32
+        bounds = [span * i // n for i in range(n)] + [span]
+        self.partitions: list[PhysicalPartition] = [
+            PhysicalPartition(cfg, bounds[i], bounds[i + 1], i) for i in range(n)
+        ]
+        self._next_pid = n
+        self.splits = 0
+        self.merges = 0
+
+    # ------------------------------------------------------------------
+    def _route(self, pk) -> PhysicalPartition:
+        h = hash_key(pk)
+        for p in self.partitions:
+            if p.owns(h):
+                return p
+        raise RuntimeError("hash ranges must cover the keyspace")
+
+    def insert(self, doc_ids: Sequence[int], partition_keys: Sequence,
+               vectors: np.ndarray) -> float:
+        """Route documents to their partitions; split when full."""
+        total_ru = 0.0
+        by_part: dict[int, list[int]] = {}
+        hashes = [hash_key(pk) for pk in partition_keys]
+        for i, h in enumerate(hashes):
+            for j, p in enumerate(self.partitions):
+                if p.owns(h):
+                    by_part.setdefault(j, []).append(i)
+                    break
+        for j, rows in by_part.items():
+            p = self.partitions[j]
+            if p.num_docs + len(rows) > self.cfg.max_vectors_per_partition:
+                self.split(j)
+                # re-route this chunk after the split
+                total_ru += self.insert(
+                    [doc_ids[i] for i in rows],
+                    [partition_keys[i] for i in rows],
+                    vectors[rows],
+                )
+                continue
+            ru, _ = p.insert(
+                [doc_ids[i] for i in rows], [hashes[i] for i in rows], vectors[rows]
+            )
+            total_ru += ru
+        return total_ru
+
+    def delete(self, doc_ids: Sequence[int], partition_keys: Sequence) -> float:
+        ru = 0.0
+        for d, pk in zip(doc_ids, partition_keys):
+            ru += self._route(pk).delete([d])
+        return ru
+
+    # ------------------------------------------------------------------
+    # elasticity
+    # ------------------------------------------------------------------
+    def split(self, j: int):
+        """Split partition j's hash range in half and re-home documents —
+        the paper's partition split behind elastic scaling (§2.2)."""
+        old = self.partitions[j]
+        mid = (old.lo + old.hi) // 2
+        left = PhysicalPartition(self.cfg, old.lo, mid, self._next_pid)
+        right = PhysicalPartition(self.cfg, mid, old.hi, self._next_pid + 1)
+        self._next_pid += 2
+        for doc, h in old.doc_pk.items():
+            slot = old.index.doc_to_slot.get(doc)
+            if slot is None or not old.providers.live[slot]:
+                continue
+            vec = old.providers.vectors[slot][None, :]
+            dst = left if h < mid else right
+            dst.insert([doc], [h], vec)
+        self.partitions = (
+            self.partitions[:j] + [left, right] + self.partitions[j + 1 :]
+        )
+        self.splits += 1
+
+    def merge(self, j: int):
+        """Merge partitions j and j+1 (adjacent ranges) — scale-in."""
+        a, b = self.partitions[j], self.partitions[j + 1]
+        assert a.hi == b.lo, "only adjacent ranges merge"
+        big = PhysicalPartition(self.cfg, a.lo, b.hi, self._next_pid)
+        self._next_pid += 1
+        for src in (a, b):
+            for doc, h in src.doc_pk.items():
+                slot = src.index.doc_to_slot.get(doc)
+                if slot is None or not src.providers.live[slot]:
+                    continue
+                big.insert([doc], [h], src.providers.vectors[slot][None, :])
+        self.partitions = self.partitions[:j] + [big] + self.partitions[j + 2 :]
+        self.merges += 1
+
+    @property
+    def num_docs(self) -> int:
+        return sum(p.num_docs for p in self.partitions)

@@ -1,0 +1,105 @@
+"""Replica sets — availability and durability (§2.2, §5.3).
+
+Cosmos DB keeps four data replicas per partition by default (vs. one in
+Pinecone serverless — a point §5.3 presses). We model the replica-set
+control plane faithfully enough to demonstrate the fault-tolerance story:
+
+  * quorum writes: an insert acks after ⌈(R+1)/2⌉ replicas apply it; lagging
+    replicas catch up from the WAL;
+  * failover: killing the primary promotes the most-caught-up secondary;
+    a replacement replica rebuilds from snapshot + WAL replay;
+  * read spreading: queries round-robin over healthy replicas, which is
+    what fan-out hedging exploits for stragglers.
+
+One authoritative StoreProviderSet holds the data; replicas are modeled as
+(applied-LSN, alive) cursors over its WAL — the realistic bookkeeping
+without 4× memory. `rebuild()` exercises the real snapshot/WAL recovery
+path from repro.store.provider.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ReplicaState:
+    rid: int
+    alive: bool = True
+    applied_lsn: int = 0
+
+
+class ReplicaSet:
+    def __init__(self, partition, num_replicas: int = 4):
+        self.partition = partition  # PhysicalPartition with StoreProviderSet
+        self.replicas = [ReplicaState(i) for i in range(num_replicas)]
+        self.primary = 0
+        self.lsn = 0
+        self.failovers = 0
+        self._rr = 0
+
+    # ------------------------------------------------------------------
+    @property
+    def quorum(self) -> int:
+        return len(self.replicas) // 2 + 1
+
+    def healthy(self) -> list[ReplicaState]:
+        return [r for r in self.replicas if r.alive]
+
+    # ------------------------------------------------------------------
+    def insert(self, doc_ids, pk_hashes, vectors: np.ndarray):
+        """Write through the primary; ack at quorum."""
+        if not self.replicas[self.primary].alive:
+            self.failover()
+        out = self.partition.insert(doc_ids, pk_hashes, vectors)
+        self.lsn += 1
+        acked = 0
+        for r in self.healthy():
+            r.applied_lsn = self.lsn  # synchronous apply in-model
+            acked += 1
+        if acked < self.quorum:
+            raise RuntimeError(
+                f"write cannot reach quorum ({acked}/{self.quorum}) — partition offline"
+            )
+        return out
+
+    def search(self, queries, k, L=None, **kw):
+        """Read-spread across healthy replicas (round robin)."""
+        healthy = self.healthy()
+        if not healthy:
+            raise RuntimeError("no healthy replicas")
+        self._rr = (self._rr + 1) % len(healthy)
+        return self.partition.search(queries, k, L, **kw)
+
+    # ------------------------------------------------------------------
+    # failures
+    # ------------------------------------------------------------------
+    def kill(self, rid: int):
+        self.replicas[rid].alive = False
+        if rid == self.primary:
+            self.failover()
+
+    def failover(self):
+        """Promote the most-caught-up healthy secondary."""
+        healthy = self.healthy()
+        if not healthy:
+            raise RuntimeError("total partition loss")
+        self.primary = max(healthy, key=lambda r: r.applied_lsn).rid
+        self.failovers += 1
+
+    def rebuild(self, rid: int):
+        """Replace a dead replica: snapshot + WAL replay through the real
+        recovery path, then mark caught up."""
+        pv = self.partition.providers
+        snap = pv.snapshot_bytes()
+        wal = pv.wal_bytes()
+        fresh = type(pv)(
+            pv.neighbors.shape[0], pv.neighbors.shape[1],
+            pv.codes.shape[1], pv.vectors.shape[1],
+        )
+        fresh.recover(snap, wal)
+        assert np.array_equal(fresh.live, pv.live)
+        self.replicas[rid].alive = True
+        self.replicas[rid].applied_lsn = self.lsn
+        return fresh

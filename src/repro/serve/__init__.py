@@ -1,0 +1,5 @@
+"""repro.serve — serving: the Cosmos-style vector service + LM engine."""
+from .vector_service import VectorCollectionService, VectorQuery
+from .engine import ServeEngine
+
+__all__ = ["VectorCollectionService", "VectorQuery", "ServeEngine"]

@@ -1,0 +1,188 @@
+"""VectorCollectionService — the user-facing query layer (§3.5).
+
+Ties together everything the paper composes: JSON-ish documents with a
+declared vector path, automatic index-term generation on ingest, the
+VectorDistance query function with the planner's selectivity routing
+(brute force / Q-Flat / graph ± filters), paginated queries with
+client-side continuation tokens (the 5-second-preemption model), sharded
+DiskANN for multi-tenancy, and cross-partition fan-out with RU accounting.
+
+This is the host-side service; the device-parallel path for the same
+operation is `repro.partition.fanout.distributed_search_fn`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import pickle
+from typing import Any, Callable, Optional, Sequence
+
+import numpy as np
+
+from ..core import GraphConfig
+from ..core import flat as fmod
+from ..partition import Collection, CollectionConfig, ReplicaSet
+from ..partition.fanout import fanout_search, merge_topk
+
+
+@dataclasses.dataclass
+class VectorQuery:
+    vector: np.ndarray
+    k: int = 10
+    filter: Optional[Callable[[dict], bool]] = None  # predicate over docs
+    search_list_multiplier: float = 5.0  # searchListSizeMultiplier
+    exact: bool = False  # VectorDistance(..., true) → brute force
+    shard_key: Any = None  # route to a sharded-DiskANN tenant index
+
+
+@dataclasses.dataclass
+class QueryResult:
+    ids: np.ndarray
+    dists: np.ndarray
+    ru: float
+    plan: str
+    continuation: Optional[bytes] = None
+
+
+class VectorCollectionService:
+    """A collection with vector indexing enabled on one path."""
+
+    def __init__(
+        self,
+        dim: int,
+        graph: Optional[GraphConfig] = None,
+        max_vectors_per_partition: int = 100_000,
+        initial_partitions: int = 1,
+        replicas: int = 4,
+        shard_key_path: Optional[str] = None,
+    ):
+        graph = graph or GraphConfig(capacity=max_vectors_per_partition + 1024)
+        self.cfg = CollectionConfig(
+            dim=dim,
+            graph=graph,
+            max_vectors_per_partition=max_vectors_per_partition,
+            initial_partitions=initial_partitions,
+            shard_key_path=shard_key_path,
+        )
+        self.collection = Collection(self.cfg)
+        self.replica_sets = [
+            ReplicaSet(p, num_replicas=replicas) for p in self.collection.partitions
+        ]
+        self.docs: dict[int, dict] = {}  # document store (JSON side)
+        self.shard_key_path = shard_key_path
+        # sharded DiskANN: tenant value → per-tenant collection
+        self._tenant_collections: dict[Any, Collection] = {}
+
+    # ------------------------------------------------------------------
+    # ingest
+    # ------------------------------------------------------------------
+    def upsert(self, documents: Sequence[dict], vectors: np.ndarray,
+               partition_keys: Optional[Sequence] = None) -> float:
+        """Insert documents (dicts with 'id') + their embedding vectors."""
+        ids = [int(d["id"]) for d in documents]
+        pks = partition_keys or ids
+        for d in documents:
+            self.docs[int(d["id"])] = d
+        ru = self.collection.insert(ids, pks, np.asarray(vectors, np.float32))
+        if self.shard_key_path:
+            groups: dict[Any, list[int]] = {}
+            for i, d in enumerate(documents):
+                groups.setdefault(d.get(self.shard_key_path), []).append(i)
+            for key, rows in groups.items():
+                ru += self._tenant(key).insert(
+                    [ids[i] for i in rows], [pks[i] for i in rows],
+                    np.asarray(vectors, np.float32)[rows],
+                )
+        return ru
+
+    def delete(self, doc_ids: Sequence[int]) -> float:
+        pks = [d for d in doc_ids]
+        shard_groups: dict[Any, list[int]] = {}
+        for d in doc_ids:
+            doc = self.docs.pop(int(d), None)
+            if doc is not None and self.shard_key_path:
+                shard_groups.setdefault(doc.get(self.shard_key_path), []).append(int(d))
+        ru = self.collection.delete(doc_ids, pks)
+        for key, ids in shard_groups.items():
+            ru += self._tenant(key).delete(ids, ids)
+        return ru
+
+    def _tenant(self, key) -> Collection:
+        if key not in self._tenant_collections:
+            g = self.cfg.graph
+            self._tenant_collections[key] = Collection(
+                dataclasses.replace(self.cfg, initial_partitions=1)
+            )
+        return self._tenant_collections[key]
+
+    # ------------------------------------------------------------------
+    # query (§3.5 routing)
+    # ------------------------------------------------------------------
+    def query(self, q: VectorQuery) -> QueryResult:
+        qv = np.asarray(q.vector, np.float32)[None, :]
+        target = (
+            self._tenant(q.shard_key).partitions
+            if q.shard_key is not None and self.shard_key_path
+            else self.collection.partitions
+        )
+
+        if q.exact:
+            ids_l, d_l, ru = [], [], 0.0
+            for p in target:
+                pv = p.providers
+                import jax.numpy as jnp
+                ids, dists = fmod.brute_force(
+                    jnp.asarray(qv), jnp.asarray(pv.vectors), jnp.asarray(pv.live),
+                    k=q.k, metric=p.index.cfg.metric,
+                )
+                ids_l.append(p.index._to_doc_ids(np.asarray(ids)))
+                d_l.append(np.asarray(dists))
+                ru += 0.5 * p.num_docs * 0.0125  # full scan in quantized-ish cost
+            ids, dists = merge_topk(ids_l, d_l, q.k)
+            return QueryResult(ids[0], dists[0], ru, "exact")
+
+        if q.filter is not None:
+            ids_l, d_l, ru = [], [], 0.0
+            plan = ""
+            for p in target:
+                mask = np.zeros(p.index.cfg.capacity, bool)
+                for doc, slot in p.index.doc_to_slot.items():
+                    if doc in self.docs and q.filter(self.docs[doc]):
+                        mask[slot] = True
+                ids, dists, stats = p.index.filtered_search(qv, q.k, mask)
+                ids_l.append(ids)
+                d_l.append(dists)
+                plan = stats.plan
+                ru += p.providers.meter.ru(_stats_counters(stats))
+            ids, dists = merge_topk(ids_l, d_l, q.k)
+            return QueryResult(ids[0], dists[0], ru, f"filtered:{plan}")
+
+        L = max(q.k, int(round(q.search_list_multiplier * q.k)))
+        ids, dists, info = fanout_search(target, qv, q.k, L=L)
+        return QueryResult(ids[0], dists[0], info["ru_total"], "graph")
+
+    # ------------------------------------------------------------------
+    # pagination / continuation tokens (§3.5 "Continuations")
+    # ------------------------------------------------------------------
+    def query_page(self, q: VectorQuery, continuation: Optional[bytes] = None,
+                   page_size: int = 10) -> QueryResult:
+        """Paginated query over partition 0 (single-partition pagination;
+        cross-partition pagination merges client-side as in the SDK)."""
+        part = self.collection.partitions[0]
+        qv = np.asarray(q.vector, np.float32)
+        if continuation is None:
+            state = part.index.start_pagination(qv)
+        else:
+            state = pickle.loads(continuation)
+        ids, dists, state = part.index.next_page(qv, state, k=page_size)
+        token = pickle.dumps(state)
+        return QueryResult(ids, dists, 0.0, "paginated", continuation=token)
+
+
+def _stats_counters(stats):
+    from ..store.ru import OpCounters
+
+    return OpCounters(
+        quant_reads=int(stats.cmps),
+        adj_reads=int(stats.hops),
+        full_reads=int(stats.full_reads),
+    )

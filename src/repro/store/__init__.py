@@ -1,0 +1,34 @@
+"""repro.store — the Bw-Tree analogue, index-term encodings, RU governance.
+
+The paper stores DiskANN's index terms as key-value pairs in Cosmos DB's
+Bw-Tree (§3.3): quantized vectors as *inverted terms*, adjacency lists as a
+new *forward term* kind supporting blind incremental appends that are merged
+at consolidation time. This package reproduces the pieces the paper's
+behaviour depends on:
+
+    bwtree.py    ordered pages + delta chains (blind appends), consolidation
+                 at max chain length (15 in §4), page cache with hit/miss
+                 accounting, prefix seek / range scan
+    terms.py     term-key encodings of Fig 4 / Appendix C (path-hash prefix,
+                 type marker, doc id, shard-key prefix for sharded DiskANN)
+    ru.py        Request Units: the paper's normalized cost currency, with
+                 constants calibrated to §4's published operating points
+    provider.py  StoreProviderSet — the Provider traits backed by the store,
+                 write-through into the dense-array cache the jitted
+                 kernels consume
+"""
+from .bwtree import BwTree, BwTreeStats
+from .terms import TermCodec, QUANT_TERM, ADJ_TERM
+from .ru import RUMeter, RUConfig
+from .provider import StoreProviderSet
+
+__all__ = [
+    "BwTree",
+    "BwTreeStats",
+    "TermCodec",
+    "QUANT_TERM",
+    "ADJ_TERM",
+    "RUMeter",
+    "RUConfig",
+    "StoreProviderSet",
+]

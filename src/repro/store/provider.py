@@ -1,0 +1,177 @@
+"""StoreProviderSet — Provider traits backed by the Bw-Tree analogue.
+
+The write path mirrors Fig 15: the index orchestrator calls the Provider,
+which encodes index terms (terms.py) into the Bw-Tree (durability + RU
+metering) and writes through to the dense-array cache the jitted kernels
+consume. Reads for the query hot path come from the cache (as in the paper,
+where the Bw-Tree cache holds the quantized + adjacency terms, §4); the
+store read path exists for cold reads and for benchmarks that need page /
+chain-length accounting (Figs 11-12).
+
+A write-ahead log provides crash recovery: `snapshot()` + WAL replay
+reconstructs both the store and the cache (tests/test_store.py exercises
+kill-and-recover).
+"""
+from __future__ import annotations
+
+import pickle
+from typing import Optional
+
+import numpy as np
+
+from ..core.providers import ArrayProviderSet, Context
+from .bwtree import BwTree
+from .ru import OpCounters, RUConfig, RUMeter
+from .terms import TermCodec, merge_adjacency
+
+
+class StoreProviderSet(ArrayProviderSet):
+    """Write-through providers: Bw-Tree terms + dense cache + RU meter."""
+
+    def __init__(
+        self,
+        capacity: int,
+        R_slack: int,
+        M: int,
+        dim: int,
+        path: str = "/embedding",
+        ru: Optional[RUMeter] = None,
+        cache_pages: int = 1 << 30,
+        wal: bool = True,
+    ):
+        super().__init__(capacity, R_slack, M, dim)
+        self.tree = BwTree(merge_fn=merge_adjacency, cache_pages=cache_pages)
+        self.codec = TermCodec(path)
+        self.meter = ru or RUMeter(RUConfig())
+        self.op = OpCounters()  # counters for the current logical operation
+        self._wal: list[tuple] | None = [] if wal else None
+
+    # ------------------------------------------------------------------
+    def begin_op(self):
+        self.op = OpCounters()
+
+    def end_op(self) -> tuple[float, float]:
+        """Returns (RU charge, modelled latency ms) for the finished op."""
+        before = (self.tree.stats.page_reads, self.tree.stats.cache_misses,
+                  self.tree.stats.delta_traversals)
+        self.op.page_reads = self.tree.stats.page_reads
+        self.op.cache_misses = self.tree.stats.cache_misses
+        self.op.chain_records = self.tree.stats.delta_traversals
+        self.tree.stats.reset()
+        ru = self.meter.charge(self.op)
+        lat = self.meter.latency_ms(self.op)
+        return ru, lat
+
+    def _log(self, *entry):
+        if self._wal is not None:
+            self._wal.append(entry)
+
+    # ------------------------------------------------------------------
+    # neighbor (forward) terms
+    # ------------------------------------------------------------------
+    def set_neighbors(self, ctx: Context, ids, rows):
+        super().set_neighbors(ctx, ids, rows)
+        rows = np.asarray(rows)
+        for i, node in enumerate(np.asarray(ids)):
+            row = rows[i]
+            docs = [int(x) for x in row[row >= 0]]
+            self.tree.upsert(
+                self.codec.adj_key(int(node), ctx.shard_key),
+                self.codec.encode_adjacency(docs),
+            )
+            self.op.adj_writes += 1
+        self._log("set_neighbors", np.asarray(ids).copy(), rows.copy())
+
+    def append_neighbors(self, ctx: Context, node: int, new_ids):
+        fitted = super().append_neighbors(ctx, node, new_ids)
+        # blind incremental update — the paper's fast append path
+        self.tree.append(
+            self.codec.adj_key(int(node), ctx.shard_key),
+            self.codec.encode_adjacency([int(x) for x in new_ids[:fitted]]),
+        )
+        self.op.adj_writes += 1
+        self._log("append_neighbors", int(node), np.asarray(new_ids[:fitted]).copy())
+        return fitted
+
+    def read_neighbors_from_store(self, ctx: Context, node: int) -> list[int]:
+        self.op.adj_reads += 1
+        v = self.tree.get(self.codec.adj_key(int(node), ctx.shard_key))
+        return self.codec.decode_adjacency(v) if v else []
+
+    # ------------------------------------------------------------------
+    # quantized (inverted) terms
+    # ------------------------------------------------------------------
+    def set_quant(self, ctx: Context, ids, codes, versions):
+        super().set_quant(ctx, ids, codes, versions)
+        codes = np.asarray(codes)
+        versions = np.asarray(versions)
+        for i, node in enumerate(np.asarray(ids)):
+            self.tree.upsert(
+                self.codec.quant_key(int(node), ctx.shard_key),
+                self.codec.encode_quant_value(codes[i].tobytes(), int(versions[i])),
+            )
+            self.op.quant_writes += 1
+        self._log("set_quant", np.asarray(ids).copy(), codes.copy(), versions.copy())
+
+    def read_quant_from_store(self, ctx: Context, node: int):
+        self.op.quant_reads += 1
+        v = self.tree.get(self.codec.quant_key(int(node), ctx.shard_key))
+        if v is None:
+            return None
+        codes, ver = self.codec.decode_quant_value(v)
+        return np.frombuffer(codes, np.uint8), ver
+
+    # ------------------------------------------------------------------
+    # document store (full vectors)
+    # ------------------------------------------------------------------
+    def set_full(self, ctx: Context, ids, vecs):
+        super().set_full(ctx, ids, vecs)
+        vecs = np.asarray(vecs)
+        self.op.doc_writes += len(np.asarray(ids))
+        self.op.vector_kb += vecs.nbytes / 1024.0
+        self._log("set_full", np.asarray(ids).copy(), vecs.copy())
+
+    def get_full(self, ctx: Context, ids):
+        self.op.full_reads += len(np.asarray(ids))
+        return super().get_full(ctx, ids)
+
+    def set_live(self, ctx: Context, ids, value: bool):
+        super().set_live(ctx, ids, value)
+        self._log("set_live", np.asarray(ids).copy(), value)
+
+    # ------------------------------------------------------------------
+    # durability: snapshot + WAL replay
+    # ------------------------------------------------------------------
+    def snapshot_bytes(self) -> bytes:
+        state = dict(
+            neighbors=self.neighbors,
+            codes=self.codes,
+            versions=self.versions,
+            live=self.live,
+            vectors=self.vectors,
+            tree=self.tree,  # the durable term state itself
+        )
+        if self._wal is not None:
+            self._wal = []
+        return pickle.dumps(state)
+
+    def wal_bytes(self) -> bytes:
+        return pickle.dumps(self._wal or [])
+
+    def recover(self, snapshot: bytes, wal: bytes, ctx: Context = Context()):
+        state = pickle.loads(snapshot)
+        self.neighbors[:] = state["neighbors"]
+        self.codes[:] = state["codes"]
+        self.versions[:] = state["versions"]
+        self.live[:] = state["live"]
+        self.vectors[:] = state["vectors"]
+        self.tree = state["tree"]
+        self._dirty()
+        entries = pickle.loads(wal)
+        saved_wal, self._wal = self._wal, None  # don't re-log during replay
+        try:
+            for entry in entries:
+                op, *args = entry
+                getattr(self, op)(ctx, *args)
+        finally:
+            self._wal = [] if saved_wal is not None else None

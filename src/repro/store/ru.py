@@ -1,0 +1,136 @@
+"""Request Units — Cosmos DB's normalized cost currency (§2.2), calibrated.
+
+RUs abstract CPU, IOPS and memory; the Resource Governance component
+guarantees provisioned RU/s per partition and throttles beyond it. The
+paper publishes enough operating points to calibrate a linear RU model over
+the index-term access counters our store/search paths expose:
+
+    Table 1: ~70 RU per query   (10M × 768D, default settings)
+    Table 2: ~65 RU per insert  (768D, R=32, L_build=100)
+    §4.4:    ~3500 quantized + ~50 full-precision reads per query;
+             each insert touches ≈ R·L_build quantized vectors and ≈L_build
+             adjacency lists; 10 µs / 25 µs per quantized / adjacency read;
+             ~3 ms CPU in the DiskANN library per insert
+    Fig 7/8: query RU grows < 2× for 100× more vectors (logarithmic hops)
+
+With the defaults below the modelled costs land on those points (validated
+in benchmarks/bench_cost.py), and RU-vs-L / RU-vs-N curves reproduce the
+shapes of Figs 6-8 because the underlying counters do.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class RUConfig:
+    ru_per_quant_read: float = 0.0125  # ≈80 quantized-term reads / RU
+    ru_per_adj_read: float = 0.10
+    ru_per_full_read: float = 0.50  # document-store vector load
+    ru_per_quant_write: float = 0.50
+    ru_per_adj_write: float = 0.30  # incl. blind appends
+    ru_per_doc_write: float = 5.0  # the transactional document write
+    ru_per_cpu_ms: float = 0.50
+    ru_per_page_read: float = 0.005  # Bw-Tree page touch (cache-miss extra)
+    ru_per_cache_miss: float = 0.05
+    # upfront vector charge (§3.4 "Upfront charging"): per KB of vector
+    ru_upfront_per_kb: float = 1.0
+
+    # latency model (paper §4.4 micro-measurements)
+    us_per_quant_read: float = 10.0
+    us_per_adj_read: float = 25.0
+    us_per_full_read: float = 100.0  # random document-store access
+    us_per_chain_record: float = 0.8  # extra per delta-chain record walked
+
+
+@dataclasses.dataclass
+class OpCounters:
+    quant_reads: int = 0
+    adj_reads: int = 0
+    full_reads: int = 0
+    quant_writes: int = 0
+    adj_writes: int = 0
+    doc_writes: int = 0
+    cpu_ms: float = 0.0
+    page_reads: int = 0
+    cache_misses: int = 0
+    chain_records: int = 0
+    vector_kb: float = 0.0
+
+    def __iadd__(self, o: "OpCounters"):
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, getattr(self, f.name) + getattr(o, f.name))
+        return self
+
+
+class RUMeter:
+    """Accumulates per-operation counters and converts to RUs / latency."""
+
+    def __init__(self, cfg: RUConfig = RUConfig()):
+        self.cfg = cfg
+        self.total = OpCounters()
+
+    def charge(self, c: OpCounters) -> float:
+        self.total += c
+        return self.ru(c)
+
+    def ru(self, c: OpCounters) -> float:
+        g = self.cfg
+        return (
+            g.ru_per_quant_read * c.quant_reads
+            + g.ru_per_adj_read * c.adj_reads
+            + g.ru_per_full_read * c.full_reads
+            + g.ru_per_quant_write * c.quant_writes
+            + g.ru_per_adj_write * c.adj_writes
+            + g.ru_per_doc_write * c.doc_writes
+            + g.ru_per_cpu_ms * c.cpu_ms
+            + g.ru_per_page_read * c.page_reads
+            + g.ru_per_cache_miss * c.cache_misses
+            + g.ru_upfront_per_kb * c.vector_kb
+        )
+
+    def latency_ms(self, c: OpCounters) -> float:
+        """Modelled single-thread latency (the paper's ≈25 ms/insert napkin
+        math in §4.4 falls out of these constants)."""
+        g = self.cfg
+        us = (
+            g.us_per_quant_read * c.quant_reads
+            + g.us_per_adj_read * c.adj_reads
+            + g.us_per_full_read * c.full_reads
+            + g.us_per_chain_record * c.chain_records
+        )
+        return us / 1000.0 + c.cpu_ms
+
+
+class ResourceGovernor:
+    """Provisioned-throughput governance (§2.2): grants RU budget per
+    second of simulated time; callers exceeding it are throttled (made to
+    wait), which is how background graph maintenance is paced so it can
+    catch up with transactions (§3.4)."""
+
+    def __init__(self, provisioned_ru_s: float):
+        self.provisioned = provisioned_ru_s
+        self.clock_s = 0.0
+        self.available = provisioned_ru_s
+        self.throttle_events = 0
+        self.consumed = 0.0
+
+    def request(self, ru: float) -> float:
+        """Consume `ru`; returns seconds of throttle delay incurred."""
+        delay = 0.0
+        while ru > self.available:
+            deficit = ru - self.available
+            wait = deficit / self.provisioned
+            delay += wait
+            self.clock_s += wait
+            self.available += wait * self.provisioned
+            self.throttle_events += 1
+        self.available -= ru
+        self.consumed += ru
+        return delay
+
+    def advance(self, seconds: float):
+        self.clock_s += seconds
+        self.available = min(
+            self.available + seconds * self.provisioned, self.provisioned
+        )

@@ -1,0 +1,6 @@
+"""repro.train — optimizer, data pipeline, checkpointing, compression."""
+from .optimizer import OptConfig, OptState, adamw_update, init_opt_state
+from . import checkpoint, compression, data
+
+__all__ = ["OptConfig", "OptState", "adamw_update", "init_opt_state",
+           "checkpoint", "compression", "data"]

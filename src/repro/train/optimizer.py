@@ -1,0 +1,94 @@
+"""AdamW with warmup-cosine schedule, global-norm clipping, and optional
+low-precision second moments (a beyond-paper memory lever recorded in
+EXPERIMENTS.md §Perf).
+
+Master arithmetic in f32 regardless of param dtype (bf16 params get f32
+updates cast back), which is what makes bf16-parameter training of the
+235B MoE fit HBM.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    m_dtype: str = "float32"
+    v_dtype: str = "float32"
+
+
+class OptState(NamedTuple):
+    m: Any
+    v: Any
+    step: jax.Array
+
+
+def _dt(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[name]
+
+
+def init_opt_state(params: Any, cfg: OptConfig) -> OptState:
+    m = jax.tree.map(lambda p: jnp.zeros(p.shape, _dt(cfg.m_dtype)), params)
+    v = jax.tree.map(lambda p: jnp.zeros(p.shape, _dt(cfg.v_dtype)), params)
+    return OptState(m=m, v=v, step=jnp.int32(0))
+
+
+def lr_schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(grads: Any) -> jax.Array:
+    leaves = jax.tree.leaves(grads)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+
+
+def adamw_update(
+    params: Any, grads: Any, state: OptState, cfg: OptConfig
+) -> tuple[Any, OptState, dict]:
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = lr_schedule(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = m.astype(jnp.float32) * cfg.b1 + g * (1.0 - cfg.b1)
+        v32 = v.astype(jnp.float32) * cfg.b2 + g * g * (1.0 - cfg.b2)
+        mhat = m32 / b1c
+        vhat = v32 / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        decay = cfg.weight_decay if p.ndim >= 2 else 0.0
+        new_p = p.astype(jnp.float32) - lr * (delta + decay * p.astype(jnp.float32))
+        return new_p.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    new = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([x[0] for x in new])
+    new_m = tdef.unflatten([x[1] for x in new])
+    new_v = tdef.unflatten([x[2] for x in new])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, OptState(m=new_m, v=new_v, step=step), metrics

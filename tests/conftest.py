@@ -1,0 +1,17 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests run on the host's real
+device(s); only launch/dryrun.py fakes 512 devices."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.RandomState(0)
+
+
+def clustered_data(rng, n, dim, n_clusters=16, spread=0.15):
+    """Clustered synthetic vectors — realistic-ish geometry for ANN tests
+    (uniform gaussians are adversarial for PQ)."""
+    centers = rng.randn(n_clusters, dim).astype(np.float32)
+    assign = rng.randint(0, n_clusters, n)
+    return (centers[assign] + spread * rng.randn(n, dim)).astype(np.float32)

@@ -1,0 +1,197 @@
+"""DiskANN algorithm tests: search recall, prune invariants, deletes,
+pagination, filters. Uses networkx to check structural graph properties."""
+import jax
+import jax.numpy as jnp
+import networkx as nx
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import GraphConfig, DiskANNIndex
+from repro.core import prune as prmod
+from repro.core import recall as rec
+from repro.core.graph import bitmap_init, bitmap_set, bitmap_test
+
+from conftest import clustered_data
+
+
+@pytest.fixture(scope="module")
+def built_index():
+    rng = np.random.RandomState(7)
+    N, D = 2000, 32
+    data = clustered_data(rng, N, D)
+    cfg = GraphConfig(capacity=N + 64, R=24, M=16, L_build=48, L_search=48,
+                      bootstrap_sample=256, refine_sample=10**9, batch_size=64)
+    idx = DiskANNIndex(cfg, D, seed=0)
+    idx.insert(list(range(N)), data)
+    return idx, data, rng
+
+
+def _queries_from(data, rng, n, noise=0.05):
+    """In-distribution queries: perturbed database points (the realistic
+    regime; fully out-of-distribution queries are a different benchmark)."""
+    pick = rng.choice(len(data), n, replace=False)
+    return (data[pick] + noise * rng.randn(n, data.shape[1])).astype(np.float32)
+
+
+def test_search_recall(built_index):
+    idx, data, rng = built_index
+    q = _queries_from(data, np.random.RandomState(99), 32)
+    ids, dists, stats = idx.search(q, k=10, L=64)
+    gt = rec.ground_truth(q, data, np.ones(len(data), bool), 10)
+    r = rec.recall_at_k(ids, gt, 10)
+    assert r >= 0.85, f"recall@10 {r}"
+    assert np.all(np.diff(dists, axis=1) >= -1e-5), "results must be sorted"
+
+
+def test_search_stats_asymmetry(built_index):
+    """§3.2: quantized reads ≫ full-precision reads (the paper's ~70×)."""
+    idx, data, rng = built_index
+    q = _queries_from(data, np.random.RandomState(5), 8)
+    _, _, stats = idx.search(q, k=10, L=64, rerank_multiplier=2.5)
+    assert stats.cmps > 4 * stats.full_reads
+
+
+def test_graph_degree_bound_and_connectivity(built_index):
+    idx, data, _ = built_index
+    nbrs = idx.pv.neighbors
+    deg = (nbrs >= 0).sum(1)
+    live = idx.pv.live
+    assert deg[live].max() <= idx.cfg.R_slack
+    # medoid reaches nearly every live node (graph navigability)
+    G = nx.DiGraph()
+    for u in np.nonzero(live)[0]:
+        for v in nbrs[u][nbrs[u] >= 0]:
+            G.add_edge(int(u), int(v))
+    reachable = nx.descendants(G, idx.medoid) | {idx.medoid}
+    frac = len(reachable & set(map(int, np.nonzero(live)[0]))) / live.sum()
+    assert frac > 0.95, f"only {frac:.2%} reachable from medoid"
+
+
+def test_robust_prune_invariants():
+    """Degree ≤ R; closest candidate always kept; no dominated survivor."""
+    rng = np.random.RandomState(3)
+    C, D, R, alpha = 40, 8, 8, 1.2
+    p = rng.randn(D).astype(np.float32)
+    cands = rng.randn(C, D).astype(np.float32)
+    ids = jnp.arange(C, dtype=jnp.int32)
+    kept = np.asarray(prmod.prune_with_vectors(
+        jnp.asarray(p), ids, jnp.asarray(cands), alpha=alpha, R=R))
+    kept_ids = kept[kept >= 0]
+    assert len(kept_ids) <= R
+    d = ((cands - p) ** 2).sum(1)
+    assert d.argmin() in kept_ids, "nearest candidate must survive"
+    # α-RNG property: for every kept q there is no EARLIER kept r with
+    # α²·d(r,q) ≤ d(p,q)
+    a2 = alpha * alpha
+    for i, qi in enumerate(kept_ids):
+        for rj in kept_ids[:i]:
+            drq = ((cands[qi] - cands[rj]) ** 2).sum()
+            assert a2 * drq > d[qi] - 1e-5, (qi, rj)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), alpha=st.floats(1.0, 2.0), r=st.sampled_from([4, 8, 16]))
+def test_property_prune_degree_bound(seed, alpha, r):
+    rng = np.random.RandomState(seed)
+    C, D = 30, 6
+    p = rng.randn(D).astype(np.float32)
+    cands = rng.randn(C, D).astype(np.float32)
+    ids = jnp.asarray(np.where(rng.rand(C) < 0.8, np.arange(C), -1).astype(np.int32))
+    kept = np.asarray(prmod.prune_with_vectors(
+        jnp.asarray(p), ids, jnp.asarray(cands), alpha=alpha, R=r))
+    kept_ids = kept[kept >= 0]
+    assert len(kept_ids) <= r
+    assert len(set(kept_ids.tolist())) == len(kept_ids), "no duplicates"
+    valid = set(np.asarray(ids)[np.asarray(ids) >= 0].tolist())
+    assert set(kept_ids.tolist()) <= valid
+
+
+def test_bitmap_ops():
+    bm = bitmap_init(1000)
+    ids = jnp.asarray([0, 31, 32, 63, 999, 999, -1], jnp.int32)
+    bm = bitmap_set(bm, ids)
+    got = np.asarray(bitmap_test(bm, jnp.asarray([0, 1, 31, 32, 63, 64, 999], jnp.int32)))
+    np.testing.assert_array_equal(got, [True, False, True, True, True, False, True])
+
+
+def test_delete_keeps_recall(built_index):
+    idx, data, _ = built_index
+    snap = idx.snapshot()
+    try:
+        victims = list(range(100, 300))
+        idx.delete(victims, policy="inplace")
+        for _ in range(3):
+            idx.consolidate()
+        live = np.ones(len(data), bool)
+        live[victims] = False
+        rs = np.random.RandomState(123)
+        pick = rs.choice(np.nonzero(live)[0], 24, replace=False)
+        q = (data[pick] + 0.05 * rs.randn(24, 32)).astype(np.float32)
+        ids, _, _ = idx.search(q, k=10, L=64)
+        for row in ids:
+            assert not (set(row.tolist()) & set(victims)), "deleted ids returned"
+        gt = rec.ground_truth(q, data, live, 10)
+        r = rec.recall_at_k(ids, gt, 10)
+        assert r >= 0.8, f"post-delete recall {r}"
+    finally:
+        idx.restore(snap)
+
+
+def test_replace_updates_results(built_index):
+    idx, data, _ = built_index
+    snap = idx.snapshot()
+    try:
+        # move doc 0 on top of doc 1500's vector: searching near it must find 0
+        target = data[1500] + 1e-3
+        idx.insert([0], target[None, :])  # replace path
+        ids, _, _ = idx.search(target[None, :], k=5, L=48)
+        assert 0 in ids[0].tolist()
+    finally:
+        idx.restore(snap)
+
+
+def test_paginated_search_disjoint_and_ordered(built_index):
+    idx, data, _ = built_index
+    q = _queries_from(data, np.random.RandomState(55), 1)[0]
+    state = idx.start_pagination(q, L=32)
+    seen, all_pages = set(), []
+    for _ in range(4):
+        ids, dists, state = idx.next_page(q, state, k=5, rerank=False)
+        page = [i for i in ids.tolist() if i >= 0]
+        assert not (set(page) & seen), "pages must not repeat results"
+        seen |= set(page)
+        all_pages.append(page)
+    assert len(seen) >= 15
+    # union of pages ≈ prefix of brute-force ranking
+    gt = rec.ground_truth(q[None], data, np.ones(len(data), bool), 20)[0]
+    overlap = len(seen & set(gt.tolist())) / 20
+    assert overlap >= 0.6, overlap
+
+
+def test_filtered_search_modes(built_index):
+    idx, data, _ = built_index
+    rng = np.random.RandomState(31)
+    doc_filter = np.zeros(idx.cfg.capacity, bool)
+    match_slots = rng.choice(len(data), 400, replace=False)
+    doc_filter[match_slots] = True
+    q = clustered_data(np.random.RandomState(77), 8, 32)
+    live = np.zeros(len(data), bool)
+    live[match_slots] = True
+    gt = rec.ground_truth(q, data, live, 5)
+    for mode in ("qflat", "post", "beta"):
+        ids, dists, stats = idx.filtered_search(q, k=5, doc_filter=doc_filter, mode=mode)
+        valid = ids[ids >= 0]
+        assert np.isin(valid, match_slots).all(), f"{mode} returned non-matching docs"
+        r = rec.recall_at_k(ids, gt, 5)
+        assert r >= 0.5, f"{mode} filtered recall {r}"
+
+
+def test_filtered_auto_routing(built_index):
+    idx, data, _ = built_index
+    few = np.zeros(idx.cfg.capacity, bool)
+    few[:50] = True  # < QFLAT_MAX_MATCHES → qflat plan
+    q = clustered_data(np.random.RandomState(2), 2, 32)
+    _, _, stats = idx.filtered_search(q, k=5, doc_filter=few, mode="auto")
+    assert stats.plan in ("qflat", "brute")

@@ -1,0 +1,165 @@
+"""Per-arch smoke tests: every assigned architecture instantiates a reduced
+config and runs one forward/train step on CPU — shapes + finiteness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.configs.shapes import SHAPES, cell_supported
+from repro.models import model as M
+from repro.train.optimizer import OptConfig, adamw_update, init_opt_state
+
+
+def _smoke_batch(cfg, rng, B=2, S=16):
+    if cfg.input_mode == "tokens":
+        return {"tokens": jnp.asarray(rng.randint(0, cfg.vocab_size, (B, S)), jnp.int32)}
+    if cfg.input_mode == "frames":
+        return {
+            "frames": jnp.asarray(rng.randn(B, S, cfg.d_model), jnp.float32),
+            "labels": jnp.asarray(rng.randint(0, cfg.vocab_size, (B, S)), jnp.int32),
+        }
+    Ni = cfg.num_image_tokens
+    return {
+        "tokens": jnp.asarray(rng.randint(0, cfg.vocab_size, (B, S - Ni)), jnp.int32),
+        "image_embeds": jnp.asarray(rng.randn(B, Ni, cfg.d_model), jnp.float32),
+    }
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    rng = np.random.RandomState(hash(arch) % 2**31)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    batch = _smoke_batch(cfg, rng)
+
+    logits, mask, aux = M.forward_train(params, cfg, batch, remat="none")
+    B = next(iter(batch.values())).shape[0]
+    S_total = 16
+    assert logits.shape == (B, S_total, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite logits"
+
+    # one real optimizer step decreases nothing catastrophic
+    opt_cfg = OptConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    opt = init_opt_state(params, opt_cfg)
+    loss0, grads = jax.value_and_grad(
+        lambda p: M.loss_fn(p, cfg, batch, remat="none")[0]
+    )(params)
+    assert bool(jnp.isfinite(loss0)), arch
+    gnorms = [float(jnp.abs(g).max()) for g in jax.tree.leaves(grads)]
+    assert all(np.isfinite(gnorms)), f"{arch}: non-finite grads"
+    new_params, opt, metrics = adamw_update(params, grads, opt, opt_cfg)
+    loss1 = M.loss_fn(new_params, cfg, batch, remat="none")[0]
+    assert bool(jnp.isfinite(loss1)), arch
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCH_IDS])
+def test_smoke_decode_consistency(arch):
+    cfg = get_smoke_config(arch)
+    if not cfg.has_decode:
+        pytest.skip("encoder-only")
+    rng = np.random.RandomState(0)
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    batch = _smoke_batch(cfg, rng, B=2, S=16)
+    logits, _, _ = M.forward_train(params, cfg, batch, remat="none")
+    cache = M.init_cache(cfg, 2, 32, dtype=jnp.float32)
+    pl, cache = M.prefill(params, cfg, batch, cache)
+    np.testing.assert_allclose(
+        np.asarray(pl[:, 0]), np.asarray(logits[:, -1]), rtol=3e-2, atol=3e-2
+    )
+
+
+def test_full_configs_match_assignment():
+    """The full configs carry the exact assigned hyperparameters."""
+    spec = {
+        "starcoder2-15b": (40, 6144, 48, 4, 24576, 49152),
+        "chatglm3-6b": (28, 4096, 32, 2, 13696, 65024),
+        "qwen3-14b": (40, 5120, 40, 8, 17408, 151936),
+        "smollm-135m": (30, 576, 9, 3, 1536, 49152),
+        "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151936),
+        "deepseek-v2-lite-16b": (27, 2048, 16, 16, 1408, 102400),
+        "hubert-xlarge": (48, 1280, 16, 16, 5120, 504),
+        "paligemma-3b": (18, 2048, 8, 1, 16384, 257216),
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+        "rwkv6-7b": (32, 4096, 64, 64, 14336, 65536),
+    }
+    for arch, (L, dm, H, Hkv, dff, V) in spec.items():
+        cfg = get_config(arch)
+        got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+               cfg.d_ff, cfg.vocab_size)
+        assert got == (L, dm, H, Hkv, dff, V), f"{arch}: {got}"
+    assert get_config("qwen3-moe-235b-a22b").moe.num_experts == 128
+    assert get_config("qwen3-moe-235b-a22b").moe.top_k == 8
+    assert get_config("deepseek-v2-lite-16b").mla.kv_lora_rank == 512
+    assert get_config("deepseek-v2-lite-16b").moe.top_k == 6
+    assert get_config("zamba2-1.2b").ssm.d_state == 64
+    assert get_config("rwkv6-7b").family == "ssm"
+    assert not get_config("hubert-xlarge").causal
+
+
+def test_cell_support_matrix():
+    """40 cells; skips exactly where the assignment says."""
+    total, skipped = 0, []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shp in SHAPES.values():
+            total += 1
+            ok, why = cell_supported(cfg, shp)
+            if not ok:
+                skipped.append((arch, shp.name))
+    assert total == 40
+    assert ("hubert-xlarge", "decode_32k") in skipped
+    assert ("hubert-xlarge", "long_500k") in skipped
+    long_runners = {a for a in ARCH_IDS
+                    if cell_supported(get_config(a), SHAPES["long_500k"])[0]}
+    assert long_runners == {"zamba2-1.2b", "rwkv6-7b"}
+    assert len(skipped) == 9  # 8 long_500k skips + hubert decode_32k
+
+
+def test_param_counts_plausible():
+    """Analytic param counts within tolerance of the advertised sizes."""
+    approx = {
+        "starcoder2-15b": 15e9, "chatglm3-6b": 6e9, "qwen3-14b": 14e9,
+        "smollm-135m": 135e6, "deepseek-v2-lite-16b": 16e9,
+        "paligemma-3b": 3e9, "zamba2-1.2b": 1.2e9, "rwkv6-7b": 7e9,
+    }
+    for arch, want in approx.items():
+        got = get_config(arch).param_count()
+        assert 0.4 * want < got < 2.1 * want, f"{arch}: {got:.3g} vs {want:.3g}"
+    moe = get_config("qwen3-moe-235b-a22b")
+    assert 120e9 < moe.param_count() < 300e9
+    assert moe.active_param_count() < 40e9
+
+
+def test_chunked_attention_equivalence():
+    """attn_q_chunk (flash-style blocking) computes identical attention."""
+    import dataclasses
+    cfg = get_smoke_config("qwen3-14b")
+    p = M.init_params(jax.random.PRNGKey(3), cfg)
+    rng = np.random.RandomState(3)
+    batch = {"tokens": jnp.asarray(rng.randint(0, cfg.vocab_size, (2, 32)), jnp.int32)}
+    full = M.forward_train(p, dataclasses.replace(cfg, attn_q_chunk=0), batch, remat="none")[0]
+    for qc in (8, 16):
+        chunked = M.forward_train(
+            p, dataclasses.replace(cfg, attn_q_chunk=qc), batch, remat="none")[0]
+        np.testing.assert_allclose(np.asarray(full), np.asarray(chunked),
+                                   rtol=1e-4, atol=1e-4)
+    # unrolled chunk loop (dry-run variant path) identical too; force_unroll
+    # changes the params *structure* (per-layer segments), so re-init with
+    # the same key — per-layer values are identical
+    cfg_u = dataclasses.replace(cfg, attn_q_chunk=8, force_unroll=True)
+    p_u = M.init_params(jax.random.PRNGKey(3), cfg_u)
+    unrolled = M.forward_train(p_u, cfg_u, batch, remat="none")[0]
+    np.testing.assert_allclose(np.asarray(full), np.asarray(unrolled),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_mla_chunked_equivalence():
+    import dataclasses
+    cfg = get_smoke_config("deepseek-v2-lite-16b")
+    p = M.init_params(jax.random.PRNGKey(4), cfg)
+    rng = np.random.RandomState(4)
+    batch = {"tokens": jnp.asarray(rng.randint(0, cfg.vocab_size, (2, 32)), jnp.int32)}
+    full = M.forward_train(p, dataclasses.replace(cfg, attn_q_chunk=0), batch, remat="none")[0]
+    chunked = M.forward_train(p, dataclasses.replace(cfg, attn_q_chunk=8), batch, remat="none")[0]
+    np.testing.assert_allclose(np.asarray(full), np.asarray(chunked), rtol=1e-4, atol=1e-4)

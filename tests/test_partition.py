@@ -1,0 +1,104 @@
+"""Scale-out: partitioning, splits/merges, fan-out merge, replicas, hedging."""
+import numpy as np
+import pytest
+
+from repro.core import GraphConfig
+from repro.core import recall as rec
+from repro.partition import Collection, CollectionConfig, ReplicaSet
+from repro.partition.fanout import fanout_search, merge_topk
+
+from conftest import clustered_data
+
+
+def _collection(rng, n=600, dim=16, max_per=300, parts=2):
+    g = GraphConfig(capacity=max_per + 128, R=16, M=8, L_build=32, L_search=48,
+                    bootstrap_sample=64, refine_sample=10**9, batch_size=40)
+    cc = CollectionConfig(dim=dim, graph=g, max_vectors_per_partition=max_per,
+                          initial_partitions=parts)
+    col = Collection(cc)
+    data = clustered_data(rng, n, dim)
+    col.insert(list(range(n)), [f"pk{i%11}" for i in range(n)], data)
+    return col, data
+
+
+def test_merge_topk_equals_global():
+    """Property: merging per-partition exact top-k == global exact top-k."""
+    rng = np.random.RandomState(1)
+    q = rng.randn(3, 8).astype(np.float32)
+    parts = [rng.randn(50, 8).astype(np.float32) for _ in range(4)]
+    ids_l, d_l = [], []
+    base = 0
+    alld, allid = [], []
+    for p in parts:
+        d = ((q[:, None, :] - p[None]) ** 2).sum(-1)
+        order = np.argsort(d, 1)[:, :5]
+        ids_l.append(order + base)
+        d_l.append(np.take_along_axis(d, order, 1))
+        alld.append(d)
+        allid.append(np.arange(base, base + len(p)))
+        base += len(p)
+    gids, gd = merge_topk(ids_l, d_l, 5)
+    full_d = np.concatenate(alld, 1)
+    want = np.argsort(full_d, 1)[:, :5]
+    np.testing.assert_array_equal(gids, want)
+
+
+def test_split_preserves_documents_and_recall(rng):
+    col, data = _collection(np.random.RandomState(11), n=700, max_per=300, parts=1)
+    assert col.splits >= 1 and len(col.partitions) >= 2
+    assert col.num_docs == 700
+    q = data[rng.choice(700, 8)] + 0.02
+    ids, dists, info = fanout_search(col.partitions, q, k=10)
+    gt = rec.ground_truth(q, data, np.ones(700, bool), 10)
+    assert rec.recall_at_k(ids, gt, 10) >= 0.8
+
+
+def test_partition_merge_roundtrip():
+    col, data = _collection(np.random.RandomState(12), n=500, max_per=400, parts=2)
+    n_before = col.num_docs
+    col.merge(0)
+    assert col.num_docs == n_before
+    q = data[:4] + 0.01
+    ids, _, _ = fanout_search(col.partitions, q, k=5)
+    for i in range(4):
+        assert i in ids[i].tolist()
+
+
+def test_hedged_requests_cut_tail():
+    col, data = _collection(np.random.RandomState(13), n=300, max_per=400, parts=2)
+    q = data[:2]
+    slow = lambda p, rr: float(np.exp(rr.normal(np.log(10), 1.0)))
+    r1 = np.random.RandomState(3)
+    lats_nohedge = [
+        fanout_search(col.partitions, q, 5, latency_model=slow, rng=np.random.RandomState(s))[2]["client_latency_ms"]
+        for s in range(30)
+    ]
+    lats_hedge = [
+        fanout_search(col.partitions, q, 5, latency_model=slow, hedge_at_ms=25,
+                      rng=np.random.RandomState(s))[2]["client_latency_ms"]
+        for s in range(30)
+    ]
+    assert np.percentile(lats_hedge, 95) <= np.percentile(lats_nohedge, 95)
+
+
+def test_replica_failover_and_rebuild():
+    col, data = _collection(np.random.RandomState(14), n=300, max_per=400, parts=1)
+    rs = ReplicaSet(col.partitions[0], num_replicas=4)
+    rs.insert([10_000], [123], data[:1])
+    primary = rs.primary
+    rs.kill(primary)
+    assert rs.primary != primary and rs.failovers == 1
+    ids, _, _ = rs.search(data[:2], 5)
+    assert ids.shape == (2, 5)
+    dead = [r.rid for r in rs.replicas if not r.alive][0]
+    fresh = rs.rebuild(dead)
+    np.testing.assert_array_equal(fresh.vectors, col.partitions[0].providers.vectors)
+
+
+def test_quorum_loss_raises():
+    col, _ = _collection(np.random.RandomState(15), n=200, max_per=400, parts=1)
+    rs = ReplicaSet(col.partitions[0], num_replicas=4)
+    for rid in range(3):
+        rs.kill(rid)
+    with pytest.raises(RuntimeError):
+        rs.insert([1], [1], np.zeros((1, 16), np.float32))

@@ -1,0 +1,98 @@
+"""PQ unit + property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import pq
+
+from conftest import clustered_data
+
+
+def test_train_encode_decode_roundtrip(rng):
+    data = clustered_data(rng, 2000, 32)
+    schema = pq.train_pq(jax.random.PRNGKey(0), jnp.asarray(data), M=8)
+    codes = pq.encode(schema, jnp.asarray(data))
+    assert codes.shape == (2000, 8) and codes.dtype == jnp.uint8
+    recon = pq.decode(schema, codes)
+    mse = float(jnp.mean((recon - data) ** 2))
+    var = float(np.var(data))
+    assert mse < 0.5 * var, f"PQ should beat 50% of variance: {mse} vs {var}"
+
+
+def test_adc_matches_exact_on_decoded(rng):
+    """ADC distance == exact distance to the decoded (reconstructed) vector."""
+    data = clustered_data(rng, 500, 16)
+    schema = pq.train_pq(jax.random.PRNGKey(1), jnp.asarray(data), M=4)
+    codes = pq.encode(schema, jnp.asarray(data))
+    q = jnp.asarray(rng.randn(16).astype(np.float32))
+    lut = pq.adc_lut(schema, q)
+    d_adc = pq.adc_distance(lut, codes)
+    d_exact = pq.exact_distance(q[None, :], pq.decode(schema, codes))
+    np.testing.assert_allclose(np.asarray(d_adc), np.asarray(d_exact), rtol=2e-3, atol=2e-3)
+
+
+def test_adc_onehot_equivalence(rng):
+    data = clustered_data(rng, 300, 16)
+    schema = pq.train_pq(jax.random.PRNGKey(2), jnp.asarray(data), M=4)
+    codes = pq.encode(schema, jnp.asarray(data))
+    lut = pq.adc_lut(schema, jnp.asarray(rng.randn(16).astype(np.float32)))
+    np.testing.assert_allclose(
+        np.asarray(pq.adc_distance(lut, codes)),
+        np.asarray(pq.adc_distance_onehot(lut, codes)),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_requantization_cross_schema(rng):
+    """§3.4: distances remain comparable across old/new schemas."""
+    data = clustered_data(rng, 3000, 32)
+    s0 = pq.train_pq(jax.random.PRNGKey(3), jnp.asarray(data[:1000]), M=8)
+    s1 = pq.refine_pq(jax.random.PRNGKey(4), s0, jnp.asarray(data))
+    assert int(s1.version) == int(s0.version) + 1
+    codes0 = pq.encode(s0, jnp.asarray(data[:100]))
+    codes1 = pq.encode(s1, jnp.asarray(data[:100]))
+    q = jnp.asarray(rng.randn(32).astype(np.float32))
+    luts = pq.multi_lut((s0, s1), q)
+    d0 = pq.adc_distance_versioned(luts, codes0, jnp.zeros(100, jnp.int32))
+    d1 = pq.adc_distance_versioned(luts, codes1, jnp.ones(100, jnp.int32))
+    # both approximate the same true distances
+    d_true = pq.exact_distance(q[None, :], jnp.asarray(data[:100]))
+    err0 = float(jnp.mean(jnp.abs(d0 - d_true)))
+    err1 = float(jnp.mean(jnp.abs(d1 - d_true)))
+    assert err1 <= err0 * 1.5  # refined schema at least comparable
+    # mixed batch dispatches per-row
+    mixed_codes = jnp.concatenate([codes0[:50], codes1[:50]])
+    vers = jnp.concatenate([jnp.zeros(50, jnp.int32), jnp.ones(50, jnp.int32)])
+    dm = pq.adc_distance_versioned(luts, mixed_codes, vers)
+    np.testing.assert_allclose(np.asarray(dm[:50]), np.asarray(d0[:50]), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(dm[50:]), np.asarray(d1[:50]), rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.sampled_from([2, 4, 8]),
+    n=st.integers(50, 200),
+    metric=st.sampled_from(["l2", "ip"]),
+)
+def test_property_adc_consistency(m, n, metric):
+    """Property: ADC(lut(q), encode(x)) == exact(q, decode(encode(x)))."""
+    rng = np.random.RandomState(m * 1000 + n)
+    dim = m * 4
+    data = rng.randn(n, dim).astype(np.float32)
+    schema = pq.train_pq(jax.random.PRNGKey(n), jnp.asarray(data), M=m, iters=4)
+    codes = pq.encode(schema, jnp.asarray(data))
+    q = jnp.asarray(rng.randn(dim).astype(np.float32))
+    lut = pq.adc_lut(schema, q, metric)
+    d_adc = pq.adc_distance(lut, codes)
+    d_ref = pq.exact_distance(q[None, :], pq.decode(schema, codes), metric)
+    np.testing.assert_allclose(np.asarray(d_adc), np.asarray(d_ref), rtol=5e-3, atol=5e-3)
+
+
+def test_pairwise_distance_symmetry(rng):
+    a = jnp.asarray(rng.randn(20, 8).astype(np.float32))
+    d = pq.pairwise_distance(a, a)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(d.T), rtol=1e-4, atol=1e-5)
+    assert float(jnp.abs(jnp.diagonal(d)).max()) < 1e-3

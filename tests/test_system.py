@@ -1,0 +1,95 @@
+"""End-to-end behaviour tests for the paper's system.
+
+A miniature version of §4.5's runbooks: a stream of inserts, deletes and
+queries; the in-place-delete policy must keep recall stable while the drop
+policy degrades (Fig 13's comparison), and re-quantization must not break
+comparability (§3.4).
+"""
+import numpy as np
+import pytest
+
+from repro.core import DiskANNIndex, GraphConfig
+from repro.core import recall as rec
+
+from conftest import clustered_data
+
+
+def _runbook(policy: str, seed: int = 0, steps: int = 6):
+    """Expiration-time-style runbook at CPU scale; returns recall per step."""
+    rng = np.random.RandomState(seed)
+    D, N_max = 24, 2600
+    cfg = GraphConfig(capacity=N_max, R=12, M=6, L_build=32, L_search=48,
+                      bootstrap_sample=128, refine_sample=10**9, batch_size=64)
+    idx = DiskANNIndex(cfg, D, seed=seed)
+    pool = clustered_data(rng, 4000, D)
+    next_doc = 0
+    live_docs: list[int] = []
+    recalls = []
+    for step in range(steps):
+        # insert 300 docs with random expiry, delete ~150 expired
+        n_new = 300
+        ids = list(range(next_doc, next_doc + n_new))
+        idx.insert(ids, pool[[i % 4000 for i in ids]])
+        live_docs.extend(ids)
+        next_doc += n_new
+        if step >= 2:
+            expire = rng.choice(live_docs, 150, replace=False).tolist()
+            idx.delete(expire, policy=policy)
+            live_docs = [d for d in live_docs if d not in set(expire)]
+            idx.consolidate()
+        if idx._graph_built and step >= 2:
+            pick = rng.choice(live_docs, 16, replace=False)
+            q = pool[[d % 4000 for d in pick]] + 0.03 * rng.randn(16, D).astype(np.float32)
+            ids_r, _, _ = idx.search(q, k=10)
+            vecs = idx.pv.vectors
+            live = idx.pv.live
+            gt = rec.ground_truth(q, vecs, live, 10)
+            gt_docs = np.where(gt >= 0, idx.slot_to_doc[np.maximum(gt, 0)], -1)
+            recalls.append(rec.recall_at_k(ids_r, gt_docs, 10))
+    return recalls
+
+
+def test_runbook_recall_stability_inplace():
+    recalls = _runbook("inplace")
+    assert len(recalls) >= 3
+    assert min(recalls) >= 0.7, recalls
+    assert recalls[-1] >= recalls[0] - 0.15, f"recall drifting down: {recalls}"
+
+
+def test_inplace_beats_drop_policy():
+    """Fig 13: in-place delete ≥ drop policy on recall after churn."""
+    r_in = np.mean(_runbook("inplace", seed=3))
+    r_drop = np.mean(_runbook("drop", seed=3))
+    assert r_in >= r_drop - 0.02, (r_in, r_drop)
+
+
+def test_requantization_mid_stream():
+    """§3.4: re-quantize after more data arrives; search keeps working with
+    mixed-schema codes and improves once re-encoding completes."""
+    rng = np.random.RandomState(5)
+    D = 24
+    cfg = GraphConfig(capacity=3000, R=12, M=6, L_build=32, L_search=48,
+                      bootstrap_sample=128, refine_sample=1500, batch_size=64)
+    idx = DiskANNIndex(cfg, D, seed=1)
+    data = clustered_data(rng, 2500, D)
+    idx.insert(list(range(2000)), data[:2000])  # triggers requantize at 1500
+    assert len(idx.schemas) == 2, "two schemas should coexist mid-transition"
+    q = data[rng.choice(2000, 16)] + 0.02
+    ids, _, _ = idx.search(q, k=10)
+    gt = rec.ground_truth(q, data[:2000], idx.pv.live[:2000], 10)
+    gt_docs = np.where(gt >= 0, idx.slot_to_doc[np.maximum(gt, 0)], -1)
+    r_mid = rec.recall_at_k(ids, gt_docs, 10)
+    assert r_mid >= 0.75, r_mid
+    idx.requantize_all()
+    assert len(idx.schemas) == 1
+    ids2, _, _ = idx.search(q, k=10)
+    r_post = rec.recall_at_k(ids2, gt_docs, 10)
+    assert r_post >= r_mid - 0.1, (r_mid, r_post)
+
+
+def test_capacity_exhaustion_raises():
+    cfg = GraphConfig(capacity=100, R=8, M=4, bootstrap_sample=32, batch_size=32)
+    idx = DiskANNIndex(cfg, 16)
+    rng = np.random.RandomState(0)
+    with pytest.raises(RuntimeError, match="split required"):
+        idx.insert(list(range(200)), rng.randn(200, 16).astype(np.float32))
