@@ -15,6 +15,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import recall as rec
+from repro.kernels.topk_select import ops as topk_ops
 
 from .common import build_index, clustered, in_dist_queries, pct, per_query_stats
 
@@ -25,6 +26,14 @@ def run(n: int = 8000, dim: int = 64, n_queries: int = 64, seed: int = 0):
     idx = build_index(data, R=24, M=32, L_build=48)
     q = in_dist_queries(data, rng, n_queries)
     gt = rec.ground_truth(q, data, np.ones(n, bool), 10)
+
+    # candidate-selection hot path: the Pallas topk_select kernel (interpret
+    # off-TPU) must reproduce the brute-force top-10 on exact distances
+    d = ((q * q).sum(1)[:, None] + (data * data).sum(1)[None, :]
+         - 2.0 * q @ data.T).astype(np.float32)
+    _, kernel_ids = topk_ops.topk_select(d, L=10)
+    kernel_recall = rec.recall_at_k(np.asarray(kernel_ids), gt, 10)
+    assert kernel_recall >= 0.999, f"topk_select kernel disagrees: {kernel_recall}"
 
     rows = []
     for L in (10, 25, 50, 100):

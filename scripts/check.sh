@@ -1,0 +1,32 @@
+#!/usr/bin/env bash
+# One-command verification gate: import-lint every src/repro module, then
+# run the tier-1 pytest suite. Future PRs are judged against this script.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="$PWD/src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== import lint: every module under src/repro =="
+python - <<'EOF'
+import importlib
+import pkgutil
+import sys
+
+import repro
+
+failures = []
+for info in pkgutil.walk_packages(repro.__path__, prefix="repro."):
+    try:
+        importlib.import_module(info.name)
+    except Exception as e:  # noqa: BLE001 — report every broken module
+        failures.append((info.name, f"{type(e).__name__}: {e}"))
+
+if failures:
+    for name, err in failures:
+        print(f"IMPORT FAIL {name}: {err}")
+    sys.exit(1)
+count = sum(1 for _ in pkgutil.walk_packages(repro.__path__, prefix="repro."))
+print(f"ok: {count} modules import cleanly")
+EOF
+
+echo "== tier-1 tests =="
+python -m pytest -x -q "$@"

@@ -1,0 +1,195 @@
+"""Version-portability layer for JAX idioms that moved between releases.
+
+Everything in the repo that touches a version-sensitive JAX surface goes
+through here, so a JAX upgrade (or downgrade) is a one-file audit:
+
+  * mesh construction — ``jax.make_mesh`` grew an ``axis_types=`` kwarg
+    (``jax.sharding.AxisType``) in newer releases; 0.4.x rejects it.
+  * ``shard_map`` — ``jax.shard_map(..., check_vma=)`` in new JAX vs
+    ``jax.experimental.shard_map.shard_map(..., check_rep=)`` in 0.4.x.
+  * abstract-mesh contexts — ``jax.sharding.use_abstract_mesh`` /
+    ``get_abstract_mesh`` (sharding-in-types) do not exist in 0.4.x; the
+    fallbacks are a null context and ``None`` (explicit ``in_shardings`` on
+    ``jax.jit`` carry the sharding instead, which 0.4.x supports).
+  * Pallas dynamic indexing — raw python ints mixed into ``pl.store`` /
+    ``pl.load`` index tuples crash 0.4.x interpret mode
+    (``AttributeError: 'int' object has no attribute 'shape'``); every
+    dynamic index must be a ``pl.Slice`` built via :func:`ds` / :func:`ds1`.
+
+Supported range: JAX 0.4.35 – 0.7.x (tested on 0.4.37; the new-API branches
+are taken automatically when the installed JAX exposes them).
+"""
+from __future__ import annotations
+
+import contextlib
+import inspect
+from typing import Any, Callable, Sequence
+
+import jax
+from jax.experimental import pallas as pl
+
+# ---------------------------------------------------------------------------
+# feature detection
+# ---------------------------------------------------------------------------
+
+
+def _version_tuple(v: str) -> tuple[int, ...]:
+    parts = []
+    for p in v.split("."):
+        digits = ""
+        for ch in p:  # leading digits only: "38rc1" is 38, not 381
+            if not ch.isdigit():
+                break
+            digits += ch
+        if not digits:
+            break
+        parts.append(int(digits))
+    return tuple(parts) or (0,)
+
+
+JAX_VERSION: tuple[int, ...] = _version_tuple(jax.__version__)
+
+
+def jax_at_least(*version: int) -> bool:
+    """True when the installed JAX is >= the given (major, minor[, patch])."""
+    return JAX_VERSION >= tuple(version)
+
+
+def has_api(obj: Any, name: str) -> bool:
+    """Feature-detect an attribute without tripping deprecation getattrs."""
+    try:
+        return getattr(obj, name, None) is not None
+    except Exception:  # noqa: BLE001 — deprecated attrs may raise on access
+        return False
+
+
+def supports_axis_types() -> bool:
+    """Does ``jax.make_mesh`` take ``axis_types=`` (jax.sharding.AxisType)?"""
+    return has_api(jax.sharding, "AxisType")
+
+
+def supports_abstract_mesh_context() -> bool:
+    """Does this JAX have ``jax.sharding.use_abstract_mesh``?"""
+    return has_api(jax.sharding, "use_abstract_mesh")
+
+
+def pallas_interpret_default() -> bool:
+    """Pallas kernels compile only on TPU; everywhere else interpret."""
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# mesh construction
+# ---------------------------------------------------------------------------
+
+
+def make_mesh(
+    axis_shapes: Sequence[int],
+    axis_names: Sequence[str],
+    *,
+    devices=None,
+) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with Auto axis types where the API exists.
+
+    New JAX wants explicit axis types (Auto for everything here — the repo
+    shards via explicit in/out shardings, not sharding-in-types); 0.4.x has
+    no ``AxisType`` and its ``make_mesh`` rejects the kwarg entirely.
+    """
+    kwargs: dict = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if supports_axis_types():
+        auto = jax.sharding.AxisType.Auto
+        kwargs["axis_types"] = (auto,) * len(tuple(axis_names))
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+def use_abstract_mesh(mesh: jax.sharding.Mesh):
+    """Context manager setting the ambient abstract mesh (no-op on 0.4.x)."""
+    if supports_abstract_mesh_context() and has_api(mesh, "abstract_mesh"):
+        return jax.sharding.use_abstract_mesh(mesh.abstract_mesh)
+    return contextlib.nullcontext()
+
+
+def get_abstract_mesh():
+    """The ambient abstract mesh, or None when unsupported / unset.
+
+    Callers treat None as "no ambient mesh" and skip sharding constraints —
+    on 0.4.x the explicit jit in/out shardings still place every array.
+    """
+    if not has_api(jax.sharding, "get_abstract_mesh"):
+        return None
+    try:
+        m = jax.sharding.get_abstract_mesh()
+    except Exception:  # noqa: BLE001
+        return None
+    if m is None or not getattr(m, "axis_names", ()):
+        return None
+    return m
+
+
+# ---------------------------------------------------------------------------
+# shard_map
+# ---------------------------------------------------------------------------
+
+
+def shard_map(
+    f: Callable,
+    mesh: jax.sharding.Mesh,
+    *,
+    in_specs,
+    out_specs,
+    check: bool = False,
+):
+    """Portable ``shard_map``: new JAX's ``check_vma`` vs older ``check_rep``.
+
+    Mid-range releases expose ``jax.shard_map`` while still spelling the
+    kwarg ``check_rep``, so the kwarg is detected from the signature rather
+    than from the function's existence.
+    """
+    if has_api(jax, "shard_map"):
+        sm = jax.shard_map
+    else:
+        from jax.experimental.shard_map import shard_map as sm
+    params = inspect.signature(sm).parameters
+    check_kw = "check_vma" if "check_vma" in params else "check_rep"
+    return sm(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        **{check_kw: check},
+    )
+
+
+# ---------------------------------------------------------------------------
+# Pallas dynamic-slice index helpers
+# ---------------------------------------------------------------------------
+
+# The Slice class moved modules across releases; pl.ds is the stable
+# constructor. Re-exported so kernels import indexing through compat.
+Slice = pl.Slice
+ds = pl.ds
+
+
+def ds1(i) -> pl.Slice:
+    """Size-1 dynamic slice for per-element ref addressing.
+
+    ``ref[ds1(0), ds1(j)]`` is the portable spelling of ``ref[0, j]`` inside
+    ``pl.load``/``pl.store`` index tuples: 0.4.x interpret mode requires
+    every dynamic index to be a Slice object, never a raw python int.
+    """
+    return pl.ds(i, 1)
+
+
+def ds_index(*idx) -> tuple:
+    """Normalize a mixed index tuple so scalar indices become size-1 Slices.
+
+    Only python ints and scalar (0-d) traced values are wrapped — ``Slice``
+    objects, python slices, and non-scalar arrays pass through unchanged.
+    """
+    def norm(i):
+        if isinstance(i, pl.Slice):
+            return i
+        if isinstance(i, int) or getattr(i, "ndim", None) == 0:
+            return ds1(i)
+        return i
+
+    return tuple(norm(i) for i in idx)

@@ -3,6 +3,7 @@ from __future__ import annotations
 
 import jax
 
+from ... import compat
 from .kernel import pq_adc_pallas
 from .ref import pq_adc_ref
 
@@ -13,7 +14,7 @@ def pq_adc(lut: jax.Array, codes: jax.Array, *, block_c: int = 512,
     Pallas interpret mode elsewhere (bit-exact with the compiled kernel)."""
     if use_pallas is None:
         use_pallas = True
-    interpret = jax.default_backend() != "tpu"
+    interpret = compat.pallas_interpret_default()
     if not use_pallas:
         return pq_adc_ref(lut, codes)
     return pq_adc_pallas(lut, codes, block_c=block_c, interpret=interpret)

@@ -1,12 +1,26 @@
-"""topk_select — blockwise partial top-k (smallest distances first).
+"""topk_select — two-stage blockwise partial top-k (smallest first).
 
 Candidate selection after a Q-Flat scan (and the rerank cut) needs the L
 smallest of N distances. A full sort is O(N log N) and serializes badly on
-the VPU; instead each grid block extracts its local top-L by L iterated
-masked argmins over a VMEM-resident tile (L ≪ Nb), and the host-side
-wrapper merges the (num_blocks · L) survivors with one small `lax.top_k`.
-This is the classic two-level TPU k-selection: the candidate set shrinks by
-Nb/L per level while staying rectangular.
+the VPU; instead the selection runs in two fixed-shape stages:
+
+  stage 1 (Pallas, grid (B, N/Nb)): each block extracts its local top-L by
+    L iterated masked argmins over a VMEM-resident (1, Nb) tile. The argmin
+    is spelled as a min-reduce plus an iota comparison (first-index tie
+    break, same as ``lax.top_k``) and the survivor mask as a ``where`` over
+    the column iota — pure vector ops, no scatter, no per-element stores,
+    so the kernel lowers on TPU Mosaic *and* runs under 0.4.x interpret
+    mode (which rejects raw-int dynamic indices in ref stores). Each block
+    writes its (1, L) winners with one full-block store.
+
+  stage 2 (host-side, fixed shape): the (B, nblk·L) survivors merge with a
+    single small ``lax.top_k``. When the row fits one block the stage-1
+    output is already the sorted answer and the merge is skipped.
+
+The candidate set shrinks by Nb/L per level while staying rectangular; at
+large N stage 2 touches nblk·L ≪ N values, so the merge cost is negligible
+and stage 1's two vector stores per block (vs 2·L scalar stores before the
+rewrite) keep the VPU busy on the scan itself.
 """
 from __future__ import annotations
 
@@ -17,17 +31,30 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _topk_kernel(d_ref, vals_ref, idx_ref, *, L: int, block_n: int):
-    d = d_ref[0, :].astype(jnp.float32)  # (Nb,)
+def _topk_block_kernel(d_ref, vals_ref, idx_ref, *, L: int, block_n: int):
+    dd = d_ref[...].astype(jnp.float32)  # (1, Nb)
     base = pl.program_id(1) * block_n
+    col = jax.lax.broadcasted_iota(jnp.int32, (1, block_n), 1)
+    slot = jax.lax.broadcasted_iota(jnp.int32, (1, L), 1)
 
-    def body(i, dd):
-        j = jnp.argmin(dd)
-        pl.store(vals_ref, (0, pl.ds(i, 1)), dd[j][None])
-        pl.store(idx_ref, (0, pl.ds(i, 1)), (base + j).astype(jnp.int32)[None])
-        return dd.at[j].set(jnp.inf)
+    def body(i, carry):
+        dd, vals, idxs = carry
+        v = jnp.min(dd)
+        # first index attaining the min — lax.top_k's tie-break order
+        j = jnp.min(jnp.where(dd == v, col, jnp.int32(block_n)))
+        vals = jnp.where(slot == i, v, vals)
+        idxs = jnp.where(slot == i, base + j, idxs)
+        dd = jnp.where(col == j, jnp.inf, dd)
+        return dd, vals, idxs
 
-    jax.lax.fori_loop(0, L, body, d)
+    init = (
+        dd,
+        jnp.full((1, L), jnp.inf, jnp.float32),
+        jnp.full((1, L), -1, jnp.int32),
+    )
+    _, vals, idxs = jax.lax.fori_loop(0, L, body, init)
+    vals_ref[...] = vals
+    idx_ref[...] = idxs
 
 
 @functools.partial(jax.jit, static_argnames=("L", "block_n", "interpret"))
@@ -45,7 +72,7 @@ def topk_select_pallas(
     nblk = Np // block_n
 
     vals, idx = pl.pallas_call(
-        functools.partial(_topk_kernel, L=L, block_n=block_n),
+        functools.partial(_topk_block_kernel, L=L, block_n=block_n),
         grid=(B, nblk),
         in_specs=[pl.BlockSpec((1, block_n), lambda b, n: (b, n))],
         out_specs=[
@@ -59,9 +86,12 @@ def topk_select_pallas(
         interpret=interpret,
     )(d)
 
-    # second level: merge block winners (small)
-    neg, pos = jax.lax.top_k(-vals, L)
-    out_idx = jnp.take_along_axis(idx, pos, axis=1)
-    out_vals = -neg
+    if nblk > 1:
+        # stage 2: merge block winners (fixed shape, nblk·L ≪ N)
+        neg, pos = jax.lax.top_k(-vals, L)
+        out_vals = -neg
+        out_idx = jnp.take_along_axis(idx, pos, axis=1)
+    else:
+        out_vals, out_idx = vals, idx  # already sorted ascending
     out_idx = jnp.where(jnp.isfinite(out_vals), out_idx, -1)
     return out_vals, out_idx

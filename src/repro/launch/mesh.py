@@ -5,18 +5,21 @@ Multi-pod: 2×16×16 = 512 chips, axes (pod, data, model) — `pod` crosses DCN
 and carries only the data-parallel gradient all-reduce (see
 models/sharding.py). Defined as a function so importing this module never
 touches jax device state (the dry-run must set XLA_FLAGS first).
+
+Construction goes through repro.compat.make_mesh: axis types (Auto) are
+passed only on JAX versions whose ``jax.make_mesh`` accepts them.
 """
 from __future__ import annotations
 
 import jax
 
+from .. import compat
+
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return compat.make_mesh(shape, axes)
 
 
 def make_host_mesh(shape: tuple[int, ...] = None, axes: tuple[str, ...] = None):
@@ -24,6 +27,4 @@ def make_host_mesh(shape: tuple[int, ...] = None, axes: tuple[str, ...] = None):
     n = len(jax.devices())
     if shape is None:
         shape, axes = (n,), ("data",)
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return compat.make_mesh(shape, axes)

@@ -72,10 +72,9 @@ def _cp_constrain(x: jax.Array, seq_axis: int) -> jax.Array:
     """Shard dim `seq_axis` over the `model` mesh axis (context parallelism)
     under the ambient mesh; no-op without one or when indivisible."""
     from jax.sharding import PartitionSpec as P
-    try:
-        m = jax.sharding.get_abstract_mesh()
-    except Exception:  # noqa: BLE001
-        return x
+
+    from .. import compat
+    m = compat.get_abstract_mesh()
     if m is None or "model" not in (m.axis_names or ()):
         return x
     if x.shape[seq_axis] % m.shape["model"] != 0:

@@ -152,10 +152,8 @@ def constrain_batch_dim(x: jax.Array, extra: tuple = ()) -> jax.Array:
     replicating layer inputs across the mesh (measured: smollm train went
     from fully-replicated compute to properly sharded once constrained).
     """
-    try:
-        m = jax.sharding.get_abstract_mesh()
-    except Exception:  # noqa: BLE001
-        return x
+    from .. import compat
+    m = compat.get_abstract_mesh()
     if m is None or not m.axis_names:
         return x
     axes = tuple(a for a in ("pod", "data") if a in m.axis_names)

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from .. import compat
 from ..core import flat as fmod
 from ..core import pq as pqmod
 from ..core import search as smod
@@ -146,14 +147,14 @@ def distributed_search_fn(
         out_ids = jnp.take_along_axis(flat_i, pos, axis=1)
         return out_ids, -neg
 
-    shmapped = jax.shard_map(
+    shmapped = compat.shard_map(
         local_search,
-        mesh=mesh,
+        mesh,
         in_specs=(
             spec_sharded, spec_sharded, spec_sharded, spec_sharded,
             spec_sharded, spec_sharded, spec_sharded, spec_sharded, spec_repl,
         ),
         out_specs=(spec_repl, spec_repl),
-        check_vma=False,
+        check=False,
     )
     return jax.jit(shmapped)

@@ -1,0 +1,194 @@
+"""Deterministic, dependency-free property-testing harness.
+
+Drop-in replacement for the `hypothesis` subset this suite uses — the
+container has no network access, so tests must collect and run fully
+offline. Semantics:
+
+  * every example is drawn from a ``numpy.random.RandomState`` seeded from a
+    stable hash of the test's qualified name (override with
+    ``settings(seed=...)``) — the same examples run on every machine, every
+    time, in collection order;
+  * on failure the falsifying example is reported in the exception chain
+    (no shrinking — examples are small by construction);
+  * ``deadline`` / unknown settings kwargs are accepted and ignored.
+
+Usage (identical shape to hypothesis):
+
+    from proptest import given, settings
+    from proptest import strategies as st
+
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.integers(50, 200), metric=st.sampled_from(["l2", "ip"]))
+    def test_something(n, metric): ...
+"""
+from __future__ import annotations
+
+import zlib
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 25
+
+
+# ---------------------------------------------------------------------------
+# strategies
+# ---------------------------------------------------------------------------
+
+
+class Strategy:
+    """A reproducible example generator: example(rng) -> value."""
+
+    def example(self, rng: np.random.RandomState):
+        raise NotImplementedError
+
+    def __repr__(self):  # pragma: no cover — debugging aid
+        return f"{type(self).__name__}({self.__dict__!r})"
+
+
+class _Integers(Strategy):
+    def __init__(self, min_value: int, max_value: int):
+        assert min_value <= max_value
+        self.min_value, self.max_value = int(min_value), int(max_value)
+
+    def example(self, rng):
+        return int(rng.randint(self.min_value, self.max_value + 1))
+
+
+class _Floats(Strategy):
+    def __init__(self, min_value: float, max_value: float):
+        assert min_value <= max_value
+        self.min_value, self.max_value = float(min_value), float(max_value)
+
+    def example(self, rng):
+        return float(rng.uniform(self.min_value, self.max_value))
+
+
+class _Booleans(Strategy):
+    def example(self, rng):
+        return bool(rng.randint(0, 2))
+
+
+class _SampledFrom(Strategy):
+    def __init__(self, elements):
+        self.elements = list(elements)
+        assert self.elements
+
+    def example(self, rng):
+        return self.elements[int(rng.randint(0, len(self.elements)))]
+
+
+class _Just(Strategy):
+    def __init__(self, value):
+        self.value = value
+
+    def example(self, rng):
+        return self.value
+
+
+class _Tuples(Strategy):
+    def __init__(self, *elems: Strategy):
+        self.elems = elems
+
+    def example(self, rng):
+        return tuple(e.example(rng) for e in self.elems)
+
+
+class _Lists(Strategy):
+    def __init__(self, elem: Strategy, min_size: int = 0, max_size: int = 10):
+        assert 0 <= min_size <= max_size
+        self.elem, self.min_size, self.max_size = elem, min_size, max_size
+
+    def example(self, rng):
+        n = int(rng.randint(self.min_size, self.max_size + 1))
+        return [self.elem.example(rng) for _ in range(n)]
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies`` for the subset used."""
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> Strategy:
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> Strategy:
+        return _Floats(min_value, max_value)
+
+    @staticmethod
+    def booleans() -> Strategy:
+        return _Booleans()
+
+    @staticmethod
+    def sampled_from(elements) -> Strategy:
+        return _SampledFrom(elements)
+
+    @staticmethod
+    def just(value) -> Strategy:
+        return _Just(value)
+
+    @staticmethod
+    def tuples(*elems: Strategy) -> Strategy:
+        return _Tuples(*elems)
+
+    @staticmethod
+    def lists(elem: Strategy, min_size: int = 0, max_size: int = 10) -> Strategy:
+        return _Lists(elem, min_size=min_size, max_size=max_size)
+
+
+# ---------------------------------------------------------------------------
+# decorators
+# ---------------------------------------------------------------------------
+
+
+def _stable_seed(name: str) -> int:
+    return zlib.crc32(name.encode("utf-8")) & 0x7FFFFFFF
+
+
+def settings(*, max_examples: int = DEFAULT_MAX_EXAMPLES, seed: int | None = None,
+             **_ignored):
+    """Configure an adjacent @given. Order-independent with @given; extra
+    hypothesis kwargs (deadline=...) are accepted and dropped."""
+
+    def deco(fn):
+        fn._proptest_settings = {"max_examples": max_examples, "seed": seed}
+        return fn
+
+    return deco
+
+
+def given(**strats: Strategy):
+    """Run the test once per drawn example, deterministically.
+
+    The wrapper takes no parameters, so pytest never mistakes strategy
+    names for fixtures.
+    """
+    bad = [k for k, s in strats.items() if not isinstance(s, Strategy)]
+    if bad:
+        raise TypeError(f"given() expects Strategy values, got non-strategies: {bad}")
+
+    def deco(fn):
+        def wrapper():
+            cfg = getattr(wrapper, "_proptest_settings", None) or getattr(
+                fn, "_proptest_settings", None) or {}
+            max_examples = cfg.get("max_examples") or DEFAULT_MAX_EXAMPLES
+            seed = cfg.get("seed")
+            if seed is None:
+                seed = _stable_seed(f"{fn.__module__}.{fn.__qualname__}")
+            rng = np.random.RandomState(seed)
+            for i in range(max_examples):
+                example = {k: s.example(rng) for k, s in strats.items()}
+                try:
+                    fn(**example)
+                except Exception as e:
+                    raise AssertionError(
+                        f"{fn.__name__}: falsifying example {i + 1}/{max_examples} "
+                        f"(seed={seed}): {example!r}"
+                    ) from e
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return deco

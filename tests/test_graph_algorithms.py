@@ -5,8 +5,8 @@ import jax.numpy as jnp
 import networkx as nx
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from proptest import given, settings
+from proptest import strategies as st
 
 from repro.core import GraphConfig, DiskANNIndex
 from repro.core import prune as prmod

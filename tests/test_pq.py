@@ -3,8 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from proptest import given, settings
+from proptest import strategies as st
 
 from repro.core import pq
 

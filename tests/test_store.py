@@ -1,8 +1,8 @@
 """Bw-Tree analogue, index terms, RU governance, WAL recovery."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from proptest import given, settings
+from proptest import strategies as st
 
 from repro.core.providers import Context
 from repro.store import BwTree, TermCodec
