@@ -44,18 +44,24 @@ def run(n: int = 8000, dim: int = 64, n_queries: int = 64, seed: int = 0):
     return rows
 
 
-def main():
-    rows = run()
+def main(smoke: bool = False):
+    # smoke: tiny sizes so scripts/check.sh --smoke can exercise the whole
+    # path (build → search → kernel cross-check → stats) in seconds
+    rows = run(n=1500, dim=32, n_queries=16) if smoke else run()
     print("bench_query (Fig 6): L, recall@10, p50/p95/p99 modeled ms, RU")
     for r in rows:
         print(f"  L={r['L']:4d} recall={r['recall']:.3f} "
               f"p50={r['p50_ms']:.2f}ms p95={r['p95_ms']:.2f}ms "
               f"p99={r['p99_ms']:.2f}ms RU={r['ru']:.1f}")
-    # monotone recall in L
+    # monotone recall in L (more slack at smoke scale: 16 queries quantize
+    # recall to 1/160 steps)
+    slack = 0.05 if smoke else 0.02
     rc = [r["recall"] for r in rows]
-    assert all(b >= a - 0.02 for a, b in zip(rc, rc[1:])), "recall not monotone in L"
+    assert all(b >= a - slack for a, b in zip(rc, rc[1:])), "recall not monotone in L"
     return rows
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+
+    main(smoke="--smoke" in sys.argv[1:])

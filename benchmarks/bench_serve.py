@@ -1,0 +1,230 @@
+"""Serving-engine benchmark: batched vs per-query throughput, latency
+percentiles under offered load, RU/s, recompile telemetry, and recall
+stability under interleaved ingest (§2.2 admission, §3.4 updates, §4).
+
+Emits ``BENCH_serve.json`` at the repo root — the serving baseline that
+later scale PRs (caching, replication, multi-backend) are judged against:
+
+  * ``loads``  — per offered-load level (Poisson arrivals at 3 rates):
+    simulated QPS, p50/p95/p99 latency, RU/s, mean batch occupancy;
+  * ``speedup_batch16`` — measured wall-clock throughput of the batch-16
+    engine over the per-query `VectorCollectionService.query` loop
+    (acceptance floor: ≥ 3×);
+  * ``recompiles_after_warmup`` — jit cache growth across every measured
+    batch after warmup (acceptance floor: 0 — shape bucketing at work);
+  * ``mixed_ingest`` — recall@10 with upserts streaming through the
+    interleaved ingest queue vs the query-only run (floor: within 2 pts).
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import GraphConfig
+from repro.serve import (EngineConfig, VectorCollectionService, VectorQuery,
+                         VectorServeEngine, poisson_arrivals)
+from repro.serve.metrics import EngineMetrics
+from repro.serve.vector_engine import serving_jit_cache_size
+
+from .common import clustered, pct
+
+
+def build_service(n: int, dim: int, seed: int = 0, max_batch: int = 16):
+    rng = np.random.RandomState(seed)
+    g = GraphConfig(capacity=n + 1024, R=24, M=16, L_build=48, L_search=48,
+                    bootstrap_sample=min(1000, max(128, n // 8)),
+                    refine_sample=10**9, batch_size=100)
+    svc = VectorCollectionService(
+        dim=dim, graph=g, max_vectors_per_partition=n + 512,
+        engine_cfg=EngineConfig(max_batch=max_batch),
+    )
+    data = clustered(rng, n, dim)
+    svc.upsert([{"id": i} for i in range(n)], data)
+    return svc, data, rng
+
+
+def warmup(eng: VectorServeEngine, data: np.ndarray, k: int = 10):
+    """Compile every bucket signature the run can hit, then reset metrics."""
+    for B in (1, 2, 4, 8, 16):
+        for q in data[:B]:
+            eng.submit_query(q, k=k)
+        eng.drain()
+    eng.metrics = EngineMetrics(started_s=eng.clock.now())
+
+
+def run_load(collection, data: np.ndarray, queries: np.ndarray,
+             rate_qps: float, rng: np.random.RandomState,
+             max_batch: int = 16) -> dict:
+    """Arrival-driven simulated run at one offered-load level."""
+    cfg = EngineConfig(max_batch=max_batch)
+    eng = VectorServeEngine(collection, cfg=cfg)
+    warmup(eng, data)
+    cache0 = serving_jit_cache_size()
+    arrivals = poisson_arrivals(rng, len(queries), rate_qps,
+                                t0=eng.clock.now())
+    i, n = 0, len(queries)
+    while i < n or eng.queue:
+        now = eng.clock.now()
+        # admit every arrival that has already happened (under overload the
+        # backlog is what lets micro-batches fill to max_batch)
+        while i < n and arrivals[i] <= now:
+            eng.submit_query(queries[i], k=10, arrival_s=float(arrivals[i]))
+            i += 1
+        if eng.pump():
+            continue
+        # idle: jump to the next event — an arrival or a max-wait deadline
+        events = []
+        if i < n:
+            events.append(float(arrivals[i]))
+        if eng.queue:
+            events.append(min(r.arrival_s for r in eng.queue) + cfg.max_wait_s)
+        if not events:
+            break
+        eng.clock.advance(max(min(events) - now, 0.0))
+        if min(events) <= now:  # deadline already passed → force the flush
+            eng.pump(force=True)
+    eng.drain()
+    snap = eng.snapshot()
+    return dict(
+        offered_qps=rate_qps,
+        qps=snap["qps"],
+        p50_ms=snap["p50_ms"], p95_ms=snap["p95_ms"], p99_ms=snap["p99_ms"],
+        ru_per_s=snap["ru_per_s"],
+        mean_occupancy=snap["mean_occupancy"],
+        pad_fraction=snap["pad_fraction"],
+        recompiles=serving_jit_cache_size() - cache0,
+    )
+
+
+def measure_speedup(svc: VectorCollectionService, data: np.ndarray,
+                    n_queries: int, rng: np.random.RandomState) -> dict:
+    """Wall-clock throughput: batch-16 engine vs per-query service loop."""
+    queries = data[rng.choice(len(data), n_queries, replace=False)] + 0.01
+
+    # per-query loop (each call is its own batch of 1 through the engine)
+    # vs the batch-16 engine over the same collection. Repeats interleave
+    # (U,B,U,B,…) with best-of per side, so a slow host phase hits both
+    # measurements instead of skewing the ratio.
+    repeats = 3
+    for q in queries[:4]:
+        svc.query(VectorQuery(vector=q, k=10))  # warm the B=1 signatures
+    eng = VectorServeEngine(svc.collection, cfg=EngineConfig(max_batch=16))
+    warmup(eng, data)
+    cache0 = serving_jit_cache_size()
+    t_unbatched = t_batched = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for q in queries:
+            svc.query(VectorQuery(vector=q, k=10))
+        t_unbatched = min(t_unbatched, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        for q in queries:
+            eng.submit_query(q, k=10)
+        eng.drain()
+        t_batched = min(t_batched, time.perf_counter() - t0)
+    assert eng.metrics.queries_ok == repeats * n_queries
+    return dict(
+        n_queries=n_queries,
+        unbatched_wall_s=t_unbatched,
+        batched_wall_s=t_batched,
+        unbatched_qps_wall=n_queries / t_unbatched,
+        batched_qps_wall=n_queries / t_batched,
+        speedup=t_unbatched / t_batched,
+        recompiles_after_warmup=serving_jit_cache_size() - cache0,
+        mean_occupancy=eng.metrics.occupancy.mean(),
+    )
+
+
+def measure_mixed_ingest(n: int, dim: int, n_queries: int,
+                         seed: int = 3) -> dict:
+    """Recall@10 while upserts stream through the interleaved ingest queue,
+    vs the query-only run (paper §3.4, Fig 12/13: bounded impact)."""
+    svc, data, rng = build_service(n, dim, seed=seed)
+    queries = data[rng.choice(n, n_queries, replace=False)] + 0.01
+
+    def exact_gt():
+        return [svc.query(VectorQuery(vector=q, k=10, exact=True)).ids
+                for q in queries]
+
+    def recall(results, gts):
+        hits = sum(len(set(ids.tolist()) & set(gt.tolist()))
+                   for ids, gt in zip(results, gts))
+        return hits / (len(results) * 10)
+
+    # each run scores against the corpus as it stood: query-only GT before
+    # ingest, mixed GT after — anything else biases the comparison
+    gt_only = exact_gt()
+    only = [svc.query(VectorQuery(vector=q, k=10)).ids for q in queries]
+
+    extra = clustered(rng, max(n // 4, 64), dim) + 3.0
+    svc.upsert_async([{"id": 10**6 + i} for i in range(len(extra))], extra)
+    mixed = [svc.query(VectorQuery(vector=q, k=10)).ids for q in queries]
+    svc.engine.flush_ingest()
+    gt_mixed = exact_gt()
+
+    r_only, r_mixed = recall(only, gt_only), recall(mixed, gt_mixed)
+    return dict(n_ingested=len(extra), recall_query_only=r_only,
+                recall_mixed=r_mixed, delta=r_only - r_mixed)
+
+
+def run(n: int = 3000, dim: int = 32, n_queries: int = 96,
+        rates=(200.0, 800.0, 2500.0), seed: int = 0) -> dict:
+    svc, data, rng = build_service(n, dim, seed=seed)
+    queries = data[rng.choice(n, n_queries, replace=False)] + 0.01
+
+    loads = [run_load(svc.collection, data, queries, r, rng) for r in rates]
+    speed = measure_speedup(svc, data, n_queries, rng)
+    mixed = measure_mixed_ingest(max(n // 4, 400), dim, max(n_queries // 4, 16))
+
+    out = dict(
+        config=dict(n=n, dim=dim, n_queries=n_queries, rates=list(rates),
+                    max_batch=16),
+        loads=loads,
+        speedup_batch16=speed,
+        mixed_ingest=mixed,
+    )
+    return out
+
+
+def main(smoke: bool = False):
+    if smoke:
+        out = run(n=600, dim=32, n_queries=24, rates=(200.0, 1500.0))
+    else:
+        out = run()
+
+    name = "BENCH_serve.smoke.json" if smoke else "BENCH_serve.json"
+    path = Path(__file__).resolve().parent.parent / name
+    path.write_text(json.dumps(out, indent=2))
+    print(f"bench_serve → {path}")
+    for row in out["loads"]:
+        print(f"  offered={row['offered_qps']:7.0f}/s served={row['qps']:7.1f}/s "
+              f"p50={row['p50_ms']:.2f}ms p95={row['p95_ms']:.2f}ms "
+              f"p99={row['p99_ms']:.2f}ms RU/s={row['ru_per_s']:.0f} "
+              f"occ={row['mean_occupancy']:.2f} recompiles={row['recompiles']}")
+    sp = out["speedup_batch16"]
+    print(f"  batch16 speedup: {sp['speedup']:.2f}x "
+          f"({sp['unbatched_qps_wall']:.1f} → {sp['batched_qps_wall']:.1f} q/s wall), "
+          f"recompiles_after_warmup={sp['recompiles_after_warmup']}")
+    mx = out["mixed_ingest"]
+    print(f"  mixed ingest: recall@10 {mx['recall_query_only']:.3f} → "
+          f"{mx['recall_mixed']:.3f} (Δ={mx['delta']:.3f}, "
+          f"{mx['n_ingested']} docs streamed)")
+
+    # acceptance floors (ISSUE 2). The ≥3x bound is the full-scale
+    # criterion; at smoke sizes per-call host overhead dominates and the
+    # ratio is noisier, so the smoke floor only guards against rot.
+    floor = 2.0 if smoke else 3.0
+    assert sp["speedup"] >= floor, \
+        f"batched speedup {sp['speedup']:.2f}x < {floor}x"
+    assert sp["recompiles_after_warmup"] == 0, "steady state must not recompile"
+    assert mx["recall_mixed"] >= mx["recall_query_only"] - 0.02, \
+        f"ingest degraded recall: {mx}"
+    return out
+
+
+if __name__ == "__main__":
+    main(smoke="--smoke" in sys.argv[1:])

@@ -27,9 +27,14 @@ def _entry(name, fn, derive):
 def main() -> None:
     from . import (bench_algo_compare, bench_cost, bench_filtered,
                    bench_ingest, bench_query, bench_runbooks, bench_scaleout,
-                   bench_scaling, bench_sharded)
+                   bench_scaling, bench_serve, bench_sharded)
 
     jobs = [
+        ("serve_engine", bench_serve.main,
+         lambda out: (f"speedup={out['speedup_batch16']['speedup']:.1f}x;"
+                      f"recompiles={out['speedup_batch16']['recompiles_after_warmup']};"
+                      f"p99@{out['loads'][-1]['offered_qps']:.0f}qps="
+                      f"{out['loads'][-1]['p99_ms']:.1f}ms")),
         ("fig6_query_vs_L", bench_query.main,
          lambda rows: f"recall@L100={rows[-1]['recall']:.3f};p50={rows[-1]['p50_ms']:.2f}ms"),
         ("fig7_8_scaling", bench_scaling.main,

@@ -1,9 +1,19 @@
 #!/usr/bin/env bash
 # One-command verification gate: import-lint every src/repro module, then
 # run the tier-1 pytest suite. Future PRs are judged against this script.
+#
+#   scripts/check.sh            # import lint + tier-1 tests
+#   scripts/check.sh --smoke    # ...then bench_serve + bench_query at tiny
+#                               # sizes, so benchmarks can't silently rot
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="$PWD/src${PYTHONPATH:+:$PYTHONPATH}"
+
+SMOKE=0
+if [[ "${1:-}" == "--smoke" ]]; then
+  SMOKE=1
+  shift
+fi
 
 echo "== import lint: every module under src/repro =="
 python - <<'EOF'
@@ -30,3 +40,9 @@ EOF
 
 echo "== tier-1 tests =="
 python -m pytest -x -q "$@"
+
+if [[ "$SMOKE" == 1 ]]; then
+  echo "== smoke benchmarks (tiny sizes; asserts are the contract) =="
+  python -m benchmarks.bench_serve --smoke
+  python -m benchmarks.bench_query --smoke
+fi

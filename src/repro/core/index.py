@@ -398,10 +398,21 @@ class DiskANNIndex:
         k: int,
         L: Optional[int] = None,
         rerank_multiplier: float = fmod.QUANTIZED_LIST_MULTIPLIER,
+        pad_to_bucket: bool = False,
+        batch_buckets: tuple[int, ...] = smod.BATCH_BUCKETS,
     ) -> tuple[np.ndarray, np.ndarray, QueryStats]:
         """Top-k ANN: graph search in quantized space + full-precision
-        re-rank. Returns (doc_ids (B,k), dists (B,k), stats)."""
+        re-rank. Returns (doc_ids (B,k), dists (B,k), stats).
+
+        With ``pad_to_bucket`` the query batch is padded to the next static
+        bucket before any jitted stage (LUTs, graph search, re-rank) so the
+        serving layer's varying batch sizes map onto a handful of compiled
+        signatures; outputs and stats are sliced back to the true batch.
+        """
         queries = np.asarray(queries, np.float32)
+        B = len(queries)
+        if pad_to_bucket:
+            queries = smod.pad_batch_np(queries, smod.next_bucket(B, batch_buckets))
         L = L or self.cfg.L_search
         stats = QueryStats()
         kprime = max(k, int(round(rerank_multiplier * k)))
@@ -413,22 +424,30 @@ class DiskANNIndex:
                 jnp.asarray(queries), vectors, live, k=k, metric=self.cfg.metric
             )
             stats.full_reads = self.num_live
-            return self._to_doc_ids(np.asarray(ids)), np.asarray(dists), stats
+            return (
+                self._to_doc_ids(np.asarray(ids))[:B],
+                np.asarray(dists)[:B],
+                stats,
+            )
 
         neighbors, codes, versions, live, vectors = self.pv.materialize(self.ctx)
         luts = self._luts(queries)
         L_eff = max(L, kprime)
-        res = smod.batch_greedy_search(
-            neighbors, codes, versions, live, luts, jnp.int32(self.medoid), L=L_eff
+        # queries are already bucket-padded above when pad_to_bucket is set,
+        # so the wrapper's own pad is a no-op then; it still normalizes any
+        # direct unpadded call onto the same static signatures
+        res = smod.bucketed_batch_greedy_search(
+            neighbors, codes, versions, live, luts, jnp.int32(self.medoid),
+            L=L_eff, batch_buckets=batch_buckets,
         )
         ids, dists = fmod.rerank(
             jnp.asarray(queries), res.beam_ids[:, :kprime], vectors,
             k=k, metric=self.cfg.metric,
         )
-        stats.hops = float(np.asarray(res.n_hops).mean())
-        stats.cmps = float(np.asarray(res.n_cmps).mean())
+        stats.hops = float(np.asarray(res.n_hops)[:B].mean())
+        stats.cmps = float(np.asarray(res.n_cmps)[:B].mean())
         stats.full_reads = float(kprime)
-        return self._to_doc_ids(np.asarray(ids)), np.asarray(dists), stats
+        return self._to_doc_ids(np.asarray(ids))[:B], np.asarray(dists)[:B], stats
 
     def _to_doc_ids(self, slots: np.ndarray) -> np.ndarray:
         out = np.where(slots >= 0, self.slot_to_doc[np.maximum(slots, 0)], -1)

@@ -23,6 +23,7 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import graph as g
 from . import pq as pqmod
@@ -174,6 +175,30 @@ def greedy_search(
     )
 
 
+@functools.partial(
+    jax.jit, static_argnames=("L", "max_hops", "visited_cap", "has_filter")
+)
+def _batched_search_entry(
+    neighbors, codes, versions, live, luts, start, filter_bits, beta,
+    *, L: int, max_hops: int, visited_cap: int, has_filter: bool,
+) -> SearchResult:
+    """Top-level jitted vmap over ``greedy_search``.
+
+    Being the outermost jit matters: its compile cache is keyed by the full
+    (batch, L, …) signature, so ``jit_cache_size()`` is a truthful recompile
+    counter for the serving hot path (an inner jit under vmap never sees its
+    own cache populated — compilation happens in the pjit-primitive path).
+    """
+    fn = functools.partial(
+        greedy_search, neighbors, codes, versions, live,
+        L=L, max_hops=max_hops, visited_cap=visited_cap,
+        has_filter=has_filter, beta=beta,
+    )
+    if has_filter:
+        return jax.vmap(lambda lut, fb: fn(lut, start, filter_bits=fb))(luts, filter_bits)
+    return jax.vmap(lambda lut: fn(lut, start))(luts)
+
+
 def batch_greedy_search(
     neighbors: jax.Array,
     codes: jax.Array,
@@ -189,21 +214,96 @@ def batch_greedy_search(
     beta: float = 1.0,
 ) -> SearchResult:
     """vmapped GreedySearch over a query batch (lockstep beam expansion)."""
-    fn = functools.partial(
-        greedy_search,
-        neighbors,
-        codes,
-        versions,
-        live,
-        L=L,
-        max_hops=max_hops,
-        visited_cap=visited_cap,
-        has_filter=filter_bits is not None,
-        beta=beta,
+    has_filter = filter_bits is not None
+    if not has_filter:
+        # dummy with a stable shape so the jit signature doesn't churn
+        filter_bits = jnp.zeros((luts.shape[0], 1), jnp.uint32)
+    return _batched_search_entry(
+        neighbors, codes, versions, live, luts, jnp.asarray(start, jnp.int32),
+        filter_bits, jnp.float32(beta),
+        L=L, max_hops=max_hops, visited_cap=visited_cap, has_filter=has_filter,
     )
-    if filter_bits is not None:
-        return jax.vmap(lambda lut, fb: fn(lut, start, filter_bits=fb))(luts, filter_bits)
-    return jax.vmap(lambda lut: fn(lut, start))(luts)
+
+
+def jit_cache_size() -> int:
+    """Compiled-signature count of the batched-search entry (recompile
+    telemetry for the serving layer; see serve/vector_engine.py)."""
+    try:
+        return int(_batched_search_entry._cache_size())
+    except AttributeError:  # very old/new jit wrappers
+        return -1
+
+
+# ---------------------------------------------------------------------------
+# shape bucketing — fixed (batch, L) signatures for the serving layer
+# ---------------------------------------------------------------------------
+
+BATCH_BUCKETS: tuple[int, ...] = (1, 2, 4, 8, 16, 32, 64)
+
+
+def next_bucket(n: int, buckets: tuple[int, ...] = BATCH_BUCKETS) -> int:
+    """Smallest bucket ≥ n; beyond the largest, round up to a multiple of it
+    (callers should split such batches, but never get a shape explosion)."""
+    for b in buckets:
+        if n <= b:
+            return b
+    top = buckets[-1]
+    return ((n + top - 1) // top) * top
+
+
+def pad_batch(arr: jax.Array, bucket: int) -> jax.Array:
+    """Pad the leading (batch) axis to `bucket` by repeating row 0 — padded
+    lanes redo real work so every lane stays numerically well-formed."""
+    b = arr.shape[0]
+    if b == bucket:
+        return arr
+    filler = jnp.broadcast_to(arr[:1], (bucket - b,) + arr.shape[1:])
+    return jnp.concatenate([arr, filler], axis=0)
+
+
+def pad_batch_np(arr: np.ndarray, bucket: int) -> np.ndarray:
+    """Host-side twin of ``pad_batch`` — pads query batches before they
+    enter any jitted stage (LUTs, search, re-rank share one bucket)."""
+    b = len(arr)
+    if b == bucket:
+        return arr
+    return np.concatenate(
+        [arr, np.broadcast_to(arr[:1], (bucket - b,) + arr.shape[1:])]
+    )
+
+
+def bucketed_batch_greedy_search(
+    neighbors: jax.Array,
+    codes: jax.Array,
+    versions: jax.Array,
+    live: jax.Array,
+    luts: jax.Array,  # (B, Vschemas, M, K)
+    start: jax.Array,
+    *,
+    L: int,
+    batch_buckets: tuple[int, ...] = BATCH_BUCKETS,
+    max_hops: int = 0,
+    visited_cap: int = 0,
+    filter_bits: Optional[jax.Array] = None,
+    beta: float = 1.0,
+) -> SearchResult:
+    """`batch_greedy_search` padded to a fixed batch bucket, results sliced
+    back to the true batch — steady-state traffic whose batch sizes vary
+    within one bucket reuses a single compiled executable (zero recompiles)."""
+    B = luts.shape[0]
+    bucket = next_bucket(B, batch_buckets)
+    if bucket != B:
+        luts = pad_batch(luts, bucket)
+        if filter_bits is not None:
+            filter_bits = pad_batch(filter_bits, bucket)
+    res = batch_greedy_search(
+        neighbors, codes, versions, live, luts, start,
+        L=L, max_hops=max_hops, visited_cap=visited_cap,
+        filter_bits=filter_bits, beta=beta,
+    )
+    if bucket != B:
+        res = SearchResult(*(a[:B] for a in res))
+    return res
 
 
 def search_candidates(res: SearchResult) -> tuple[jax.Array, jax.Array]:

@@ -38,6 +38,7 @@ from ..configs import (ARCH_IDS, SHAPES, cell_supported, get_config,
 from ..configs import cosmosann as cosmos_cfg
 from ..models import steps as steps_mod
 from ..models.config import ModelConfig
+from ..partition.fanout import distributed_search_fn
 from .mesh import make_production_mesh
 
 COLLECTIVE_OPS = (
@@ -255,8 +256,6 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, out_dir: str,
 
 
 def _run_cosmos_cell(mesh) -> dict:
-    from ..partition.fanout import distributed_search_fn
-
     cfg = cosmos_cfg.config()
     n_dev = int(len(mesh.devices.reshape(-1)))
     specs = cosmos_cfg.shard_specs(cfg, n_dev)

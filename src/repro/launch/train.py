@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs import get_config, get_smoke_config
+from ..configs.shapes import ShapeSpec, input_specs
 from ..models import steps as steps_mod
 from ..models.config import ModelConfig
 from ..train import checkpoint as ckpt
@@ -39,8 +40,6 @@ def train(
 ) -> dict:
     mesh = make_host_mesh()
     opt_cfg = OptConfig(lr=lr, warmup_steps=max(steps // 10, 1), total_steps=steps)
-
-    from ..configs.shapes import ShapeSpec, input_specs
 
     spec = ShapeSpec("train", seq_len, global_batch, "train")
     batch_shapes = input_specs(cfg, spec)

@@ -22,7 +22,9 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
+from .. import compat
 from .config import MLAConfig, ModelConfig
 from .layers import apply_rope, dense_init, rmsnorm, rmsnorm_init
 
@@ -71,9 +73,6 @@ def _qkv(params, cfg: ModelConfig, x, positions):
 def _cp_constrain(x: jax.Array, seq_axis: int) -> jax.Array:
     """Shard dim `seq_axis` over the `model` mesh axis (context parallelism)
     under the ambient mesh; no-op without one or when indivisible."""
-    from jax.sharding import PartitionSpec as P
-
-    from .. import compat
     m = compat.get_abstract_mesh()
     if m is None or "model" not in (m.axis_names or ()):
         return x

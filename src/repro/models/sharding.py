@@ -23,6 +23,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from .. import compat
+
 from .config import ModelConfig
 
 
@@ -152,7 +154,6 @@ def constrain_batch_dim(x: jax.Array, extra: tuple = ()) -> jax.Array:
     replicating layer inputs across the mesh (measured: smollm train went
     from fully-replicated compute to properly sharded once constrained).
     """
-    from .. import compat
     m = compat.get_abstract_mesh()
     if m is None or not m.axis_names:
         return x

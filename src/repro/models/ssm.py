@@ -30,8 +30,7 @@ def _chunk_scan(step, init, xs, unroll: bool):
     for i in range(n):
         carry, y = step(carry, jax.tree.map(lambda a: a[i], xs))
         ys.append(y)
-    import jax.numpy as _jnp
-    return carry, _jnp.stack(ys, axis=0)
+    return carry, jnp.stack(ys, axis=0)
 
 
 # ---------------------------------------------------------------------------

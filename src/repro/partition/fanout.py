@@ -30,6 +30,7 @@ from .. import compat
 from ..core import flat as fmod
 from ..core import pq as pqmod
 from ..core import search as smod
+from ..store.ru import OpCounters
 
 INF = jnp.float32(jnp.inf)
 
@@ -85,6 +86,51 @@ def fanout_search(
         server_latencies_ms=lats,
         client_latency_ms=float(np.max(lats)) if lats else 0.0,
         hedges=hedges,
+    )
+    return ids, dists, info
+
+
+def batched_fanout_search(
+    partitions,  # Sequence[PhysicalPartition]
+    queries: np.ndarray,  # (B, D) — a dense micro-batch of independent queries
+    k: int,
+    L: Optional[int] = None,
+    batch_buckets: Optional[tuple[int, ...]] = None,
+) -> tuple[np.ndarray, np.ndarray, dict]:
+    """Multi-query scatter/gather for the serving engine.
+
+    Unlike ``fanout_search`` (one logical query, per-partition bookkeeping),
+    this dispatches a whole micro-batch to every partition as ONE
+    fixed-shape device call (padded to `batch_buckets`), then merges the
+    per-partition top-k. info carries total RU, per-partition RU/stats, and
+    the modelled worst-partition latency (client latency tracks the slowest
+    partition, §4.3).
+    """
+    kw: dict = {}
+    if batch_buckets is not None:
+        kw = dict(pad_to_bucket=True, batch_buckets=batch_buckets)
+    ids_l, dists_l, rus, lat_ms = [], [], [], []
+    stats_l = []
+    for p in partitions:
+        ids, dists, ru, stats = p.search_batch(queries, k, L, **kw)
+        ids_l.append(ids)
+        dists_l.append(dists)
+        rus.append(ru)
+        stats_l.append(stats)
+        lat_ms.append(
+            p.providers.meter.latency_ms(OpCounters(
+                quant_reads=int(stats.cmps),
+                adj_reads=int(stats.hops),
+                full_reads=int(stats.full_reads),
+            ))
+        )
+    ids, dists = merge_topk(ids_l, dists_l, k)
+    info = dict(
+        ru_per_partition=rus,
+        ru_total=float(np.sum(rus)),
+        stats_per_partition=stats_l,
+        server_latencies_ms=lat_ms,
+        service_latency_ms=float(np.max(lat_ms)) if lat_ms else 0.0,
     )
     return ids, dists, info
 

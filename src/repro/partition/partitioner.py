@@ -85,6 +85,15 @@ class PhysicalPartition:
 
     def search(self, queries: np.ndarray, k: int, L: Optional[int] = None,
                **kw) -> tuple[np.ndarray, np.ndarray, float]:
+        ids, dists, ru, _stats = self.search_batch(queries, k, L, **kw)
+        return ids, dists, ru / max(len(queries), 1)
+
+    def search_batch(
+        self, queries: np.ndarray, k: int, L: Optional[int] = None, **kw
+    ) -> tuple[np.ndarray, np.ndarray, float, "QueryStats"]:
+        """Dense multi-query search. Returns (ids, dists, total RU, stats) —
+        the serving engine's entry point: stats feed its latency model and
+        the total RU feeds per-tenant admission accounting."""
         self.providers.begin_op()
         ids, dists, stats = self.index.search(queries, k, L, **kw)
         self.providers.op.quant_reads += int(stats.cmps * len(queries))
@@ -92,7 +101,7 @@ class PhysicalPartition:
         self.providers.op.full_reads += int(stats.full_reads * len(queries))
         ru, _ = self.providers.end_op()
         self.governor.request(ru)
-        return ids, dists, ru / max(len(queries), 1)
+        return ids, dists, ru, stats
 
 
 class Collection:

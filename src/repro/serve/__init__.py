@@ -1,5 +1,12 @@
-"""repro.serve — serving: the Cosmos-style vector service + LM engine."""
-from .vector_service import VectorCollectionService, VectorQuery
+"""repro.serve — serving: the Cosmos-style vector service + engines."""
 from .engine import ServeEngine
+from .metrics import EngineMetrics, SimClock, poisson_arrivals
+from .vector_engine import (EngineConfig, ServeRequest, ServeResponse,
+                            Throttled, VectorServeEngine)
+from .vector_service import VectorCollectionService, VectorQuery
 
-__all__ = ["VectorCollectionService", "VectorQuery", "ServeEngine"]
+__all__ = [
+    "VectorCollectionService", "VectorQuery", "ServeEngine",
+    "VectorServeEngine", "EngineConfig", "ServeRequest", "ServeResponse",
+    "Throttled", "EngineMetrics", "SimClock", "poisson_arrivals",
+]

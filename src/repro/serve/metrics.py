@@ -1,0 +1,119 @@
+"""Deterministic serving metrics: simulated clock + latency/throughput stats.
+
+Everything the serving engine reports is computed against a *simulated*
+clock, so tests and benchmarks are bit-reproducible offline: arrivals are
+stamped by the workload generator, service time comes from the calibrated
+§4.4 access-time model, and queue wait falls out of the two. The same
+registry also tracks real recompile telemetry (`core.search.jit_cache_size`)
+because compile stalls are the one latency source the model cannot see.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+class SimClock:
+    """Monotonic simulated time in seconds. Advanced explicitly by the
+    engine (service time) and by workload generators (arrival gaps)."""
+
+    def __init__(self, t0: float = 0.0):
+        self._t = float(t0)
+
+    def now(self) -> float:
+        return self._t
+
+    def advance(self, seconds: float) -> float:
+        assert seconds >= 0.0, "time only moves forward"
+        self._t += seconds
+        return self._t
+
+
+class Histogram:
+    """Exact sample store (offline scale) with percentile readout."""
+
+    def __init__(self):
+        self._samples: list[float] = []
+
+    def observe(self, v: float):
+        self._samples.append(float(v))
+
+    @property
+    def count(self) -> int:
+        return len(self._samples)
+
+    def mean(self) -> float:
+        return float(np.mean(self._samples)) if self._samples else 0.0
+
+    def percentile(self, p: float) -> float:
+        return float(np.percentile(self._samples, p)) if self._samples else 0.0
+
+
+@dataclasses.dataclass
+class EngineMetrics:
+    """Counters + distributions for one VectorServeEngine lifetime."""
+
+    queries_ok: int = 0
+    queries_throttled: int = 0
+    batches: int = 0
+    lanes_total: int = 0  # dispatched lanes incl. padding
+    lanes_padded: int = 0
+    ingest_ops: int = 0
+    ingest_batches: int = 0
+    ru_query_total: float = 0.0
+    ru_ingest_total: float = 0.0
+    started_s: float = 0.0
+    latency_ms: Histogram = dataclasses.field(default_factory=Histogram)
+    wait_ms: Histogram = dataclasses.field(default_factory=Histogram)
+    occupancy: Histogram = dataclasses.field(default_factory=Histogram)
+    # trajectory of the batched-search jit cache size, one point per batch:
+    # flat in steady state == zero recompiles
+    jit_cache_trajectory: list = dataclasses.field(default_factory=list)
+
+    def note_batch(self, true_lanes: int, bucket: int, service_ms: float,
+                   ru: float, cache_size: int):
+        self.batches += 1
+        self.lanes_total += bucket
+        self.lanes_padded += bucket - true_lanes
+        self.ru_query_total += ru
+        self.occupancy.observe(true_lanes / max(bucket, 1))
+        self.jit_cache_trajectory.append(int(cache_size))
+
+    def recompiles_since(self, batch_index: int = 0) -> int:
+        """Jit cache growth after batch `batch_index` (0 = engine start)."""
+        traj = self.jit_cache_trajectory
+        if not traj:
+            return 0
+        base = traj[batch_index] if batch_index < len(traj) else traj[-1]
+        return traj[-1] - base
+
+    def snapshot(self, now_s: float) -> dict:
+        elapsed = max(now_s - self.started_s, 1e-9)
+        return dict(
+            queries_ok=self.queries_ok,
+            queries_throttled=self.queries_throttled,
+            batches=self.batches,
+            qps=self.queries_ok / elapsed,
+            ru_per_s=self.ru_query_total / elapsed,
+            ru_query_total=self.ru_query_total,
+            ru_ingest_total=self.ru_ingest_total,
+            ingest_ops=self.ingest_ops,
+            p50_ms=self.latency_ms.percentile(50),
+            p95_ms=self.latency_ms.percentile(95),
+            p99_ms=self.latency_ms.percentile(99),
+            mean_wait_ms=self.wait_ms.mean(),
+            mean_occupancy=self.occupancy.mean(),
+            pad_fraction=self.lanes_padded / max(self.lanes_total, 1),
+            jit_cache_size=(self.jit_cache_trajectory[-1]
+                            if self.jit_cache_trajectory else 0),
+            elapsed_s=elapsed,
+        )
+
+
+def poisson_arrivals(rng: np.random.RandomState, n: int, rate_per_s: float,
+                     t0: float = 0.0) -> np.ndarray:
+    """Deterministic (seeded) Poisson-process arrival times for workloads."""
+    gaps = rng.exponential(1.0 / rate_per_s, size=n)
+    return t0 + np.cumsum(gaps)

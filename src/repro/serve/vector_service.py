@@ -7,6 +7,13 @@ VectorDistance query function with the planner's selectivity routing
 client-side continuation tokens (the 5-second-preemption model), sharded
 DiskANN for multi-tenancy, and cross-partition fan-out with RU accounting.
 
+Since the serving PR this class is a thin façade over
+``serve.vector_engine.VectorServeEngine``: every query path flows through
+the engine (admission control, micro-batching, metrics, simulated clock),
+and ingest rides the engine's interleaved mini-batch queue. The service
+keeps what needs the document store — predicate→bitmap conversion for
+filtered plans, tenant routing, and pagination state.
+
 This is the host-side service; the device-parallel path for the same
 operation is `repro.partition.fanout.distributed_search_fn`.
 """
@@ -19,9 +26,10 @@ from typing import Any, Callable, Optional, Sequence
 import numpy as np
 
 from ..core import GraphConfig
-from ..core import flat as fmod
 from ..partition import Collection, CollectionConfig, ReplicaSet
-from ..partition.fanout import fanout_search, merge_topk
+from ..partition.fanout import merge_topk
+from ..store.ru import OpCounters
+from .vector_engine import EngineConfig, ServeRequest, Throttled, VectorServeEngine
 
 
 @dataclasses.dataclass
@@ -32,6 +40,7 @@ class VectorQuery:
     search_list_multiplier: float = 5.0  # searchListSizeMultiplier
     exact: bool = False  # VectorDistance(..., true) → brute force
     shard_key: Any = None  # route to a sharded-DiskANN tenant index
+    tenant: Any = "default"  # RU-admission principal (429s when over budget)
 
 
 @dataclasses.dataclass
@@ -41,6 +50,7 @@ class QueryResult:
     ru: float
     plan: str
     continuation: Optional[bytes] = None
+    latency_ms: float = 0.0
 
 
 class VectorCollectionService:
@@ -54,6 +64,7 @@ class VectorCollectionService:
         initial_partitions: int = 1,
         replicas: int = 4,
         shard_key_path: Optional[str] = None,
+        engine_cfg: EngineConfig = EngineConfig(),
     ):
         graph = graph or GraphConfig(capacity=max_vectors_per_partition + 1024)
         self.cfg = CollectionConfig(
@@ -71,30 +82,79 @@ class VectorCollectionService:
         self.shard_key_path = shard_key_path
         # sharded DiskANN: tenant value → per-tenant collection
         self._tenant_collections: dict[Any, Collection] = {}
+        self.engine = VectorServeEngine(
+            self.collection, cfg=engine_cfg, resolver=self._partitions_for
+        )
+
+    def _partitions_for(self, shard_key: Any):
+        if shard_key is not None and self.shard_key_path:
+            return self._tenant(shard_key).partitions
+        return self.collection.partitions
 
     # ------------------------------------------------------------------
-    # ingest
+    # ingest (through the engine's interleaved mini-batch queue)
     # ------------------------------------------------------------------
     def upsert(self, documents: Sequence[dict], vectors: np.ndarray,
                partition_keys: Optional[Sequence] = None) -> float:
-        """Insert documents (dicts with 'id') + their embedding vectors."""
+        """Insert documents (dicts with 'id') + their embedding vectors.
+        Synchronous: enqueues chunked ingest work on the engine and drains
+        it before returning (use ``upsert_async`` to leave it interleaving
+        with query traffic)."""
+        total = self.upsert_async(documents, vectors, partition_keys)
+        self.engine.flush_ingest()
+        return total.value
+
+    def upsert_async(self, documents: Sequence[dict], vectors: np.ndarray,
+                     partition_keys: Optional[Sequence] = None) -> "_RUTally":
+        vectors = np.asarray(vectors, np.float32)
         ids = [int(d["id"]) for d in documents]
-        pks = partition_keys or ids
+        pks = list(partition_keys) if partition_keys is not None else ids
+        tally = _RUTally()
+        chunk = self.engine.cfg.ingest_chunk
+        for lo in range(0, len(documents), chunk):
+            hi = min(lo + chunk, len(documents))
+            docs_c = list(documents[lo:hi])
+            ids_c, pks_c, vecs_c = ids[lo:hi], pks[lo:hi], vectors[lo:hi]
+            self.engine.submit_ingest(
+                "upsert",
+                lambda d=docs_c, i=ids_c, p=pks_c, v=vecs_c:
+                    tally.add(self._apply_upsert(d, i, p, v)),
+                len(docs_c),
+            )
+        return tally
+
+    def _apply_upsert(self, documents, ids, pks, vectors) -> float:
         for d in documents:
             self.docs[int(d["id"])] = d
-        ru = self.collection.insert(ids, pks, np.asarray(vectors, np.float32))
+        ru = self.collection.insert(ids, pks, vectors)
         if self.shard_key_path:
             groups: dict[Any, list[int]] = {}
             for i, d in enumerate(documents):
                 groups.setdefault(d.get(self.shard_key_path), []).append(i)
             for key, rows in groups.items():
                 ru += self._tenant(key).insert(
-                    [ids[i] for i in rows], [pks[i] for i in rows],
-                    np.asarray(vectors, np.float32)[rows],
+                    [ids[i] for i in rows], [pks[i] for i in rows], vectors[rows]
                 )
         return ru
 
     def delete(self, doc_ids: Sequence[int]) -> float:
+        total = self.delete_async(doc_ids)
+        self.engine.flush_ingest()
+        return total.value
+
+    def delete_async(self, doc_ids: Sequence[int]) -> "_RUTally":
+        tally = _RUTally()
+        chunk = self.engine.cfg.ingest_chunk
+        doc_ids = list(doc_ids)
+        for lo in range(0, len(doc_ids), chunk):
+            ids_c = doc_ids[lo:lo + chunk]
+            self.engine.submit_ingest(
+                "delete", lambda i=ids_c: tally.add(self._apply_delete(i)),
+                len(ids_c),
+            )
+        return tally
+
+    def _apply_delete(self, doc_ids: Sequence[int]) -> float:
         pks = [d for d in doc_ids]
         shard_groups: dict[Any, list[int]] = {}
         for d in doc_ids:
@@ -108,57 +168,59 @@ class VectorCollectionService:
 
     def _tenant(self, key) -> Collection:
         if key not in self._tenant_collections:
-            g = self.cfg.graph
             self._tenant_collections[key] = Collection(
                 dataclasses.replace(self.cfg, initial_partitions=1)
             )
         return self._tenant_collections[key]
 
     # ------------------------------------------------------------------
-    # query (§3.5 routing)
+    # query (§3.5 routing — thin façade over the engine)
     # ------------------------------------------------------------------
     def query(self, q: VectorQuery) -> QueryResult:
-        qv = np.asarray(q.vector, np.float32)[None, :]
-        target = (
-            self._tenant(q.shard_key).partitions
-            if q.shard_key is not None and self.shard_key_path
-            else self.collection.partitions
-        )
+        """Route one query through the serving engine. Raises ``Throttled``
+        when the tenant is over its RU budget (the 429 path)."""
+        qv = np.asarray(q.vector, np.float32)
 
-        if q.exact:
-            ids_l, d_l, ru = [], [], 0.0
-            for p in target:
-                pv = p.providers
-                import jax.numpy as jnp
-                ids, dists = fmod.brute_force(
-                    jnp.asarray(qv), jnp.asarray(pv.vectors), jnp.asarray(pv.live),
-                    k=q.k, metric=p.index.cfg.metric,
-                )
-                ids_l.append(p.index._to_doc_ids(np.asarray(ids)))
-                d_l.append(np.asarray(dists))
-                ru += 0.5 * p.num_docs * 0.0125  # full scan in quantized-ish cost
-            ids, dists = merge_topk(ids_l, d_l, q.k)
-            return QueryResult(ids[0], dists[0], ru, "exact")
-
-        if q.filter is not None:
-            ids_l, d_l, ru = [], [], 0.0
-            plan = ""
-            for p in target:
-                mask = np.zeros(p.index.cfg.capacity, bool)
-                for doc, slot in p.index.doc_to_slot.items():
-                    if doc in self.docs and q.filter(self.docs[doc]):
-                        mask[slot] = True
-                ids, dists, stats = p.index.filtered_search(qv, q.k, mask)
-                ids_l.append(ids)
-                d_l.append(dists)
-                plan = stats.plan
-                ru += p.providers.meter.ru(_stats_counters(stats))
-            ids, dists = merge_topk(ids_l, d_l, q.k)
-            return QueryResult(ids[0], dists[0], ru, f"filtered:{plan}")
+        # precedence as before the engine rewire: VectorDistance(..., true)
+        # forces the exact plan even when a filter is also set
+        if q.filter is not None and not q.exact:
+            resp = self.engine.execute_host(
+                q.tenant, "filtered", lambda: self._run_filtered(q, qv)
+            )
+            return QueryResult(resp.ids, resp.dists, resp.ru, resp.plan,
+                               latency_ms=resp.latency_ms)
 
         L = max(q.k, int(round(q.search_list_multiplier * q.k)))
-        ids, dists, info = fanout_search(target, qv, q.k, L=L)
-        return QueryResult(ids[0], dists[0], info["ru_total"], "graph")
+        rid = self.engine.next_rid()
+        resp = self.engine.query_sync(ServeRequest(
+            rid=rid, vector=qv, k=q.k, L=L, tenant=q.tenant,
+            exact=q.exact, shard_key=q.shard_key,
+        ))
+        if resp.status == 429:
+            raise Throttled(q.tenant, resp.retry_after_s)
+        return QueryResult(resp.ids, resp.dists, resp.ru, resp.plan,
+                           latency_ms=resp.latency_ms)
+
+    def _run_filtered(self, q: VectorQuery, qv: np.ndarray):
+        """Filtered plan body (needs the doc store for the predicate →
+        bitmap conversion; executed under the engine's accounting)."""
+        target = self._partitions_for(q.shard_key)
+        ids_l, d_l, ru, lat_ms = [], [], 0.0, 0.0
+        plan = ""
+        for p in target:
+            mask = np.zeros(p.index.cfg.capacity, bool)
+            for doc, slot in p.index.doc_to_slot.items():
+                if doc in self.docs and q.filter(self.docs[doc]):
+                    mask[slot] = True
+            ids, dists, stats = p.index.filtered_search(qv[None, :], q.k, mask)
+            ids_l.append(ids)
+            d_l.append(dists)
+            plan = stats.plan
+            counters = _stats_counters(stats)
+            ru += p.providers.meter.ru(counters)
+            lat_ms = max(lat_ms, p.providers.meter.latency_ms(counters))
+        ids, dists = merge_topk(ids_l, d_l, q.k)
+        return ids[0], dists[0], ru, lat_ms
 
     # ------------------------------------------------------------------
     # pagination / continuation tokens (§3.5 "Continuations")
@@ -178,9 +240,19 @@ class VectorCollectionService:
         return QueryResult(ids, dists, 0.0, "paginated", continuation=token)
 
 
-def _stats_counters(stats):
-    from ..store.ru import OpCounters
+class _RUTally:
+    """Accumulates RU across deferred ingest thunks (the async-upsert
+    handle: read ``.value`` after the engine has drained the queue)."""
 
+    def __init__(self):
+        self.value = 0.0
+
+    def add(self, ru: float) -> float:
+        self.value += ru
+        return ru
+
+
+def _stats_counters(stats) -> OpCounters:
     return OpCounters(
         quant_reads=int(stats.cmps),
         adj_reads=int(stats.hops),

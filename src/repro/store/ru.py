@@ -20,6 +20,7 @@ shapes of Figs 6-8 because the underlying counters do.
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,11 +103,29 @@ class RUMeter:
         return us / 1000.0 + c.cpu_ms
 
 
+@dataclasses.dataclass(frozen=True)
+class AdmissionDecision:
+    """Outcome of a non-blocking admission check (the 429 path): when not
+    admitted, `retry_after_s` is the refill time until the estimate fits."""
+
+    admitted: bool
+    retry_after_s: float = 0.0
+
+
 class ResourceGovernor:
     """Provisioned-throughput governance (§2.2): grants RU budget per
     second of simulated time; callers exceeding it are throttled (made to
     wait), which is how background graph maintenance is paced so it can
-    catch up with transactions (§3.4)."""
+    catch up with transactions (§3.4).
+
+    Two client styles coexist:
+      * ``request`` — blocking: the caller absorbs the throttle delay
+        (background maintenance pacing);
+      * ``try_admit`` / ``settle`` — non-blocking: the serving layer asks
+        first, rejects over-budget tenants with a retry-after instead of
+        degrading everyone, then settles the actual cost post-execution
+        (which may push `available` negative — the debt refills over time).
+    """
 
     def __init__(self, provisioned_ru_s: float):
         self.provisioned = provisioned_ru_s
@@ -134,3 +153,33 @@ class ResourceGovernor:
         self.available = min(
             self.available + seconds * self.provisioned, self.provisioned
         )
+
+    # ------------------------------------------------------------------
+    # non-blocking API (serving-layer admission control)
+    # ------------------------------------------------------------------
+    def refill_to(self, now_s: float):
+        """Advance to absolute simulated time `now_s`, refilling budget
+        (burst capacity caps at one second of provisioned throughput)."""
+        if now_s > self.clock_s:
+            self.advance(now_s - self.clock_s)
+
+    def try_admit(self, ru_estimate: float, now_s: Optional[float] = None) -> AdmissionDecision:
+        """Would a request costing ~`ru_estimate` fit the current budget?
+        Does NOT consume — pair with ``settle`` after execution."""
+        if now_s is not None:
+            self.refill_to(now_s)
+        if self.available >= ru_estimate:
+            return AdmissionDecision(admitted=True)
+        self.throttle_events += 1
+        deficit = ru_estimate - self.available
+        return AdmissionDecision(
+            admitted=False, retry_after_s=deficit / self.provisioned
+        )
+
+    def settle(self, ru: float, now_s: Optional[float] = None):
+        """Record the actual cost of an admitted request. `available` may go
+        negative (the estimate was low); the debt pays down on refill."""
+        if now_s is not None:
+            self.refill_to(now_s)
+        self.available -= ru
+        self.consumed += ru

@@ -1,4 +1,6 @@
 """Serving layer: the vector service end-to-end + LM serve engine."""
+import pickle
+
 import numpy as np
 import pytest
 
@@ -67,6 +69,39 @@ def test_pagination_with_continuation_tokens(service):
     ids1 = set(r1.ids[r1.ids >= 0].tolist())
     ids2 = set(r2.ids[r2.ids >= 0].tolist())
     assert ids1 and ids2 and not (ids1 & ids2)
+
+
+def test_pagination_tokens_serialize_and_never_repeat(service):
+    """Continuation tokens are client-side state (§3.5): they must survive
+    a full serialize/deserialize round trip (the SDK ships them over the
+    wire) and pages must never repeat results, across many pages."""
+    svc, data = service
+    q = VectorQuery(vector=data[20] + 0.01, k=5)
+    seen: set[int] = set()
+    token = None
+    for _ in range(4):
+        r = svc.query_page(q, token, page_size=5)
+        assert isinstance(r.continuation, bytes)
+        # the client may stash the token anywhere — it round-trips opaquely
+        token = pickle.loads(pickle.dumps(r.continuation))
+        assert isinstance(token, bytes)
+        ids = [i for i in r.ids.tolist() if i >= 0]
+        assert ids, "pages over a 1200-doc collection must not run dry here"
+        assert not (set(ids) & seen), "a result must never repeat across pages"
+        seen.update(ids)
+    assert len(seen) == 20
+
+
+def test_pagination_resumes_identically_from_deserialized_token(service):
+    """Resuming from a round-tripped token yields the same next page as
+    resuming from the in-memory token (the token IS the whole state)."""
+    svc, data = service
+    q = VectorQuery(vector=data[33] + 0.01, k=5)
+    r1 = svc.query_page(q, None, page_size=5)
+    wire = pickle.loads(pickle.dumps(r1.continuation))
+    r2a = svc.query_page(q, r1.continuation, page_size=5)
+    r2b = svc.query_page(q, wire, page_size=5)
+    assert r2a.ids.tolist() == r2b.ids.tolist()
 
 
 def test_delete_removes_from_results(service):

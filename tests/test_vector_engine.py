@@ -1,0 +1,224 @@
+"""VectorServeEngine: micro-batching, bucketing/zero-recompiles, RU
+admission control, interleaved ingest, deterministic metrics."""
+import numpy as np
+import pytest
+
+from repro.core import GraphConfig
+from repro.serve import (EngineConfig, ServeRequest, Throttled,
+                         VectorCollectionService, VectorQuery,
+                         VectorServeEngine)
+from repro.serve.vector_engine import serving_jit_cache_size
+from repro.store.ru import ResourceGovernor
+
+from conftest import clustered_data
+
+
+def make_service(n=800, dim=24, seed=7, **engine_kw):
+    rng = np.random.RandomState(seed)
+    g = GraphConfig(capacity=n + 600, R=16, M=8, L_build=32, L_search=32,
+                    bootstrap_sample=128, refine_sample=10**9, batch_size=64)
+    svc = VectorCollectionService(
+        dim=dim, graph=g, max_vectors_per_partition=n + 500,
+        engine_cfg=EngineConfig(**engine_kw),
+    )
+    data = clustered_data(rng, n, dim)
+    docs = [{"id": i, "category": i % 5} for i in range(n)]
+    svc.upsert(docs, data)
+    return svc, data
+
+
+@pytest.fixture(scope="module")
+def service():
+    return make_service()
+
+
+def test_batched_results_match_direct_search(service):
+    """One micro-batched dispatch == the per-query index search (padding
+    lanes must never leak into real lanes)."""
+    svc, data = service
+    rng = np.random.RandomState(3)
+    pick = rng.choice(len(data), 12, replace=False)
+    queries = data[pick] + 0.01
+    eng = svc.engine
+
+    rids = [eng.submit_query(q, k=5) for q in queries]
+    eng.drain()
+    resps = [eng.responses[r] for r in rids]
+    assert all(r.status == 200 for r in resps)
+    assert resps[0].batch_size == 12  # one dense micro-batch, not 12 singles
+
+    part = svc.collection.partitions[0]
+    L = max(5, int(round(eng.cfg.search_list_multiplier * 5)))
+    ids_direct, _, _ = part.index.search(queries, k=5, L=L)
+    for i, r in enumerate(resps):
+        assert r.ids.tolist() == ids_direct[i].tolist()
+        assert r.ru > 0 and r.latency_ms > 0
+
+
+def test_query_facade_routes_through_engine(service):
+    svc, data = service
+    before = svc.engine.metrics.queries_ok
+    res = svc.query(VectorQuery(vector=data[17] + 0.01, k=5))
+    assert 17 in res.ids.tolist()
+    assert svc.engine.metrics.queries_ok == before + 1
+    assert res.latency_ms > 0
+
+
+def test_bucketing_zero_recompiles_steady_state(service):
+    """Varying batch sizes within one bucket reuse ONE compiled signature:
+    the jit cache-miss count stays flat after the first dispatch."""
+    svc, data = service
+    eng = VectorServeEngine(svc.collection, cfg=EngineConfig(max_batch=16))
+    rng = np.random.RandomState(11)
+    # k=7 → L=35: a signature no other test has touched yet
+    sizes = [16, 9, 12, 16, 10, 13, 15, 11]
+    for B in sizes:
+        pick = rng.choice(len(data), B, replace=False)
+        for q in data[pick]:
+            eng.submit_query(q + 0.01, k=7)
+        eng.drain()
+    traj = eng.metrics.jit_cache_trajectory
+    assert len(traj) == len(sizes)
+    assert traj[-1] == traj[0], f"recompiled in steady state: {traj}"
+    assert eng.metrics.recompiles_since(0) == 0
+    assert eng.metrics.occupancy.mean() > 0.5  # 9..16 over bucket 16
+
+
+def test_cross_bucket_batch_compiles_once_each(service):
+    svc, data = service
+    eng = VectorServeEngine(svc.collection, cfg=EngineConfig(max_batch=4))
+    base = serving_jit_cache_size()
+    for q in data[:3]:
+        eng.submit_query(q, k=9)  # bucket 4, L=45 — fresh signature
+    eng.drain()
+    first = serving_jit_cache_size()
+    for q in data[:4]:
+        eng.submit_query(q + 0.02, k=9)  # same bucket → no new compile
+    eng.drain()
+    assert serving_jit_cache_size() == first > base
+
+
+def test_admission_reserves_budget_against_bursts(service):
+    """A burst of submits BEFORE any dispatch must not all pass admission
+    against the same untouched balance: estimates reserve upfront."""
+    svc, data = service
+    eng = svc.engine
+    eng.set_tenant_budget("bursty", 2.5 * eng.cfg.admission_estimate_ru)
+    results = [eng.submit(ServeRequest(rid=eng.next_rid(), vector=data[i],
+                                       k=5, tenant="bursty"))
+               for i in range(5)]  # no pump between submits
+    admitted = [r for r in results if r is None]
+    rejected = [r for r in results if r is not None]
+    assert len(admitted) == 2, "burst must stop once reservations spend the burst"
+    assert all(r.status == 429 and r.retry_after_s > 0 for r in rejected)
+    eng.drain()
+
+
+def test_admission_throttles_over_budget_tenant(service):
+    svc, data = service
+    eng = svc.engine
+    eng.set_tenant_budget("cheap", 60.0)  # ~1 query per second of budget
+    statuses = []
+    for i in range(6):
+        resp = eng.submit(ServeRequest(rid=eng.next_rid(), vector=data[i],
+                                       k=5, tenant="cheap"))
+        if resp is None:
+            eng.drain()
+            statuses.append(200)
+        else:
+            statuses.append(resp.status)
+            assert resp.retry_after_s > 0
+    assert 200 in statuses, "burst capacity should admit the first request"
+    assert 429 in statuses, "sustained over-budget traffic must throttle"
+    # other tenants are unaffected (isolation, not collective degradation)
+    ok = svc.query(VectorQuery(vector=data[0] + 0.01, k=5, tenant="rich"))
+    assert ok.ids is not None
+
+    # budget refills with simulated time → admitted again
+    gov = eng.tenant_governor("cheap")
+    deficit = max(0.0, eng._ru_ema.get("cheap", 20.0) - gov.available)
+    eng.clock.advance(deficit / gov.provisioned + 1.0)
+    resp = eng.submit(ServeRequest(rid=eng.next_rid(), vector=data[0],
+                                   k=5, tenant="cheap"))
+    assert resp is None, "refilled tenant must be admitted"
+    eng.drain()
+
+
+def test_service_raises_throttled(service):
+    svc, data = service
+    svc.engine.set_tenant_budget("tiny", 1.0)
+    svc.engine.tenant_governor("tiny").available = 0.5  # burn the burst
+    with pytest.raises(Throttled) as ei:
+        svc.query(VectorQuery(vector=data[1], k=5, tenant="tiny"))
+    assert ei.value.retry_after_s > 0
+
+
+def test_governor_try_admit_settle():
+    gov = ResourceGovernor(100.0)
+    d = gov.try_admit(50.0, now_s=0.0)
+    assert d.admitted
+    gov.settle(120.0, now_s=0.0)  # estimate was low — debt allowed
+    assert gov.available < 0
+    d = gov.try_admit(10.0, now_s=0.0)
+    assert not d.admitted and d.retry_after_s > 0
+    gov.refill_to(2.0)  # 200 RU refill, capped at burst=provisioned
+    assert gov.available == 100.0
+    assert gov.try_admit(10.0, now_s=2.0).admitted
+
+
+def test_interleaved_ingest_bounded_recall_and_latency():
+    """§3.4 / Fig 12-13: queries stay correct and bounded while upserts
+    stream through the interleaved ingest queue."""
+    svc, data = make_service(n=500, dim=24, seed=19, ingest_chunk=32)
+    rng = np.random.RandomState(23)
+    pick = rng.choice(500, 16, replace=False)
+    queries = data[pick] + 0.01
+
+    def exact_gt():
+        return [svc.query(VectorQuery(vector=q, k=10, exact=True)).ids
+                for q in queries]
+
+    def recall(results, gts):
+        hits = sum(len(set(ids.tolist()) & set(gt.tolist()))
+                   for ids, gt in zip(results, gts))
+        return hits / (len(results) * 10)
+
+    # query-only pass, scored against the pre-ingest corpus
+    gt_only = exact_gt()
+    only = [svc.query(VectorQuery(vector=q, k=10)).ids for q in queries]
+
+    # mixed pass: stream 160 new docs through the async ingest queue while
+    # the same queries run; the engine alternates query batches with chunks
+    extra = clustered_data(rng, 160, 24) + 3.0  # offset cluster
+    docs = [{"id": 10_000 + i} for i in range(160)]
+    svc.upsert_async(docs, extra)
+    assert svc.engine.ingest_backlog > 0
+    mixed = [svc.query(VectorQuery(vector=q, k=10)).ids for q in queries]
+    svc.engine.flush_ingest()
+    assert svc.engine.ingest_backlog == 0
+    assert svc.collection.num_docs == 500 + 160
+
+    r_only = recall(only, gt_only)
+    r_mixed = recall(mixed, exact_gt())
+    assert r_mixed >= r_only - 0.02, (r_only, r_mixed)
+
+
+def test_metrics_snapshot_sanity(service):
+    svc, _ = service
+    snap = svc.engine.snapshot()
+    assert snap["queries_ok"] > 0
+    assert snap["p50_ms"] <= snap["p95_ms"] <= snap["p99_ms"]
+    assert snap["qps"] > 0 and snap["ru_per_s"] > 0
+    assert 0.0 < snap["mean_occupancy"] <= 1.0
+    assert snap["jit_cache_size"] >= 1
+    assert snap["queue_depth"] == 0
+
+
+def test_exact_plan_batched(service):
+    svc, data = service
+    eng = svc.engine
+    rids = [eng.submit_query(data[i], k=5, exact=True) for i in (3, 4, 5)]
+    eng.drain()
+    for rid, i in zip(rids, (3, 4, 5)):
+        r = eng.responses[rid]
+        assert r.plan == "exact" and i in r.ids.tolist()
