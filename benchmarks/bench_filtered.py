@@ -10,9 +10,9 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import recall as rec
-from repro.store.ru import OpCounters, RUConfig, RUMeter
 
-from .common import build_index, clustered, in_dist_queries, pct
+from .common import (build_index, clustered, in_dist_queries, pct,
+                     query_latency_ms, query_ru)
 
 
 def run(n: int = 8000, dim: int = 48, seed: int = 0, match_frac: float = 0.12):
@@ -29,7 +29,6 @@ def run(n: int = 8000, dim: int = 48, seed: int = 0, match_frac: float = 0.12):
     live[labels == target] = True
     gt = rec.ground_truth(q, data, live, 10)
 
-    meter = RUMeter(RUConfig())
     out = {}
     for mode in ("post", "beta"):
         for L in (50, 100):
@@ -38,10 +37,8 @@ def run(n: int = 8000, dim: int = 48, seed: int = 0, match_frac: float = 0.12):
                 ids, _, st = idx.filtered_search(q[i : i + 1], 10, doc_filter,
                                                  L=L, mode=mode)
                 ids_all.append(ids[0])
-                c = OpCounters(quant_reads=int(st.cmps), adj_reads=int(st.hops),
-                               full_reads=int(st.full_reads))
-                lats.append(meter.latency_ms(c))
-                rus.append(meter.ru(c))
+                lats.append(query_latency_ms(st))  # shared round-aware model
+                rus.append(query_ru(st))
             r = rec.recall_at_k(np.asarray(ids_all), gt, 10)
             out[(mode, L)] = dict(recall=r, p50=pct(lats, 50), p99=pct(lats, 99),
                                   ru=float(np.mean(rus)))

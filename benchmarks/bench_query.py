@@ -17,7 +17,23 @@ import numpy as np
 from repro.core import recall as rec
 from repro.kernels.topk_select import ops as topk_ops
 
-from .common import build_index, clustered, in_dist_queries, pct, per_query_stats
+from .common import (build_index, clustered, in_dist_queries, pct,
+                     per_query_stats, query_latency_ms, query_ru)
+
+
+def beamwidth_sweep(idx, q, gt, L: int = 50, widths=(1, 2, 4)):
+    """W-way hop batching: recall must stay put while sequential rounds
+    (n_hops) drop ~W× and modeled latency follows the shorter critical
+    path. Returns one row per W."""
+    rows = []
+    for W in widths:
+        ids, _, st = idx.search(q, k=10, L=L, beam_width=W)
+        rows.append(dict(
+            W=W, recall=rec.recall_at_k(ids, gt, 10),
+            hops=st.hops, expansions=st.expansions, cmps=st.cmps,
+            latency_ms=query_latency_ms(st), ru=query_ru(st),
+        ))
+    return rows
 
 
 def run(n: int = 8000, dim: int = 64, n_queries: int = 64, seed: int = 0):
@@ -41,24 +57,39 @@ def run(n: int = 8000, dim: int = 64, n_queries: int = 64, seed: int = 0):
         r = rec.recall_at_k(ids, gt, 10)
         rows.append(dict(L=L, recall=r, p50_ms=pct(lat, 50), p95_ms=pct(lat, 95),
                          p99_ms=pct(lat, 99), ru=ru))
-    return rows
+    wrows = beamwidth_sweep(idx, q, gt, L=50)
+    return rows, wrows
 
 
 def main(smoke: bool = False):
     # smoke: tiny sizes so scripts/check.sh --smoke can exercise the whole
     # path (build → search → kernel cross-check → stats) in seconds
-    rows = run(n=1500, dim=32, n_queries=16) if smoke else run()
+    rows, wrows = run(n=1500, dim=32, n_queries=32) if smoke else run()
     print("bench_query (Fig 6): L, recall@10, p50/p95/p99 modeled ms, RU")
     for r in rows:
         print(f"  L={r['L']:4d} recall={r['recall']:.3f} "
               f"p50={r['p50_ms']:.2f}ms p95={r['p95_ms']:.2f}ms "
               f"p99={r['p99_ms']:.2f}ms RU={r['ru']:.1f}")
-    # monotone recall in L (more slack at smoke scale: 16 queries quantize
-    # recall to 1/160 steps)
+    print("bench_query beamwidth sweep (L=50): W, recall@10, rounds, "
+          "expansions, cmps, modeled ms, RU")
+    for w in wrows:
+        print(f"  W={w['W']} recall={w['recall']:.3f} hops={w['hops']:6.1f} "
+              f"exp={w['expansions']:6.1f} cmps={w['cmps']:7.1f} "
+              f"lat={w['latency_ms']:.2f}ms RU={w['ru']:.1f}")
+    # monotone recall in L (more slack at smoke scale: few queries quantize
+    # recall to coarse steps)
     slack = 0.05 if smoke else 0.02
     rc = [r["recall"] for r in rows]
     assert all(b >= a - slack for a, b in zip(rc, rc[1:])), "recall not monotone in L"
-    return rows
+    # beam-width contract: recall parity within 0.01 of W=1, rounds at W=4
+    # down to ≤ 0.4×, modeled latency monotone non-increasing in W
+    w1 = wrows[0]
+    for w in wrows[1:]:
+        assert abs(w["recall"] - w1["recall"]) <= 0.01, (w, w1)
+        assert w["latency_ms"] <= w1["latency_ms"] + 1e-6, (w, w1)
+    w4 = next(w for w in wrows if w["W"] == 4)
+    assert w4["hops"] <= 0.4 * w1["hops"], (w4["hops"], w1["hops"])
+    return rows, wrows
 
 
 if __name__ == "__main__":

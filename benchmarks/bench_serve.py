@@ -6,12 +6,18 @@ Emits ``BENCH_serve.json`` at the repo root — the serving baseline that
 later scale PRs (caching, replication, multi-backend) are judged against:
 
   * ``loads``  — per offered-load level (Poisson arrivals at 3 rates):
-    simulated QPS, p50/p95/p99 latency, RU/s, mean batch occupancy;
+    simulated QPS, p50/p95/p99 latency, RU/s, mean batch occupancy, and
+    per-query mean sequential rounds (``mean_hops``);
   * ``speedup_batch16`` — measured wall-clock throughput of the batch-16
-    engine over the per-query `VectorCollectionService.query` loop
-    (acceptance floor: ≥ 3×);
+    engine over a per-query dispatch loop (B=1 engine batches), BOTH at
+    beam_width=1 so the number isolates the micro-batching machinery
+    (acceptance floor: ≥ 3×; see ``measure_speedup`` for why wall clock
+    on a CPU container cannot fairly measure W>1);
   * ``recompiles_after_warmup`` — jit cache growth across every measured
     batch after warmup (acceptance floor: 0 — shape bucketing at work);
+  * ``beamwidth`` — the W-way hop-batching sweep at the overload rate:
+    saturation QPS, p95 and mean rounds per W (acceptance floor: W=4
+    sustains ≥ 1.3× the W=1 saturation QPS at lower p95);
   * ``mixed_ingest`` — recall@10 with upserts streaming through the
     interleaved ingest queue vs the query-only run (floor: within 2 pts).
 """
@@ -25,8 +31,8 @@ from pathlib import Path
 import numpy as np
 
 from repro.core import GraphConfig
-from repro.serve import (EngineConfig, VectorCollectionService, VectorQuery,
-                         VectorServeEngine, poisson_arrivals)
+from repro.serve import (EngineConfig, ServeRequest, VectorCollectionService,
+                         VectorQuery, VectorServeEngine, poisson_arrivals)
 from repro.serve.metrics import EngineMetrics
 from repro.serve.vector_engine import serving_jit_cache_size
 
@@ -58,14 +64,27 @@ def warmup(eng: VectorServeEngine, data: np.ndarray, k: int = 10):
 
 def run_load(collection, data: np.ndarray, queries: np.ndarray,
              rate_qps: float, rng: np.random.RandomState,
-             max_batch: int = 16) -> dict:
-    """Arrival-driven simulated run at one offered-load level."""
-    cfg = EngineConfig(max_batch=max_batch)
+             max_batch: int = 16, beam_width: int = 4,
+             arrival_gaps: np.ndarray = None) -> dict:
+    """Arrival-driven simulated run at one offered-load level.
+
+    ``arrival_gaps`` pins the arrival realization (seconds between
+    arrivals) so sweeps compare configurations on identical offered
+    traffic; None draws a fresh Poisson stream from ``rng``.
+    """
+    # admission off: these runs measure CAPACITY at an offered load, not
+    # governance — a 429 here would just censor the saturation estimate
+    # (the governor has its own tests and bench_cost coverage)
+    cfg = EngineConfig(max_batch=max_batch, beam_width=beam_width,
+                       admission_control=False)
     eng = VectorServeEngine(collection, cfg=cfg)
     warmup(eng, data)
     cache0 = serving_jit_cache_size()
-    arrivals = poisson_arrivals(rng, len(queries), rate_qps,
-                                t0=eng.clock.now())
+    if arrival_gaps is None:
+        arrivals = poisson_arrivals(rng, len(queries), rate_qps,
+                                    t0=eng.clock.now())
+    else:
+        arrivals = eng.clock.now() + np.cumsum(arrival_gaps)
     i, n = 0, len(queries)
     while i < n or eng.queue:
         now = eng.clock.now()
@@ -96,13 +115,50 @@ def run_load(collection, data: np.ndarray, queries: np.ndarray,
         ru_per_s=snap["ru_per_s"],
         mean_occupancy=snap["mean_occupancy"],
         pad_fraction=snap["pad_fraction"],
+        mean_hops=snap["mean_hops"],
         recompiles=serving_jit_cache_size() - cache0,
+    )
+
+
+def beamwidth_sweep(collection, data: np.ndarray, queries: np.ndarray,
+                    rate_qps: float, rng: np.random.RandomState,
+                    widths=(1, 2, 4), max_batch: int = 16) -> dict:
+    """The tentpole measurement: saturation behaviour at the overload rate
+    as beam width W grows. Hop batching cuts the lockstep critical path
+    ~W×, so W=4 must sustain ≥ 1.3× the W=1 QPS at lower p95.
+
+    Every width replays the SAME arrival realization (a fresh Poisson draw
+    per width would let arrival-span luck swamp the comparison), doubled in
+    length so the run is service-limited rather than arrival-limited."""
+    assert 1 in widths and 4 in widths, \
+        "sweep needs the W=1 baseline and the W=4 operating point"
+    qs = np.concatenate([queries, queries])
+    gaps = rng.exponential(1.0 / rate_qps, size=len(qs))
+    rows = [run_load(collection, data, qs, rate_qps, rng,
+                     max_batch=max_batch, beam_width=W, arrival_gaps=gaps)
+            | {"W": W}
+            for W in widths]
+    by_w = {r["W"]: r for r in rows}
+    base, w4 = by_w[1], by_w[4]
+    return dict(
+        offered_qps=rate_qps,
+        per_width=rows,
+        saturation_gain_w4=w4["qps"] / base["qps"],
+        p95_gain_w4=base["p95_ms"] / w4["p95_ms"],
+        hops_ratio_w4=w4["mean_hops"] / max(base["mean_hops"], 1e-9),
     )
 
 
 def measure_speedup(svc: VectorCollectionService, data: np.ndarray,
                     n_queries: int, rng: np.random.RandomState) -> dict:
-    """Wall-clock throughput: batch-16 engine vs per-query service loop."""
+    """Wall-clock throughput: batch-16 engine vs a per-query dispatch loop.
+
+    Both sides run at beam_width=1 so the wall clock isolates the
+    micro-batching win. (The beam-width win is a *round count* effect: a
+    TPU executes one round's W·R_slack-wide gather in parallel VPU lanes,
+    but XLA-on-CPU serializes it, so measuring W>1 here would conflate
+    the CPU container's serialization with the batching machinery. The W
+    sweep is measured in modelled service time above.)"""
     queries = data[rng.choice(len(data), n_queries, replace=False)] + 0.01
 
     # per-query loop (each call is its own batch of 1 through the engine)
@@ -110,16 +166,20 @@ def measure_speedup(svc: VectorCollectionService, data: np.ndarray,
     # (U,B,U,B,…) with best-of per side, so a slow host phase hits both
     # measurements instead of skewing the ratio.
     repeats = 3
-    for q in queries[:4]:
-        svc.query(VectorQuery(vector=q, k=10))  # warm the B=1 signatures
-    eng = VectorServeEngine(svc.collection, cfg=EngineConfig(max_batch=16))
+    cfg1 = EngineConfig(max_batch=16, beam_width=1,
+                        admission_control=False)  # capacity, not governance
+    eng_u = VectorServeEngine(svc.collection, cfg=cfg1)
+    eng = VectorServeEngine(svc.collection, cfg=cfg1)
+    for q in queries[:4]:  # warm the B=1 signatures
+        eng_u.query_sync(ServeRequest(rid=eng_u.next_rid(), vector=q, k=10))
     warmup(eng, data)
     cache0 = serving_jit_cache_size()
     t_unbatched = t_batched = float("inf")
     for _ in range(repeats):
         t0 = time.perf_counter()
         for q in queries:
-            svc.query(VectorQuery(vector=q, k=10))
+            eng_u.query_sync(ServeRequest(rid=eng_u.next_rid(),
+                                          vector=q, k=10))
         t_unbatched = min(t_unbatched, time.perf_counter() - t0)
         t0 = time.perf_counter()
         for q in queries:
@@ -171,19 +231,28 @@ def measure_mixed_ingest(n: int, dim: int, n_queries: int,
                 recall_mixed=r_mixed, delta=r_only - r_mixed)
 
 
-def run(n: int = 3000, dim: int = 32, n_queries: int = 96,
+def run(n: int = 3000, dim: int = 32, n_queries: int = 384,
         rates=(200.0, 800.0, 2500.0), seed: int = 0) -> dict:
+    # n_queries is deliberately ~24 full micro-batches: short overload runs
+    # are startup-diluted (arrival ramp + max_wait stalls on underfilled
+    # batches are a fixed cost), which understates the saturation QPS every
+    # configuration sustains
     svc, data, rng = build_service(n, dim, seed=seed)
     queries = data[rng.choice(n, n_queries, replace=False)] + 0.01
 
     loads = [run_load(svc.collection, data, queries, r, rng) for r in rates]
+    # the sweep doubles the top offered rate so EVERY width is
+    # service-limited — a rate the W=1 engine already saturates at would
+    # cap the measurable gain at offered/qps_W1 regardless of capacity
+    beamw = beamwidth_sweep(svc.collection, data, queries, 2 * rates[-1], rng)
     speed = measure_speedup(svc, data, n_queries, rng)
     mixed = measure_mixed_ingest(max(n // 4, 400), dim, max(n_queries // 4, 16))
 
     out = dict(
         config=dict(n=n, dim=dim, n_queries=n_queries, rates=list(rates),
-                    max_batch=16),
+                    max_batch=16, beam_width=EngineConfig().beam_width),
         loads=loads,
+        beamwidth=beamw,
         speedup_batch16=speed,
         mixed_ingest=mixed,
     )
@@ -192,7 +261,9 @@ def run(n: int = 3000, dim: int = 32, n_queries: int = 96,
 
 def main(smoke: bool = False):
     if smoke:
-        out = run(n=600, dim=32, n_queries=24, rates=(200.0, 1500.0))
+        # n_queries a few multiples of max_batch: the speedup measurement
+        # needs full micro-batches to amortize per-dispatch host overhead
+        out = run(n=600, dim=32, n_queries=48, rates=(200.0, 1500.0))
     else:
         out = run()
 
@@ -204,7 +275,17 @@ def main(smoke: bool = False):
         print(f"  offered={row['offered_qps']:7.0f}/s served={row['qps']:7.1f}/s "
               f"p50={row['p50_ms']:.2f}ms p95={row['p95_ms']:.2f}ms "
               f"p99={row['p99_ms']:.2f}ms RU/s={row['ru_per_s']:.0f} "
-              f"occ={row['mean_occupancy']:.2f} recompiles={row['recompiles']}")
+              f"occ={row['mean_occupancy']:.2f} hops={row['mean_hops']:.1f} "
+              f"recompiles={row['recompiles']}")
+    bw = out["beamwidth"]
+    for row in bw["per_width"]:
+        print(f"  beamwidth W={row['W']} @offered={bw['offered_qps']:.0f}/s: "
+              f"served={row['qps']:7.1f}/s p95={row['p95_ms']:.2f}ms "
+              f"hops={row['mean_hops']:.1f} recompiles={row['recompiles']}")
+    print(f"  beamwidth saturation gain (W=4 vs W=1): "
+          f"{bw['saturation_gain_w4']:.2f}x QPS, "
+          f"{bw['p95_gain_w4']:.2f}x p95, "
+          f"hops ratio {bw['hops_ratio_w4']:.2f}")
     sp = out["speedup_batch16"]
     print(f"  batch16 speedup: {sp['speedup']:.2f}x "
           f"({sp['unbatched_qps_wall']:.1f} → {sp['batched_qps_wall']:.1f} q/s wall), "
@@ -214,13 +295,22 @@ def main(smoke: bool = False):
           f"{mx['recall_mixed']:.3f} (Δ={mx['delta']:.3f}, "
           f"{mx['n_ingested']} docs streamed)")
 
-    # acceptance floors (ISSUE 2). The ≥3x bound is the full-scale
-    # criterion; at smoke sizes per-call host overhead dominates and the
-    # ratio is noisier, so the smoke floor only guards against rot.
-    floor = 2.0 if smoke else 3.0
-    assert sp["speedup"] >= floor, \
-        f"batched speedup {sp['speedup']:.2f}x < {floor}x"
+    # acceptance floors (ISSUE 2 + ISSUE 3): the batch-16 speedup and the
+    # zero-recompile contract gate at BOTH scales (scripts/check.sh --smoke
+    # runs this, so perf regressions fail the gate), and W=4 hop batching
+    # must raise the saturation point ≥ 1.3× at lower p95. The 3× wall
+    # floor holds at smoke sizes too now that the measurement is W=1 on
+    # both sides (measured ~4.5–4.8× — ample margin for host noise).
+    assert sp["speedup"] >= 3.0, \
+        f"batched speedup {sp['speedup']:.2f}x < 3.0x"
     assert sp["recompiles_after_warmup"] == 0, "steady state must not recompile"
+    assert all(row["recompiles"] == 0 for row in out["loads"]), \
+        "load runs must not recompile after warmup"
+    assert bw["saturation_gain_w4"] >= 1.3, \
+        f"beamwidth saturation gain {bw['saturation_gain_w4']:.2f}x < 1.3x"
+    assert bw["p95_gain_w4"] > 1.0, "W=4 must lower p95 vs W=1"
+    assert bw["hops_ratio_w4"] <= 0.4, \
+        f"W=4 mean rounds {bw['hops_ratio_w4']:.2f}x of W=1 (> 0.4x)"
     assert mx["recall_mixed"] >= mx["recall_query_only"] - 0.02, \
         f"ingest degraded recall: {mx}"
     return out

@@ -9,9 +9,8 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import recall as rec
-from repro.store.ru import OpCounters, RUConfig, RUMeter
 
-from .common import build_index, clustered, pct
+from .common import build_index, clustered, pct, query_latency_ms
 
 
 def run(n_tenants: int = 6, per_tenant: int = 1200, dim: int = 32, seed: int = 0):
@@ -31,7 +30,6 @@ def run(n_tenants: int = 6, per_tenant: int = 1200, dim: int = 32, seed: int = 0
     q = tenant_data[target][rng.choice(per_tenant, 24)] + 0.02
     live = labels == target
     gt = rec.ground_truth(q, all_data, live, 10)
-    meter = RUMeter(RUConfig())
 
     def eval_filtered(L):
         doc_filter = np.zeros(big.cfg.capacity, bool)
@@ -41,9 +39,7 @@ def run(n_tenants: int = 6, per_tenant: int = 1200, dim: int = 32, seed: int = 0
             ids, _, st = big.filtered_search(q[i : i + 1], 10, doc_filter,
                                              L=L, mode="beta")
             ids_all.append(ids[0])
-            lats.append(meter.latency_ms(OpCounters(
-                quant_reads=int(st.cmps), adj_reads=int(st.hops),
-                full_reads=int(st.full_reads))))
+            lats.append(query_latency_ms(st))  # shared round-aware model
         return rec.recall_at_k(np.asarray(ids_all), gt, 10), lats
 
     def eval_sharded(L):
@@ -53,9 +49,7 @@ def run(n_tenants: int = 6, per_tenant: int = 1200, dim: int = 32, seed: int = 0
         for i in range(len(q)):
             ids, _, st = shard.search(q[i : i + 1], 10, L=L)
             ids_all.append(ids[0])
-            lats.append(meter.latency_ms(OpCounters(
-                quant_reads=int(st.cmps), adj_reads=int(st.hops),
-                full_reads=int(st.full_reads))))
+            lats.append(query_latency_ms(st))  # shared round-aware model
         return rec.recall_at_k(np.asarray(ids_all), gt_local, 10), lats
 
     r_sh, lat_sh = eval_sharded(50)

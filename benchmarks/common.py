@@ -14,7 +14,8 @@ import numpy as np
 
 from repro.core import DiskANNIndex, GraphConfig
 from repro.core import recall as rec
-from repro.store.ru import OpCounters, RUConfig, RUMeter
+from repro.store.ru import (RUConfig, RUMeter, counters_for_latency,
+                            counters_for_ru)
 
 
 def clustered(rng: np.random.RandomState, n: int, dim: int, k: int = 32,
@@ -41,21 +42,21 @@ def in_dist_queries(data: np.ndarray, rng: np.random.RandomState, n: int,
 
 
 def query_ru(stats, meter: RUMeter | None = None) -> float:
-    """Modeled per-query RU from search counters (the §4 cost currency)."""
+    """Modeled per-query RU from search counters (the §4 cost currency).
+    Charges adjacency rows actually fetched — beam width buys latency,
+    not free reads."""
     meter = meter or RUMeter(RUConfig())
-    return meter.ru(OpCounters(
-        quant_reads=int(stats.cmps), adj_reads=int(stats.hops),
-        full_reads=int(stats.full_reads), cpu_ms=0.02 * stats.cmps / 100,
-    ))
+    c = counters_for_ru(stats)
+    c.cpu_ms = 0.02 * stats.cmps / 100
+    return meter.ru(c)
 
 
 def query_latency_ms(stats, meter: RUMeter | None = None) -> float:
-    """Modeled single-replica latency from the §4.4 access-time constants."""
+    """Modeled single-replica latency from the §4.4 access-time constants,
+    through the shared round-structured critical-path model
+    (`store.ru.counters_for_latency` — same as the serving fanout path)."""
     meter = meter or RUMeter(RUConfig())
-    return meter.latency_ms(OpCounters(
-        quant_reads=int(stats.cmps), adj_reads=int(stats.hops),
-        full_reads=int(stats.full_reads),
-    ))
+    return meter.latency_ms(counters_for_latency(stats))
 
 
 def timed(fn, *args, repeat: int = 3, **kw):

@@ -34,7 +34,8 @@ def measure(tag: str, query_batch: int = 128, L: int = 100, k: int = 10):
     specs = cz.shard_specs(cfg, n_dev)
     fn = distributed_search_fn(mesh, L=cfg.L_search, k=cfg.k,
                                shard_axes=tuple(mesh.axis_names),
-                               max_hops=2 * cfg.L_search)
+                               max_hops=-(-2 * cfg.L_search // cfg.beam_width),
+                               beam_width=cfg.beam_width)
     args = (specs["neighbors"], specs["codes"], specs["versions"], specs["live"],
             specs["vectors"], specs["doc_ids"], specs["medoid"],
             specs["codebooks"], specs["queries"])

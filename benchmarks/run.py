@@ -36,7 +36,9 @@ def main() -> None:
                       f"p99@{out['loads'][-1]['offered_qps']:.0f}qps="
                       f"{out['loads'][-1]['p99_ms']:.1f}ms")),
         ("fig6_query_vs_L", bench_query.main,
-         lambda rows: f"recall@L100={rows[-1]['recall']:.3f};p50={rows[-1]['p50_ms']:.2f}ms"),
+         lambda out: (f"recall@L100={out[0][-1]['recall']:.3f};"
+                      f"p50={out[0][-1]['p50_ms']:.2f}ms;"
+                      f"hops_w4/w1={out[1][-1]['hops'] / out[1][0]['hops']:.2f}")),
         ("fig7_8_scaling", bench_scaling.main,
          lambda out: f"growth100x={out[1]:.2f};ru10m={out[2]:.0f}"),
         ("table1_2_cost", bench_cost.main,

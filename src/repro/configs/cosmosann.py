@@ -27,6 +27,7 @@ class VectorWorkloadConfig:
     k: int = 10
     query_batch: int = 128
     metric: str = "l2"
+    beam_width: int = 4  # W-way hop batching on the search loop (§3.2)
 
 
 def config() -> VectorWorkloadConfig:

@@ -42,6 +42,9 @@ class GraphConfig(NamedTuple):
     bootstrap_sample: int = 1000  # §3.4: first PQ schema after this many docs
     refine_sample: int = 25000  # §3.4: re-quantization trigger
     c_replace: int = 3  # Alg 6 replace parameter
+    beam_width: int = 4  # query-path beamWidth W (§3.2): frontier nodes
+    #   expanded per search round; tuned ~4 — cuts sequential rounds ~W×
+    #   at a modest n_cmps increase (see core/search.py)
 
     @property
     def R_slack(self) -> int:

@@ -42,9 +42,10 @@ from .providers import ArrayProviderSet, Context, ProviderSet
 
 @dataclasses.dataclass
 class QueryStats:
-    hops: float = 0.0
+    hops: float = 0.0  # sequential expansion rounds (latency-critical path)
     cmps: float = 0.0  # quantized distance comparisons (≈3500 @ L=100 in paper)
     full_reads: float = 0.0  # full-precision vectors touched (≈50 in paper)
+    expansions: float = 0.0  # adjacency rows fetched (= hops·W̄; RU-relevant)
     plan: str = "graph"
 
 
@@ -400,6 +401,7 @@ class DiskANNIndex:
         rerank_multiplier: float = fmod.QUANTIZED_LIST_MULTIPLIER,
         pad_to_bucket: bool = False,
         batch_buckets: tuple[int, ...] = smod.BATCH_BUCKETS,
+        beam_width: Optional[int] = None,
     ) -> tuple[np.ndarray, np.ndarray, QueryStats]:
         """Top-k ANN: graph search in quantized space + full-precision
         re-rank. Returns (doc_ids (B,k), dists (B,k), stats).
@@ -408,7 +410,10 @@ class DiskANNIndex:
         bucket before any jitted stage (LUTs, graph search, re-rank) so the
         serving layer's varying batch sizes map onto a handful of compiled
         signatures; outputs and stats are sliced back to the true batch.
+        ``beam_width`` overrides the config's W (frontier nodes expanded
+        per round); None → ``cfg.beam_width``.
         """
+        W = int(beam_width or self.cfg.beam_width)
         queries = np.asarray(queries, np.float32)
         B = len(queries)
         if pad_to_bucket:
@@ -438,7 +443,7 @@ class DiskANNIndex:
         # direct unpadded call onto the same static signatures
         res = smod.bucketed_batch_greedy_search(
             neighbors, codes, versions, live, luts, jnp.int32(self.medoid),
-            L=L_eff, batch_buckets=batch_buckets,
+            L=L_eff, batch_buckets=batch_buckets, beam_width=W,
         )
         ids, dists = fmod.rerank(
             jnp.asarray(queries), res.beam_ids[:, :kprime], vectors,
@@ -446,6 +451,7 @@ class DiskANNIndex:
         )
         stats.hops = float(np.asarray(res.n_hops)[:B].mean())
         stats.cmps = float(np.asarray(res.n_cmps)[:B].mean())
+        stats.expansions = float(np.asarray(res.n_exp)[:B].mean())
         stats.full_reads = float(kprime)
         return self._to_doc_ids(np.asarray(ids))[:B], np.asarray(dists)[:B], stats
 
@@ -463,9 +469,11 @@ class DiskANNIndex:
         mode: str = "auto",  # auto | post | beta | qflat | brute
         beta: float = 0.3,
         rerank_multiplier: float = fmod.QUANTIZED_LIST_MULTIPLIER,
+        beam_width: Optional[int] = None,
     ) -> tuple[np.ndarray, np.ndarray, QueryStats]:
         """Query-planner routing by selectivity, then post-filter or
         β-biased graph search."""
+        W = int(beam_width or self.cfg.beam_width)
         queries = np.asarray(queries, np.float32)
         L = L or self.cfg.L_search
         matches = int((doc_filter & self.pv.live).sum())
@@ -504,7 +512,8 @@ class DiskANNIndex:
         luts = self._luts(queries)
         if mode == "post":
             res = smod.batch_greedy_search(
-                neighbors, codes, versions, live, luts, jnp.int32(self.medoid), L=max(L, kprime)
+                neighbors, codes, versions, live, luts, jnp.int32(self.medoid),
+                L=max(L, kprime), beam_width=W,
             )
             beam = np.asarray(res.beam_ids)
             passes = doc_filter[np.maximum(beam, 0)] & (beam >= 0)
@@ -515,7 +524,7 @@ class DiskANNIndex:
             fb = jnp.asarray(np.broadcast_to(fbits, (B,) + fbits.shape))
             res = smod.batch_greedy_search(
                 neighbors, codes, versions, live, luts, jnp.int32(self.medoid),
-                L=max(L, kprime), filter_bits=fb, beta=beta,
+                L=max(L, kprime), filter_bits=fb, beta=beta, beam_width=W,
             )
             beam = np.asarray(res.beam_ids)
             passes = doc_filter[np.maximum(beam, 0)] & (beam >= 0)
@@ -526,6 +535,7 @@ class DiskANNIndex:
         )
         stats.hops = float(np.asarray(res.n_hops).mean())
         stats.cmps = float(np.asarray(res.n_cmps).mean())
+        stats.expansions = float(np.asarray(res.n_exp).mean())
         stats.full_reads = float(kprime)
         return self._to_doc_ids(np.asarray(ids)), np.asarray(dists), stats
 
@@ -549,12 +559,13 @@ class DiskANNIndex:
 
     def next_page(
         self, query: np.ndarray, state: pgmod.PageState, k: int,
-        rerank: bool = True,
+        rerank: bool = True, beam_width: Optional[int] = None,
     ) -> tuple[np.ndarray, np.ndarray, pgmod.PageState]:
         neighbors, codes, versions, live, vectors = self.pv.materialize(self.ctx)
         lut = self._luts(query[None, :])[0]
         ids, dists, state = pgmod.next_page(
-            neighbors, codes, versions, live, lut, state, k=k
+            neighbors, codes, versions, live, lut, state, k=k,
+            beam_width=int(beam_width or self.cfg.beam_width),
         )
         if rerank:
             rids, rd = fmod.rerank(

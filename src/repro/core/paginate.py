@@ -9,10 +9,13 @@ truncated) — plus a visited set that persists across paginations so pages
 never repeat results.
 
 Each page: refill ``best`` from ``backup``, expand until every entry of
-``best`` is expanded, pop the top-k as the page's results. The whole
-``PageState`` is an explicit pytree — it *is* the continuation token (the
-paper returns partial results to the client; we can serialize this state or
-hold it server-side, both demonstrated in `serve/vector_service.py`).
+``best`` is expanded, pop the top-k as the page's results. The expansion
+step is the same W-way hop (``search.expand_frontier``) as the main greedy
+loop, so ``beam_width`` cuts a page's sequential round count the same ~W×.
+The whole ``PageState`` is an explicit pytree — it *is* the continuation
+token (the paper returns partial results to the client; we can serialize
+this state or hold it server-side, both demonstrated in
+`serve/vector_service.py`).
 """
 from __future__ import annotations
 
@@ -24,7 +27,7 @@ import jax.numpy as jnp
 
 from . import graph as g
 from . import pq as pqmod
-from .search import _mask_dup_within
+from . import search as smod
 
 INF = jnp.float32(jnp.inf)
 
@@ -61,7 +64,9 @@ def start_pagination(
     )
 
 
-@functools.partial(jax.jit, static_argnames=("k", "max_hops", "has_filter"))
+@functools.partial(
+    jax.jit, static_argnames=("k", "max_hops", "has_filter", "beam_width")
+)
 def next_page(
     neighbors: jax.Array,
     codes: jax.Array,
@@ -75,10 +80,13 @@ def next_page(
     has_filter: bool = False,
     filter_bits: Optional[jax.Array] = None,
     beta: jax.Array | float = 1.0,
+    beam_width: int = 1,
 ) -> tuple[jax.Array, jax.Array, PageState]:
     """Produce the next k results. Returns (ids (k,), dists (k,), state)."""
     L = state.best_ids.shape[0]
     Bcap = state.backup_ids.shape[0]
+    W = int(beam_width)
+    assert 1 <= W <= L, f"beam_width {W} must be in [1, L={L}]"
     beta = jnp.float32(beta)
     if not has_filter:
         filter_bits = None
@@ -87,7 +95,7 @@ def next_page(
         pool_ids = jnp.concatenate([st.best_ids, st.backup_ids])
         pool_d = jnp.concatenate([st.best_dists, st.backup_dists])
         pool_e = jnp.concatenate([st.best_expanded, st.backup_expanded])
-        order = jnp.argsort(pool_d)
+        order = jnp.argsort(pool_d)  # full sort: both slices are consumed
         pool_ids, pool_d, pool_e = pool_ids[order], pool_d[order], pool_e[order]
         return st._replace(
             best_ids=pool_ids[:L],
@@ -106,54 +114,52 @@ def next_page(
         return jnp.any(frontier) & (st.hops < hop_limit)
 
     def body(st: PageState) -> PageState:
-        masked = jnp.where(st.best_expanded | (st.best_ids < 0), INF, st.best_dists)
-        p_idx = jnp.argmin(masked)
-        p = st.best_ids[p_idx]
-        best_expanded = st.best_expanded.at[p_idx].set(True)
+        p_pos, p_valid = smod.frontier_topw(
+            st.best_ids, st.best_dists, st.best_expanded, W
+        )
+        p_ids = st.best_ids[p_pos]
+        best_expanded = st.best_expanded.at[p_pos].set(True)
 
-        nbrs = neighbors[jnp.maximum(p, 0)]
-        safe = jnp.maximum(nbrs, 0)
-        valid = (nbrs >= 0) & live[safe] & ~g.bitmap_test(st.bitmap, nbrs)
-        valid &= ~_mask_dup_within(nbrs)
-        bitmap = g.bitmap_set(st.bitmap, jnp.where(valid, nbrs, -1))
+        cand_ids, cand_d, bitmap, n_new = smod.expand_frontier(
+            neighbors, codes, versions, live, luts, st.bitmap,
+            p_ids, p_valid, filter_bits, beta,
+        )
 
-        d = pqmod.adc_distance_versioned(luts, codes[safe], versions[safe])
-        if filter_bits is not None:
-            passes = g.bitmap_test(filter_bits, safe) & (nbrs >= 0)
-            d = jnp.where(passes, beta * d, d)
-        d = jnp.where(valid, d, INF)
-
-        R_sl = nbrs.shape[0]
-        all_ids = jnp.concatenate([st.best_ids, jnp.where(valid, nbrs, -1)])
-        all_d = jnp.concatenate([st.best_dists, d])
-        all_e = jnp.concatenate([best_expanded, jnp.zeros((R_sl,), bool)])
+        all_ids = jnp.concatenate([st.best_ids, cand_ids])
+        all_d = jnp.concatenate([st.best_dists, cand_d])
+        all_e = jnp.concatenate([best_expanded, jnp.zeros(cand_ids.shape, bool)])
+        # full sort here: BOTH slices are consumed (top-L stays in best, the
+        # overflow feeds backup — "vertices popped out of best")
         order = jnp.argsort(all_d)
         all_ids, all_d, all_e = all_ids[order], all_d[order], all_e[order]
 
-        # overflow beyond L → backup ("vertices popped out of best")
         ov_ids, ov_d, ov_e = all_ids[L:], all_d[L:], all_e[L:]
         bk_ids = jnp.concatenate([st.backup_ids, ov_ids])
         bk_d = jnp.concatenate([st.backup_dists, ov_d])
         bk_e = jnp.concatenate([st.backup_expanded, ov_e])
-        bo = jnp.argsort(bk_d)
-        dropped = st.dropped + (jnp.isfinite(bk_d[bo][Bcap:])).sum()
+        # only the top-Bcap slice survives → top_k, not a full argsort
+        _, bo = jax.lax.top_k(-bk_d, Bcap)
+        dropped = st.dropped + (
+            jnp.isfinite(bk_d).sum() - jnp.isfinite(bk_d[bo]).sum()
+        )
 
         return st._replace(
             best_ids=all_ids[:L],
             best_dists=all_d[:L],
             best_expanded=jnp.where(all_ids[:L] >= 0, all_e[:L], True),
-            backup_ids=bk_ids[bo][:Bcap],
-            backup_dists=bk_d[bo][:Bcap],
-            backup_expanded=bk_e[bo][:Bcap],
+            backup_ids=bk_ids[bo],
+            backup_dists=bk_d[bo],
+            backup_expanded=bk_e[bo],
             bitmap=bitmap,
             hops=st.hops + 1,
-            cmps=st.cmps + valid.sum(),
+            cmps=st.cmps + n_new,
             dropped=dropped,
         )
 
     st = jax.lax.while_loop(cond, body, st)
 
-    # pop top-k from best as the page results
+    # pop top-k from best as the page results (the remainder is also kept,
+    # re-padded — both slices consumed, so the full argsort stays)
     order = jnp.argsort(st.best_dists)
     ids_sorted = st.best_ids[order]
     d_sorted = st.best_dists[order]

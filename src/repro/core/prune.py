@@ -25,6 +25,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from . import search as smod
+
 INF = jnp.float32(jnp.inf)
 
 
@@ -63,9 +65,10 @@ def robust_prune(
 
     s = jax.lax.fori_loop(0, C, body, _S(jnp.zeros((C,), bool), jnp.int32(0)))
 
-    # compact kept ids in ascending-distance order into an (R,) array
+    # compact kept ids in ascending-distance order into an (R,) array —
+    # only the top-R slice is consumed, so top_k beats a full argsort
     keep_d = jnp.where(s.kept_mask, d, INF)
-    take = jnp.argsort(keep_d)[:R]
+    _, take = jax.lax.top_k(-keep_d, R)
     out = jnp.where(jnp.take(s.kept_mask, take), jnp.take(cand_ids, take), -1)
     return out.astype(jnp.int32)
 
@@ -94,8 +97,7 @@ def prune_with_vectors(
         d_p = -cand_vecs @ p_vec
         pair = -(cand_vecs @ cand_vecs.T)
     d_p = jnp.where(valid & (cand_ids != self_id), d_p, INF)
-    # a candidate must also not duplicate an earlier one
-    eq = (cand_ids[:, None] == cand_ids[None, :]) & valid[None, :]
-    dup = jnp.any(eq & jnp.tril(jnp.ones_like(eq), k=-1).astype(bool), axis=1)
-    d_p = jnp.where(dup, INF, d_p)
+    # a candidate must also not duplicate an earlier one (sort-based mask —
+    # same pass the search hot path uses for W·R-wide frontiers)
+    d_p = jnp.where(smod.mask_duplicates(cand_ids), INF, d_p)
     return robust_prune(cand_ids, d_p, pair, alpha=alpha, R=R, metric=metric)

@@ -1,11 +1,15 @@
 """GreedySearch (Algorithm 1) — batched, fixed-shape, TPU-native.
 
-The paper's search walks the graph one hop at a time with async SSD reads.
-On TPU we keep the L-entry search list ("beam") as a sorted array, expand the
-best unexpanded node each `lax.while_loop` step, and do all neighbor
-processing (visited-set dedup, ADC distances, beam merge) as vectorized ops.
-Queries are batched with `vmap`; all lanes advance in lockstep until every
-lane's beam is fully expanded.
+The paper's search walks the graph with async SSD reads, amortizing per-hop
+cost with a *beamWidth* knob: several frontier nodes expand per round so each
+I/O round does more useful work (§3.2). On TPU the same knob pays off for a
+different reason: the L-entry search list ("beam") is a sorted array advanced
+by a `lax.while_loop`, and under lockstep `vmap` every lane in a micro-batch
+waits for the slowest lane's round count. Expanding the W best unexpanded
+beam entries per round (``beam_width``) gathers ``W × R_slack`` neighbors in
+one shot, computes all their ADC distances in a single call, and merges with
+one `lax.top_k` — cutting the sequential trip count ~W× while widening the
+vectorized work per dispatch.
 
 Search runs in *quantized space* (§3.2): distances come from per-query ADC
 LUTs against the uint8 PQ codes; full-precision vectors are only touched by
@@ -15,6 +19,14 @@ access-frequency asymmetry.
 Filter-aware (β) search — Algorithm 7 — is folded in: when a packed filter
 bitmap is supplied, distances of filter-passing nodes are scaled by β < 1 so
 the frontier drifts toward the filtered region (§3.5, Fig 9).
+
+Counter semantics with hop batching:
+  * ``n_hops`` — sequential rounds (the latency-critical quantity; drops
+    ~W× at beam_width W);
+  * ``n_exp`` — frontier nodes actually expanded, i.e. adjacency rows
+    fetched (the RU-relevant quantity; ≈ n_hops at W=1);
+  * ``n_cmps`` — quantized distance comparisons (rises modestly with W:
+    a wider frontier visits a few extra neighborhoods).
 """
 from __future__ import annotations
 
@@ -36,7 +48,8 @@ class SearchResult(NamedTuple):
     beam_dists: jax.Array  # (L,) f32 (quantized-space, β-scaled if filtered)
     visited_ids: jax.Array  # (V,) int32 expanded nodes in order, -1 padded
     visited_dists: jax.Array  # (V,) f32
-    n_hops: jax.Array  # () int32 — number of expansions
+    n_hops: jax.Array  # () int32 — sequential expansion rounds
+    n_exp: jax.Array  # () int32 — nodes expanded (adjacency rows fetched)
     n_cmps: jax.Array  # () int32 — number of quantized distance comps
 
 
@@ -48,17 +61,75 @@ class _LoopState(NamedTuple):
     visited_ids: jax.Array
     visited_dists: jax.Array
     hops: jax.Array
+    exp: jax.Array
     cmps: jax.Array
 
 
-def _mask_dup_within(ids: jax.Array) -> jax.Array:
-    """True where ids[i] duplicates an earlier entry (ids small: R_slack)."""
-    eq = ids[:, None] == ids[None, :]
-    earlier = jnp.tril(jnp.ones_like(eq), k=-1)
-    return jnp.any(eq & earlier.astype(bool), axis=1)
+def mask_duplicates(ids: jax.Array) -> jax.Array:
+    """True where ids[i] repeats an earlier (lower-index) entry.
+
+    Sort-based O(n log n): the stable argsort groups equal ids with the
+    earliest original position first, so adjacent-equal in sorted order
+    marks exactly the later occurrences. Replaces the former O(n²) pairwise
+    mask, which would explode at the W·R_slack widths hop batching gathers.
+    Negative ids (padding) are never marked — they are invalid anyway.
+    """
+    order = jnp.argsort(ids)  # stable: ties keep original index order
+    s = ids[order]
+    dup_sorted = jnp.concatenate([jnp.zeros((1,), bool), s[1:] == s[:-1]])
+    dup = jnp.zeros_like(dup_sorted).at[order].set(dup_sorted)
+    return dup & (ids >= 0)
 
 
-def _expand_once(
+def frontier_topw(
+    ids: jax.Array, dists: jax.Array, expanded: jax.Array, W: int
+) -> tuple[jax.Array, jax.Array]:
+    """Positions of the W best unexpanded beam entries.
+
+    Returns (positions (W,), valid (W,)). Lanes beyond the remaining
+    frontier are flagged invalid; their positions point at expanded or
+    padding entries, so marking them expanded is a no-op.
+    """
+    masked = jnp.where(expanded | (ids < 0), INF, dists)
+    neg, pos = jax.lax.top_k(-masked, W)
+    return pos, neg > -INF
+
+
+def expand_frontier(
+    neighbors: jax.Array,
+    codes: jax.Array,
+    versions: jax.Array,
+    live: jax.Array,
+    luts: jax.Array,
+    bitmap: jax.Array,
+    p_ids: jax.Array,  # (W,) frontier node ids
+    p_valid: jax.Array,  # (W,) bool
+    filter_bits: Optional[jax.Array],
+    beta: jax.Array,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """The shared W-way hop: gather all W adjacency rows at once, drop
+    already-visited / dead / duplicate candidates with one sort-based pass,
+    and compute every ADC distance in a single call.
+
+    Returns (cand_ids (W·R_slack,), cand_dists, new_bitmap, n_new).
+    Used by both the greedy-search loop body and the pagination loop.
+    """
+    nbrs = neighbors[jnp.maximum(p_ids, 0)]  # (W, R_slack)
+    nbrs = jnp.where(p_valid[:, None], nbrs, -1).reshape(-1)
+    safe = jnp.maximum(nbrs, 0)
+    valid = (nbrs >= 0) & live[safe] & ~g.bitmap_test(bitmap, nbrs)
+    valid &= ~mask_duplicates(nbrs)
+    bitmap = g.bitmap_set(bitmap, jnp.where(valid, nbrs, -1))
+
+    d = pqmod.adc_distance_versioned(luts, codes[safe], versions[safe])
+    if filter_bits is not None:
+        passes = g.bitmap_test(filter_bits, safe) & (nbrs >= 0)
+        d = jnp.where(passes, beta * d, d)
+    d = jnp.where(valid, d, INF)
+    return jnp.where(valid, nbrs, -1), d, bitmap, valid.sum()
+
+
+def _expand_w(
     st: _LoopState,
     neighbors: jax.Array,
     codes: jax.Array,
@@ -67,35 +138,34 @@ def _expand_once(
     luts: jax.Array,
     filter_bits: Optional[jax.Array],
     beta: jax.Array,
+    W: int,
 ) -> _LoopState:
-    """Expand the best unexpanded beam entry; merge its neighbors in."""
+    """One round: expand the W best unexpanded beam entries, merge their
+    neighbors into the L-beam with a single top-k."""
     L = st.ids.shape[0]
-    masked = jnp.where(st.expanded | (st.ids < 0), INF, st.dists)
-    p_idx = jnp.argmin(masked)
-    p = st.ids[p_idx]
-    expanded = st.expanded.at[p_idx].set(True)
+    cap_v = st.visited_ids.shape[0]
 
-    visited_ids = st.visited_ids.at[st.hops % st.visited_ids.shape[0]].set(p)
-    visited_dists = st.visited_dists.at[st.hops % st.visited_ids.shape[0]].set(st.dists[p_idx])
+    p_pos, p_valid = frontier_topw(st.ids, st.dists, st.expanded, W)
+    p_ids = st.ids[p_pos]
+    expanded = st.expanded.at[p_pos].set(True)
 
-    nbrs = neighbors[jnp.maximum(p, 0)]  # (R_slack,)
-    safe = jnp.maximum(nbrs, 0)
-    valid = (nbrs >= 0) & live[safe] & ~g.bitmap_test(st.bitmap, nbrs)
-    valid &= ~_mask_dup_within(nbrs)
-    bitmap = g.bitmap_set(st.bitmap, jnp.where(valid, nbrs, -1))
+    # visited log: valid expansions pack contiguously after the running
+    # expansion count; invalid lanes scatter out of bounds and drop
+    nv = p_valid.astype(jnp.int32)
+    vpos = (st.exp + jnp.cumsum(nv) - nv) % cap_v
+    vpos = jnp.where(p_valid, vpos, cap_v)
+    visited_ids = st.visited_ids.at[vpos].set(p_ids, mode="drop")
+    visited_dists = st.visited_dists.at[vpos].set(st.dists[p_pos], mode="drop")
 
-    cand_codes = codes[safe]  # (R_slack, M)
-    cand_ver = versions[safe]
-    d = pqmod.adc_distance_versioned(luts, cand_codes, cand_ver)  # (R_slack,)
-    if filter_bits is not None:
-        passes = g.bitmap_test(filter_bits, jnp.where(nbrs >= 0, nbrs, 0)) & (nbrs >= 0)
-        d = jnp.where(passes, beta * d, d)
-    d = jnp.where(valid, d, INF)
+    cand_ids, cand_d, bitmap, n_new = expand_frontier(
+        neighbors, codes, versions, live, luts, st.bitmap,
+        p_ids, p_valid, filter_bits, beta,
+    )
 
-    all_ids = jnp.concatenate([st.ids, jnp.where(valid, nbrs, -1)])
-    all_d = jnp.concatenate([st.dists, d])
-    all_e = jnp.concatenate([expanded, jnp.zeros_like(valid)])
-    order = jnp.argsort(all_d)[:L]
+    all_ids = jnp.concatenate([st.ids, cand_ids])
+    all_d = jnp.concatenate([st.dists, cand_d])
+    all_e = jnp.concatenate([expanded, jnp.zeros(cand_ids.shape, bool)])
+    _, order = jax.lax.top_k(-all_d, L)  # ties keep lower index: stays sorted
     return _LoopState(
         ids=all_ids[order],
         dists=all_d[order],
@@ -104,12 +174,14 @@ def _expand_once(
         visited_ids=visited_ids,
         visited_dists=visited_dists,
         hops=st.hops + 1,
-        cmps=st.cmps + valid.sum(),
+        exp=st.exp + nv.sum(),
+        cmps=st.cmps + n_new,
     )
 
 
 @functools.partial(
-    jax.jit, static_argnames=("L", "max_hops", "visited_cap", "has_filter")
+    jax.jit,
+    static_argnames=("L", "max_hops", "visited_cap", "has_filter", "beam_width"),
 )
 def greedy_search(
     neighbors: jax.Array,
@@ -125,12 +197,21 @@ def greedy_search(
     has_filter: bool = False,
     filter_bits: Optional[jax.Array] = None,
     beta: jax.Array | float = 1.0,
+    beam_width: int = 1,
 ) -> SearchResult:
-    """Single-query GreedySearch. vmap over (luts, filter_bits) for batches."""
+    """Single-query GreedySearch. vmap over (luts, filter_bits) for batches.
+
+    ``beam_width`` (the paper's beamWidth, §3.2) expands the W best
+    unexpanded beam entries per round. ``max_hops`` bounds *rounds*; its
+    default keeps the total expansion budget (~2L+16 nodes) independent of
+    W, so W only changes how the same candidate pool is scheduled.
+    """
+    W = int(beam_width)
+    assert 1 <= W <= L, f"beam_width {W} must be in [1, L={L}]"
     if max_hops == 0:
-        max_hops = 2 * L + 16
+        max_hops = -(-(2 * L + 16) // W)  # ceil: same node budget at any W
     if visited_cap == 0:
-        visited_cap = max_hops
+        visited_cap = W * max_hops
     if not has_filter:
         filter_bits = None
     beta = jnp.float32(beta)
@@ -152,6 +233,7 @@ def greedy_search(
         visited_ids=jnp.full((visited_cap,), -1, jnp.int32),
         visited_dists=jnp.full((visited_cap,), INF),
         hops=jnp.int32(0),
+        exp=jnp.int32(0),
         cmps=jnp.int32(1),
     )
 
@@ -160,8 +242,8 @@ def greedy_search(
         return jnp.any(frontier) & (st.hops < max_hops)
 
     def body(st: _LoopState):
-        return _expand_once(
-            st, neighbors, codes, versions, live, luts, filter_bits, beta
+        return _expand_w(
+            st, neighbors, codes, versions, live, luts, filter_bits, beta, W
         )
 
     st = jax.lax.while_loop(cond, body, st0)
@@ -171,28 +253,33 @@ def greedy_search(
         visited_ids=st.visited_ids,
         visited_dists=st.visited_dists,
         n_hops=st.hops,
+        n_exp=st.exp,
         n_cmps=st.cmps,
     )
 
 
 @functools.partial(
-    jax.jit, static_argnames=("L", "max_hops", "visited_cap", "has_filter")
+    jax.jit,
+    static_argnames=("L", "max_hops", "visited_cap", "has_filter", "beam_width"),
 )
 def _batched_search_entry(
     neighbors, codes, versions, live, luts, start, filter_bits, beta,
     *, L: int, max_hops: int, visited_cap: int, has_filter: bool,
+    beam_width: int,
 ) -> SearchResult:
     """Top-level jitted vmap over ``greedy_search``.
 
     Being the outermost jit matters: its compile cache is keyed by the full
-    (batch, L, …) signature, so ``jit_cache_size()`` is a truthful recompile
-    counter for the serving hot path (an inner jit under vmap never sees its
-    own cache populated — compilation happens in the pjit-primitive path).
+    (batch, L, beam_width, …) signature, so ``jit_cache_size()`` is a
+    truthful recompile counter for the serving hot path (an inner jit under
+    vmap never sees its own cache populated — compilation happens in the
+    pjit-primitive path). A beam_width change costs exactly one compile per
+    (bucket, L) signature it is used with.
     """
     fn = functools.partial(
         greedy_search, neighbors, codes, versions, live,
         L=L, max_hops=max_hops, visited_cap=visited_cap,
-        has_filter=has_filter, beta=beta,
+        has_filter=has_filter, beta=beta, beam_width=beam_width,
     )
     if has_filter:
         return jax.vmap(lambda lut, fb: fn(lut, start, filter_bits=fb))(luts, filter_bits)
@@ -212,8 +299,13 @@ def batch_greedy_search(
     visited_cap: int = 0,
     filter_bits: Optional[jax.Array] = None,  # (B, Nw) or None
     beta: float = 1.0,
+    beam_width: int = 1,
 ) -> SearchResult:
-    """vmapped GreedySearch over a query batch (lockstep beam expansion)."""
+    """vmapped GreedySearch over a query batch (lockstep beam expansion).
+
+    W-way hop batching shrinks the lockstep critical path directly: lanes
+    wait for the slowest lane's *round* count, and rounds drop ~W×.
+    """
     has_filter = filter_bits is not None
     if not has_filter:
         # dummy with a stable shape so the jit signature doesn't churn
@@ -222,6 +314,7 @@ def batch_greedy_search(
         neighbors, codes, versions, live, luts, jnp.asarray(start, jnp.int32),
         filter_bits, jnp.float32(beta),
         L=L, max_hops=max_hops, visited_cap=visited_cap, has_filter=has_filter,
+        beam_width=int(beam_width),
     )
 
 
@@ -243,7 +336,9 @@ BATCH_BUCKETS: tuple[int, ...] = (1, 2, 4, 8, 16, 32, 64)
 
 def next_bucket(n: int, buckets: tuple[int, ...] = BATCH_BUCKETS) -> int:
     """Smallest bucket ≥ n; beyond the largest, round up to a multiple of it
-    (callers should split such batches, but never get a shape explosion)."""
+    (the serving engine splits oversized batches into top-bucket chunks —
+    ``vector_engine._dispatch`` — so the rounding here is only a safety net
+    against shape explosions for direct callers)."""
     for b in buckets:
         if n <= b:
             return b
@@ -286,6 +381,7 @@ def bucketed_batch_greedy_search(
     visited_cap: int = 0,
     filter_bits: Optional[jax.Array] = None,
     beta: float = 1.0,
+    beam_width: int = 1,
 ) -> SearchResult:
     """`batch_greedy_search` padded to a fixed batch bucket, results sliced
     back to the true batch — steady-state traffic whose batch sizes vary
@@ -299,7 +395,7 @@ def bucketed_batch_greedy_search(
     res = batch_greedy_search(
         neighbors, codes, versions, live, luts, start,
         L=L, max_hops=max_hops, visited_cap=visited_cap,
-        filter_bits=filter_bits, beta=beta,
+        filter_bits=filter_bits, beta=beta, beam_width=beam_width,
     )
     if bucket != B:
         res = SearchResult(*(a[:B] for a in res))
@@ -313,7 +409,7 @@ def search_candidates(res: SearchResult) -> tuple[jax.Array, jax.Array]:
     dists = jnp.concatenate([res.visited_dists, res.beam_dists], axis=-1)
     # dedup: keep first occurrence (visited log wins; beam dupes masked)
     def dedup_one(i, d):
-        dup = _mask_dup_within(i)
+        dup = mask_duplicates(i)
         return jnp.where(dup, -1, i), jnp.where(dup, INF, d)
 
     if ids.ndim == 1:

@@ -262,7 +262,8 @@ def _run_cosmos_cell(mesh) -> dict:
     shard_axes = tuple(mesh.axis_names)
     fn = distributed_search_fn(
         mesh, L=cfg.L_search, k=cfg.k, metric=cfg.metric, shard_axes=shard_axes,
-        max_hops=2 * cfg.L_search,
+        max_hops=-(-2 * cfg.L_search // cfg.beam_width),
+        beam_width=cfg.beam_width,
     )
     args = (
         specs["neighbors"], specs["codes"], specs["versions"], specs["live"],

@@ -30,7 +30,7 @@ from .. import compat
 from ..core import flat as fmod
 from ..core import pq as pqmod
 from ..core import search as smod
-from ..store.ru import OpCounters
+from ..store.ru import counters_for_latency
 
 INF = jnp.float32(jnp.inf)
 
@@ -96,6 +96,7 @@ def batched_fanout_search(
     k: int,
     L: Optional[int] = None,
     batch_buckets: Optional[tuple[int, ...]] = None,
+    beam_width: Optional[int] = None,
 ) -> tuple[np.ndarray, np.ndarray, dict]:
     """Multi-query scatter/gather for the serving engine.
 
@@ -105,10 +106,18 @@ def batched_fanout_search(
     per-partition top-k. info carries total RU, per-partition RU/stats, and
     the modelled worst-partition latency (client latency tracks the slowest
     partition, §4.3).
+
+    The latency model is *round-structured* (``store.ru
+    .counters_for_latency``): a beam-width round's quantized reads issue
+    concurrently and its adjacency fetches coalesce into one round trip.
+    RU, by contrast, still charges every read (see
+    ``PhysicalPartition.search_batch``): W buys latency, not free work.
     """
     kw: dict = {}
     if batch_buckets is not None:
         kw = dict(pad_to_bucket=True, batch_buckets=batch_buckets)
+    if beam_width is not None:
+        kw["beam_width"] = beam_width
     ids_l, dists_l, rus, lat_ms = [], [], [], []
     stats_l = []
     for p in partitions:
@@ -118,11 +127,7 @@ def batched_fanout_search(
         rus.append(ru)
         stats_l.append(stats)
         lat_ms.append(
-            p.providers.meter.latency_ms(OpCounters(
-                quant_reads=int(stats.cmps),
-                adj_reads=int(stats.hops),
-                full_reads=int(stats.full_reads),
-            ))
+            p.providers.meter.latency_ms(counters_for_latency(stats))
         )
     ids, dists = merge_topk(ids_l, dists_l, k)
     info = dict(
@@ -148,6 +153,7 @@ def distributed_search_fn(
     metric: str = "l2",
     shard_axes: tuple[str, ...] = ("data",),
     max_hops: int = 0,
+    beam_width: int = 1,
 ):
     """Build the jitted cross-partition search step for a device mesh.
 
@@ -171,7 +177,7 @@ def distributed_search_fn(
         luts = jax.vmap(lambda q: pqmod.adc_lut(schema, q, metric))(queries)[:, None]
         res = smod.batch_greedy_search(
             neighbors, codes, versions, live, luts, medoid,
-            L=L, max_hops=max_hops,
+            L=L, max_hops=max_hops, beam_width=beam_width,
         )
         lids, ldists = fmod.rerank(queries, res.beam_ids[:, : 2 * k], vectors,
                                    k=k, metric=metric)

@@ -22,7 +22,7 @@ import numpy as np
 from ..core import DiskANNIndex, GraphConfig
 from ..core.providers import Context
 from ..store.provider import StoreProviderSet
-from ..store.ru import ResourceGovernor, RUMeter
+from ..store.ru import ResourceGovernor, RUMeter, counters_for_ru
 
 
 def hash_key(key) -> int:
@@ -96,9 +96,9 @@ class PhysicalPartition:
         the total RU feeds per-tenant admission accounting."""
         self.providers.begin_op()
         ids, dists, stats = self.index.search(queries, k, L, **kw)
-        self.providers.op.quant_reads += int(stats.cmps * len(queries))
-        self.providers.op.adj_reads += int(stats.hops * len(queries))
-        self.providers.op.full_reads += int(stats.full_reads * len(queries))
+        # RU charges the adjacency rows actually fetched (expansions), not
+        # the round count — W-way hop batching must not deflate the bill
+        self.providers.op += counters_for_ru(stats, lanes=len(queries))
         ru, _ = self.providers.end_op()
         self.governor.request(ru)
         return ids, dists, ru, stats

@@ -64,6 +64,10 @@ class EngineMetrics:
     ingest_batches: int = 0
     ru_query_total: float = 0.0
     ru_ingest_total: float = 0.0
+    # per-query sequential search rounds (beam-width telemetry): hop
+    # batching shows up here as mean_hops dropping ~W×
+    hops_weighted: float = 0.0
+    hops_lanes: int = 0
     started_s: float = 0.0
     latency_ms: Histogram = dataclasses.field(default_factory=Histogram)
     wait_ms: Histogram = dataclasses.field(default_factory=Histogram)
@@ -80,6 +84,10 @@ class EngineMetrics:
         self.ru_query_total += ru
         self.occupancy.observe(true_lanes / max(bucket, 1))
         self.jit_cache_trajectory.append(int(cache_size))
+
+    def note_hops(self, mean_hops: float, true_lanes: int):
+        self.hops_weighted += mean_hops * true_lanes
+        self.hops_lanes += true_lanes
 
     def recompiles_since(self, batch_index: int = 0) -> int:
         """Jit cache growth after batch `batch_index` (0 = engine start)."""
@@ -104,6 +112,7 @@ class EngineMetrics:
             p95_ms=self.latency_ms.percentile(95),
             p99_ms=self.latency_ms.percentile(99),
             mean_wait_ms=self.wait_ms.mean(),
+            mean_hops=self.hops_weighted / max(self.hops_lanes, 1),
             mean_occupancy=self.occupancy.mean(),
             pad_fraction=self.lanes_padded / max(self.lanes_total, 1),
             jit_cache_size=(self.jit_cache_trajectory[-1]

@@ -74,6 +74,8 @@ class EngineConfig:
     max_batch: int = 16  # micro-batch dispatch threshold
     max_wait_s: float = 0.002  # oldest request never waits longer than this
     batch_buckets: tuple[int, ...] = smod.BATCH_BUCKETS
+    beam_width: int = 4  # W-way frontier expansion per search round (§3.2
+    #   beamWidth): ~W× fewer sequential rounds on the lockstep hot path
     search_list_multiplier: float = 5.0  # L = multiplier * k when unset
     dispatch_overhead_ms: float = 0.1  # host-side per-batch overhead
     tenant_ru_s: float = 10_000.0  # default per-tenant provisioned budget
@@ -283,14 +285,31 @@ class VectorServeEngine:
     # dispatch
     # ------------------------------------------------------------------
     def _dispatch(self, key: tuple, batch: list[ServeRequest]):
-        shard_key, k, L, exact = key
         in_batch = set(id(r) for r in batch)
         self.queue = [r for r in self.queue if id(r) not in in_batch]
+        # a batch beyond the largest bucket is split into top-bucket chunks
+        # instead of minting a new padded shape (each extra shape is a
+        # compile stall — the tail-latency failure mode bucketing removes)
+        top = max(self.cfg.batch_buckets)
+        chunks = [batch[lo : lo + top] for lo in range(0, len(batch), top)]
+        for i, chunk in enumerate(chunks):
+            try:
+                self._dispatch_chunk(key, chunk)
+            except Exception:
+                # the failing chunk refunds itself (below); the undispatched
+                # remainder was already pulled off the queue, so hand its
+                # admission reservations back too before propagating
+                for r in (q for c in chunks[i + 1 :] for q in c):
+                    self.tenant_governor(r.tenant).settle(-r.reserved_ru)
+                raise
+
+    def _dispatch_chunk(self, key: tuple, batch: list[ServeRequest]):
+        shard_key, k, L, exact = key
         dispatch_s = self.clock.now()
         queries = np.stack([r.vector for r in batch]).astype(np.float32)
-        partitions = self._resolve(shard_key)
 
         try:
+            partitions = self._resolve(shard_key)
             if exact:
                 ids, dists, ru_total, service_ms, plan = self._exact_scan(
                     partitions, queries, k
@@ -299,10 +318,16 @@ class VectorServeEngine:
                 ids, dists, info = batched_fanout_search(
                     partitions, queries, k, L=L,
                     batch_buckets=self.cfg.batch_buckets,
+                    beam_width=self.cfg.beam_width,
                 )
                 ru_total = info["ru_total"]
                 service_ms = info["service_latency_ms"]
                 plan = "graph"
+                pstats = info["stats_per_partition"]
+                if pstats:
+                    self.metrics.note_hops(
+                        float(np.mean([s.hops for s in pstats])), len(batch)
+                    )
         except Exception:
             # hand the admission reservations back — a failed dispatch must
             # not bleed the tenants' budgets

@@ -28,7 +28,7 @@ import numpy as np
 from ..core import GraphConfig
 from ..partition import Collection, CollectionConfig, ReplicaSet
 from ..partition.fanout import merge_topk
-from ..store.ru import OpCounters
+from ..store.ru import counters_for_latency, counters_for_ru
 from .vector_engine import EngineConfig, ServeRequest, Throttled, VectorServeEngine
 
 
@@ -216,9 +216,11 @@ class VectorCollectionService:
             ids_l.append(ids)
             d_l.append(dists)
             plan = stats.plan
-            counters = _stats_counters(stats)
-            ru += p.providers.meter.ru(counters)
-            lat_ms = max(lat_ms, p.providers.meter.latency_ms(counters))
+            # RU charges the work done; latency sees the round-structured
+            # critical path — same split as the batched fanout path
+            ru += p.providers.meter.ru(counters_for_ru(stats))
+            lat_ms = max(lat_ms, p.providers.meter.latency_ms(
+                counters_for_latency(stats)))
         ids, dists = merge_topk(ids_l, d_l, q.k)
         return ids[0], dists[0], ru, lat_ms
 
@@ -250,11 +252,3 @@ class _RUTally:
     def add(self, ru: float) -> float:
         self.value += ru
         return ru
-
-
-def _stats_counters(stats) -> OpCounters:
-    return OpCounters(
-        quant_reads=int(stats.cmps),
-        adj_reads=int(stats.hops),
-        full_reads=int(stats.full_reads),
-    )

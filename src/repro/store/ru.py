@@ -103,6 +103,36 @@ class RUMeter:
         return us / 1000.0 + c.cpu_ms
 
 
+def counters_for_ru(stats, lanes: int = 1) -> OpCounters:
+    """Work-based counters from search ``QueryStats``: RU charges every
+    quantized comparison and every adjacency row actually fetched
+    (``expansions``) — beam width buys latency, not free reads."""
+    adj = getattr(stats, "expansions", 0.0) or stats.hops
+    return OpCounters(
+        quant_reads=int(stats.cmps * lanes),
+        adj_reads=int(adj * lanes),
+        full_reads=int(stats.full_reads * lanes),
+    )
+
+
+def counters_for_latency(stats) -> OpCounters:
+    """Critical-path counters from search ``QueryStats``: one beam-width
+    round issues its ≤ W·R_slack quantized reads concurrently (the paper's
+    beamWidth bang-for-the-buck), so the sequential path sees ``cmps / W̄``
+    of them — W̄ = expansions/rounds, measured from the stats so
+    partially-filled late rounds are not over-credited. Adjacency fetches
+    coalesce into one round trip per round. The single source of truth for
+    the round-structured latency model (fanout, serve, benchmarks)."""
+    w_bar = max(
+        getattr(stats, "expansions", 0.0) / max(stats.hops, 1e-9), 1.0
+    )
+    return OpCounters(
+        quant_reads=int(round(stats.cmps / w_bar)),
+        adj_reads=int(stats.hops),
+        full_reads=int(stats.full_reads),
+    )
+
+
 @dataclasses.dataclass(frozen=True)
 class AdmissionDecision:
     """Outcome of a non-blocking admission check (the 429 path): when not

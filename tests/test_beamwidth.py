@@ -1,0 +1,289 @@
+"""Beam-width (W-way hop batching) tests: recall parity across W, round
+counts dropping ~W×, sort-based duplicate-mask correctness, pagination on
+the shared expansion step, jit-signature stability, and the engine's
+oversized-batch splitting."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from proptest import given, settings
+from proptest import strategies as st
+
+from repro.core import DiskANNIndex, GraphConfig
+from repro.core import recall as rec
+from repro.core import search as smod
+from repro.serve import (EngineConfig, ServeRequest, VectorCollectionService,
+                         VectorServeEngine)
+
+from conftest import clustered_data
+
+
+@pytest.fixture(scope="module")
+def built_index():
+    rng = np.random.RandomState(11)
+    N, D = 1200, 24
+    data = clustered_data(rng, N, D)
+    cfg = GraphConfig(capacity=N + 64, R=20, M=8, L_build=40, L_search=40,
+                      bootstrap_sample=200, refine_sample=10**9, batch_size=64)
+    idx = DiskANNIndex(cfg, D, seed=0)
+    idx.insert(list(range(N)), data)
+    return idx, data
+
+
+def _queries(data, seed, n, noise=0.05):
+    rng = np.random.RandomState(seed)
+    pick = rng.choice(len(data), n, replace=False)
+    return (data[pick] + noise * rng.randn(n, data.shape[1])).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# sort-based duplicate mask
+# ---------------------------------------------------------------------------
+
+
+def _pairwise_dup(ids: np.ndarray) -> np.ndarray:
+    """Reference: the former O(n²) mask — True where ids[i] repeats an
+    earlier entry (negative ids never marked; they are padding)."""
+    out = np.zeros(len(ids), bool)
+    seen = set()
+    for i, v in enumerate(ids):
+        if v >= 0 and v in seen:
+            out[i] = True
+        seen.add(v)
+    return out
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.sampled_from([7, 41, 164]))
+def test_mask_duplicates_matches_pairwise(seed, n):
+    rng = np.random.RandomState(seed)
+    ids = rng.randint(-1, 30, size=n).astype(np.int32)  # dense → many dups
+    got = np.asarray(smod.mask_duplicates(jnp.asarray(ids)))
+    np.testing.assert_array_equal(got, _pairwise_dup(ids))
+
+
+# ---------------------------------------------------------------------------
+# recall parity + round counts
+# ---------------------------------------------------------------------------
+
+
+def test_recall_parity_and_hops_across_beamwidths(built_index):
+    idx, data = built_index
+    q = _queries(data, 3, 32)
+    gt = rec.ground_truth(q, data, np.ones(len(data), bool), 10)
+    res = {}
+    for W in (1, 2, 4):
+        ids, dists, stats = idx.search(q, k=10, L=48, beam_width=W)
+        res[W] = (rec.recall_at_k(ids, gt, 10), stats)
+        assert np.all(np.diff(dists, axis=1) >= -1e-5), "results must be sorted"
+    r1 = res[1][0]
+    for W in (2, 4):
+        assert abs(res[W][0] - r1) <= 0.01, f"W={W}: {res[W][0]} vs {r1}"
+    # rounds drop ~W×; monotone in W
+    h1, h2, h4 = (res[W][1].hops for W in (1, 2, 4))
+    assert h4 <= h2 <= h1
+    assert h4 <= 0.4 * h1, f"W=4 rounds {h4} vs W=1 {h1}"
+    # same candidate-pool semantics: expansions ≈ flat, cmps rise modestly
+    assert res[4][1].expansions <= 1.5 * res[1][1].expansions
+    assert res[4][1].cmps >= res[1][1].cmps
+    assert res[1][1].expansions == pytest.approx(res[1][1].hops)  # W=1 ⇒ equal
+
+
+def test_filtered_beamwidth_parity(built_index):
+    idx, data = built_index
+    rng = np.random.RandomState(5)
+    match = rng.choice(len(data), 400, replace=False)
+    doc_filter = np.zeros(idx.cfg.capacity, bool)
+    doc_filter[match] = True
+    q = _queries(data[match], 9, 16)
+    live = np.zeros(len(data), bool)
+    live[match] = True
+    gt = rec.ground_truth(q, data, live, 5)
+    recs = {}
+    for W in (1, 4):
+        ids, _, stats = idx.filtered_search(q, k=5, doc_filter=doc_filter,
+                                            mode="beta", beam_width=W)
+        valid = ids[ids >= 0]
+        assert np.isin(valid, match).all(), "non-matching docs returned"
+        recs[W] = rec.recall_at_k(ids, gt, 5)
+    assert abs(recs[4] - recs[1]) <= 0.01, recs
+
+
+def test_deleted_nodes_beamwidth(built_index):
+    idx, data = built_index
+    snap = idx.snapshot()
+    try:
+        victims = list(range(50, 200))
+        idx.delete(victims, policy="inplace")
+        live = np.ones(len(data), bool)
+        live[victims] = False
+        rng = np.random.RandomState(13)
+        pick = rng.choice(np.nonzero(live)[0], 24, replace=False)
+        q = (data[pick] + 0.05 * rng.randn(24, data.shape[1])).astype(np.float32)
+        gt = rec.ground_truth(q, data, live, 10)
+        recs = {}
+        for W in (1, 4):
+            ids, _, _ = idx.search(q, k=10, L=48, beam_width=W)
+            for row in ids:
+                assert not (set(row.tolist()) & set(victims)), "deleted id returned"
+            recs[W] = rec.recall_at_k(ids, gt, 10)
+        assert abs(recs[4] - recs[1]) <= 0.01, recs
+    finally:
+        idx.restore(snap)
+
+
+def test_pagination_beamwidth(built_index):
+    """Pages stay disjoint and cover the brute-force prefix at W=4, and the
+    shared W-way step cuts the page's sequential round count."""
+    idx, data = built_index
+    q = _queries(data, 21, 1)[0]
+    states = {}
+    for W in (1, 4):
+        state = idx.start_pagination(q, L=32)
+        seen = set()
+        for _ in range(3):
+            ids, _, state = idx.next_page(q, state, k=5, rerank=False,
+                                          beam_width=W)
+            page = [i for i in ids.tolist() if i >= 0]
+            assert not (set(page) & seen), "pages must not repeat results"
+            seen |= set(page)
+        states[W] = (state, seen)
+    gt = rec.ground_truth(q[None], data, np.ones(len(data), bool), 15)[0]
+    for W in (1, 4):
+        overlap = len(states[W][1] & set(gt.tolist())) / 15
+        assert overlap >= 0.6, (W, overlap)
+    assert int(states[4][0].hops) < int(states[1][0].hops)
+
+
+# ---------------------------------------------------------------------------
+# jit-signature stability + engine integration
+# ---------------------------------------------------------------------------
+
+
+def test_beamwidth_one_compile_per_signature(built_index):
+    """Changing beam_width costs exactly one compile per (bucket, L) it is
+    used with — and re-use at the same W costs zero."""
+    idx, data = built_index
+    neighbors, codes, versions, live, _ = idx.pv.materialize(idx.ctx)
+    luts = idx._luts(data[:3])  # B=3 → bucket 4
+
+    def run(W):
+        return smod.bucketed_batch_greedy_search(
+            neighbors, codes, versions, live, luts, jnp.int32(idx.medoid),
+            L=33, beam_width=W,  # L=33: a signature nothing else touches
+        )
+
+    base = smod.jit_cache_size()
+    run(4)
+    assert smod.jit_cache_size() == base + 1
+    run(4)  # same (bucket, L, W) → cached
+    assert smod.jit_cache_size() == base + 1
+    run(2)  # new W → exactly one more signature
+    assert smod.jit_cache_size() == base + 2
+    run(2)
+    assert smod.jit_cache_size() == base + 2
+
+
+@pytest.fixture(scope="module")
+def small_service():
+    rng = np.random.RandomState(29)
+    n, dim = 400, 16
+    g = GraphConfig(capacity=n + 256, R=16, M=8, L_build=32, L_search=32,
+                    bootstrap_sample=128, refine_sample=10**9, batch_size=64)
+    svc = VectorCollectionService(
+        dim=dim, graph=g, max_vectors_per_partition=n + 200,
+        engine_cfg=EngineConfig(),
+    )
+    data = clustered_data(rng, n, dim)
+    svc.upsert([{"id": i} for i in range(n)], data)
+    return svc, data
+
+
+def test_engine_splits_oversized_batches(small_service):
+    """A forced batch beyond the largest bucket dispatches as top-bucket
+    chunks — no new padded shape is minted (closes the next_bucket TODO)."""
+    svc, data = small_service
+    top = max(smod.BATCH_BUCKETS)
+    eng = VectorServeEngine(svc.collection,
+                            cfg=EngineConfig(max_batch=top + 36))
+    rng = np.random.RandomState(1)
+    qs = data[rng.randint(0, len(data), top + 16)] + 0.01
+    rids = [eng.submit_query(q, k=5) for q in qs]
+    eng.pump(force=True)
+    resps = [eng.responses[r] for r in rids]
+    assert all(r.status == 200 for r in resps)
+    sizes = sorted({r.batch_size for r in resps})
+    assert sizes == [16, top], sizes  # chunked, not rounded up to 2·top
+    assert max(r.batch_size for r in resps) <= top
+
+
+def test_oversized_batch_failure_refunds_every_chunk(small_service):
+    """A chunk failing mid-split must refund the admission reservations of
+    the failing chunk AND the undispatched remainder (they were already
+    pulled off the queue) — no tenant-budget bleed."""
+    svc, data = small_service
+    top = max(smod.BATCH_BUCKETS)
+    calls = {"n": 0}
+    real = svc.collection.partitions
+
+    def flaky_resolver(_sk):
+        calls["n"] += 1
+        if calls["n"] == 2:  # chunk 1 OK, chunk 2 blows up, chunk 3 orphaned
+            raise RuntimeError("partition down")
+        return real
+
+    eng = VectorServeEngine(svc.collection,
+                            cfg=EngineConfig(max_batch=2 * top + 8),
+                            resolver=flaky_resolver)
+    n_req = 2 * top + 8
+    for i in range(n_req):
+        resp = eng.submit(ServeRequest(rid=eng.next_rid(),
+                                       vector=data[i % len(data)],
+                                       k=5, tenant="t"))
+        assert resp is None  # all admitted (reservations taken)
+    gov = eng.tenant_governor("t")
+    with pytest.raises(RuntimeError):
+        eng.pump(force=True)
+    served = [r for r in eng.responses.values() if r.status == 200]
+    assert len(served) == top  # only chunk 1 dispatched
+    # budget reflects ONLY the work actually done (chunk 1's actual RU)
+    # plus the refill for simulated time elapsed during its service —
+    # chunks 2 and 3 refunded their reservations in full
+    refill = gov.clock_s * gov.provisioned
+    expected = gov.provisioned - sum(r.ru for r in served) + refill
+    assert gov.available == pytest.approx(expected)
+
+
+def test_engine_beamwidth_config_recall(small_service):
+    """W=4 engine serves the same results quality as W=1 (recall vs the
+    exact plan) with zero steady-state recompiles."""
+    svc, data = small_service
+    rng = np.random.RandomState(17)
+    qs = data[rng.choice(len(data), 16, replace=False)] + 0.01
+
+    def run(W):
+        eng = VectorServeEngine(svc.collection,
+                                cfg=EngineConfig(max_batch=16, beam_width=W))
+        # warm the signature, then measure
+        for q in qs:
+            eng.submit_query(q, k=5)
+        eng.drain()
+        cache0 = eng.metrics.jit_cache_trajectory[-1]
+        rids = [eng.submit_query(q, k=5) for q in qs]
+        eng.drain()
+        assert eng.metrics.jit_cache_trajectory[-1] == cache0, "recompiled"
+        return [eng.responses[r].ids for r in rids], eng
+
+    exact = VectorServeEngine(svc.collection, cfg=EngineConfig(max_batch=16))
+    gt_rids = [exact.submit_query(q, k=5, exact=True) for q in qs]
+    exact.drain()
+    gt = [exact.responses[r].ids for r in gt_rids]
+
+    def recall(res):
+        hits = sum(len(set(i.tolist()) & set(g.tolist()))
+                   for i, g in zip(res, gt))
+        return hits / (len(gt) * 5)
+
+    res1, _ = run(1)
+    res4, eng4 = run(4)
+    assert abs(recall(res4) - recall(res1)) <= 0.01
+    assert 0 < eng4.metrics.snapshot(eng4.clock.now())["mean_hops"] < 20
