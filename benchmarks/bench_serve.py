@@ -19,7 +19,11 @@ later scale PRs (caching, replication, multi-backend) are judged against:
     saturation QPS, p95 and mean rounds per W (acceptance floor: W=4
     sustains ≥ 1.3× the W=1 saturation QPS at lower p95);
   * ``mixed_ingest`` — recall@10 with upserts streaming through the
-    interleaved ingest queue vs the query-only run (floor: within 2 pts).
+    interleaved ingest queue vs the query-only run (floor: within 2 pts);
+  * ``pagination`` — cross-partition paged queries through the engine:
+    RU per page (floor: every page > 0 — a continuation is never free),
+    drain parity with the one-shot query (no repeats, no gaps across ≥3
+    physical partitions), and the engine's ``pages_served`` accounting.
 """
 from __future__ import annotations
 
@@ -231,6 +235,46 @@ def measure_mixed_ingest(n: int, dim: int, n_queries: int,
                 recall_mixed=r_mixed, delta=r_only - r_mixed)
 
 
+def measure_pagination(dim: int = 24, parts: int = 3, page_size: int = 10,
+                       seed: int = 11) -> dict:
+    """Cross-partition pagination through the engine (small fixed size —
+    the contract is correctness + honest metering, not throughput): drain
+    a paged query over ≥3 physical partitions, record RU per page, and
+    check parity with the equivalent one-shot query."""
+    rng = np.random.RandomState(seed)
+    n = 360
+    g = GraphConfig(capacity=240, R=16, M=8, L_build=32, L_search=32,
+                    bootstrap_sample=48, refine_sample=10**9, batch_size=64)
+    svc = VectorCollectionService(dim=dim, graph=g,
+                                  max_vectors_per_partition=200,
+                                  initial_partitions=parts)
+    data = clustered(rng, n, dim)
+    svc.upsert([{"id": i} for i in range(n)], data,
+               partition_keys=[f"pk{i}" for i in range(n)])
+    q = data[17] + 0.01
+
+    token, rus, drained = None, [], set()
+    while True:
+        r = svc.query_page(VectorQuery(vector=q), token, page_size=page_size)
+        rus.append(r.ru)
+        drained.update(i for i in r.ids.tolist() if i >= 0)
+        token = r.continuation
+        if token is None:
+            break
+    pages = len(rus)
+    one = svc.query(VectorQuery(vector=q, k=pages * page_size))
+    oneset = {i for i in one.ids.tolist() if i >= 0}
+    snap = svc.engine.snapshot()
+    return dict(
+        n=n, partitions=len(svc.collection.partitions), pages=pages,
+        page_size=page_size,
+        ru_min_page=float(np.min(rus)), ru_mean_page=float(np.mean(rus)),
+        ru_total=float(np.sum(rus)), drained=len(drained),
+        drain_matches_single_query=bool(drained == oneset),
+        pages_served_metric=int(snap["pages_served"]),
+    )
+
+
 def run(n: int = 3000, dim: int = 32, n_queries: int = 384,
         rates=(200.0, 800.0, 2500.0), seed: int = 0) -> dict:
     # n_queries is deliberately ~24 full micro-batches: short overload runs
@@ -247,6 +291,7 @@ def run(n: int = 3000, dim: int = 32, n_queries: int = 384,
     beamw = beamwidth_sweep(svc.collection, data, queries, 2 * rates[-1], rng)
     speed = measure_speedup(svc, data, n_queries, rng)
     mixed = measure_mixed_ingest(max(n // 4, 400), dim, max(n_queries // 4, 16))
+    paged = measure_pagination()
 
     out = dict(
         config=dict(n=n, dim=dim, n_queries=n_queries, rates=list(rates),
@@ -255,6 +300,7 @@ def run(n: int = 3000, dim: int = 32, n_queries: int = 384,
         beamwidth=beamw,
         speedup_batch16=speed,
         mixed_ingest=mixed,
+        pagination=paged,
     )
     return out
 
@@ -294,6 +340,11 @@ def main(smoke: bool = False):
     print(f"  mixed ingest: recall@10 {mx['recall_query_only']:.3f} → "
           f"{mx['recall_mixed']:.3f} (Δ={mx['delta']:.3f}, "
           f"{mx['n_ingested']} docs streamed)")
+    pg = out["pagination"]
+    print(f"  pagination: {pg['pages']} pages × {pg['page_size']} over "
+          f"{pg['partitions']} partitions, RU/page min={pg['ru_min_page']:.2f} "
+          f"mean={pg['ru_mean_page']:.2f}, drained={pg['drained']}, "
+          f"parity={pg['drain_matches_single_query']}")
 
     # acceptance floors (ISSUE 2 + ISSUE 3): the batch-16 speedup and the
     # zero-recompile contract gate at BOTH scales (scripts/check.sh --smoke
@@ -313,6 +364,15 @@ def main(smoke: bool = False):
         f"W=4 mean rounds {bw['hops_ratio_w4']:.2f}x of W=1 (> 0.4x)"
     assert mx["recall_mixed"] >= mx["recall_query_only"] - 0.02, \
         f"ingest degraded recall: {mx}"
+    # ISSUE 4: paginated queries are engine-metered — every page bills
+    # RU > 0 and draining the continuation chain neither repeats nor skips
+    assert pg["partitions"] >= 3, "pagination bench must span ≥3 partitions"
+    assert pg["ru_min_page"] > 0.0, \
+        f"a paged query reported a free page (RU {pg['ru_min_page']})"
+    assert pg["drain_matches_single_query"], \
+        "paged drain diverged from the one-shot result set"
+    assert pg["pages_served_metric"] == pg["pages"], \
+        "engine metrics must account every served page"
     return out
 
 

@@ -44,10 +44,14 @@ def main():
     cats = [svc.docs[int(i)]["category"] for i in res.ids if i >= 0]
     print(f"filtered query -> categories {cats} (all 2), plan={res.plan}")
 
-    # paginated query with a continuation token — §3.5 Continuations
+    # paginated query with a continuation token — §3.5 Continuations.
+    # Tokens are versioned schema-checked bytes (never pickle), pages fan
+    # out across every physical partition, and each page bills RU through
+    # the engine like any other request.
     page1 = svc.query_page(VectorQuery(vector=q, k=5), None, page_size=5)
     page2 = svc.query_page(VectorQuery(vector=q, k=5), page1.continuation, page_size=5)
-    print(f"page1={page1.ids.tolist()}  page2={page2.ids.tolist()} (disjoint)")
+    print(f"page1={page1.ids.tolist()} RU={page1.ru:.1f}  "
+          f"page2={page2.ids.tolist()} RU={page2.ru:.1f} (disjoint, both billed)")
 
 
 if __name__ == "__main__":

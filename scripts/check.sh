@@ -36,6 +36,32 @@ if failures:
     sys.exit(1)
 count = sum(1 for _ in pkgutil.walk_packages(repro.__path__, prefix="repro."))
 print(f"ok: {count} modules import cleanly")
+
+# Continuation tokens are client-supplied bytes: the serving layer must
+# never deserialize them with pickle (arbitrary code execution). AST-walk
+# every module under src/repro/serve and reject pickle-family imports.
+import ast
+from pathlib import Path
+
+BANNED = {"pickle", "cPickle", "dill", "shelve"}
+hits = []
+for path in sorted(Path("src/repro/serve").rglob("*.py")):
+    tree = ast.parse(path.read_text(), filename=str(path))
+    for node in ast.walk(tree):
+        names = []
+        if isinstance(node, ast.Import):
+            names = [a.name.split(".")[0] for a in node.names]
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            names = [node.module.split(".")[0]]
+        for n in names:
+            if n in BANNED:
+                hits.append(f"{path}:{node.lineno}: imports {n}")
+if hits:
+    print("PICKLE LINT FAIL (serve/ deserializes client bytes):")
+    for h in hits:
+        print(" ", h)
+    sys.exit(1)
+print("ok: no pickle-family imports under src/repro/serve")
 EOF
 
 echo "== tier-1 tests =="

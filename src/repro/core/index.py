@@ -40,6 +40,13 @@ from . import search as smod
 from .providers import ArrayProviderSet, Context, ProviderSet
 
 
+# backup-queue capacity for paginated search: one value service-wide, so
+# every continuation token carries a single known shape (the serving layer
+# validates client tokens against it — an arbitrary width would mint a
+# fresh jit signature per forged token)
+PAGE_BACKUP_CAP = 512
+
+
 @dataclasses.dataclass
 class QueryStats:
     hops: float = 0.0  # sequential expansion rounds (latency-critical path)
@@ -548,13 +555,29 @@ class DiskANNIndex:
 
     # -- pagination (§3.2 / §3.5 Continuations) ---------------------------
     def start_pagination(self, query: np.ndarray, L: Optional[int] = None,
-                         backup_cap: int = 512) -> pgmod.PageState:
+                         backup_cap: int = PAGE_BACKUP_CAP) -> pgmod.PageState:
         L = L or self.cfg.L_search
         _, codes, versions, _, _ = self.pv.materialize(self.ctx)
         lut = self._luts(query[None, :])[0]
         return pgmod.start_pagination(
             self.cfg.capacity, L, backup_cap, codes, versions, lut,
             jnp.int32(self.medoid),
+        )
+
+    @staticmethod
+    def page_stats(prev: pgmod.PageState, new: pgmod.PageState, k: int,
+                   rerank: bool = True) -> QueryStats:
+        """Per-page work delta from the cumulative PageState counters —
+        feeds the same ``counters_for_ru`` / ``counters_for_latency`` split
+        as the main search path, so a page is billed for the quantized
+        comparisons and adjacency rows it actually fetched plus the k
+        full-precision re-rank reads (a page is never free)."""
+        return QueryStats(
+            hops=float(int(new.hops) - int(prev.hops)),
+            cmps=float(int(new.cmps) - int(prev.cmps)),
+            expansions=float(int(new.exp) - int(prev.exp)),
+            full_reads=float(k if rerank else 0),
+            plan="paginated",
         )
 
     def next_page(

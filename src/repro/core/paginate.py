@@ -42,6 +42,7 @@ class PageState(NamedTuple):
     bitmap: jax.Array  # visited set, persists across pages
     hops: jax.Array
     cmps: jax.Array
+    exp: jax.Array  # adjacency rows fetched (= hops·W̄; RU-relevant)
     dropped: jax.Array  # candidates lost to the backup capacity bound
 
 
@@ -60,6 +61,7 @@ def start_pagination(
         bitmap=g.bitmap_set(g.bitmap_init(capacity), jnp.array([start], jnp.int32)),
         hops=jnp.int32(0),
         cmps=jnp.int32(1),
+        exp=jnp.int32(0),
         dropped=jnp.int32(0),
     )
 
@@ -153,6 +155,7 @@ def next_page(
             bitmap=bitmap,
             hops=st.hops + 1,
             cmps=st.cmps + n_new,
+            exp=st.exp + p_valid.sum(),
             dropped=dropped,
         )
 

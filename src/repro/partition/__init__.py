@@ -14,7 +14,9 @@ partial results client-side (§3.5 "SDK Query Plan", §4.3). Reproduced here:
     replica.py      replica sets: quorum writes, failover, read spreading
 """
 from .partitioner import Collection, CollectionConfig, PhysicalPartition
-from .fanout import fanout_search, distributed_search_fn
+from .fanout import (PagedQueryState, PartitionPageCursor,
+                     distributed_search_fn, fanout_search,
+                     paged_fanout_search, start_paged_fanout)
 from .replica import ReplicaSet
 
 __all__ = [
@@ -23,5 +25,9 @@ __all__ = [
     "PhysicalPartition",
     "fanout_search",
     "distributed_search_fn",
+    "paged_fanout_search",
+    "start_paged_fanout",
+    "PagedQueryState",
+    "PartitionPageCursor",
     "ReplicaSet",
 ]

@@ -18,6 +18,7 @@ Two implementations of the same scatter/gather:
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Optional, Sequence
 
@@ -28,6 +29,7 @@ from jax.sharding import PartitionSpec as P
 
 from .. import compat
 from ..core import flat as fmod
+from ..core import paginate as pgmod
 from ..core import pq as pqmod
 from ..core import search as smod
 from ..store.ru import counters_for_latency
@@ -68,6 +70,7 @@ def fanout_search(
     rng = rng or np.random.RandomState(0)
     ids_l, dists_l, rus, lats = [], [], [], []
     hedges = 0
+    hedge_ru = 0.0
     for p in partitions:
         ids, dists, ru = p.search(queries, k, L)
         ids_l.append(ids)
@@ -77,15 +80,20 @@ def fanout_search(
             lat = latency_model(p, rng)
             if hedge_at_ms is not None and lat > hedge_at_ms:
                 hedges += 1
+                # a hedge is a SECOND server-side execution on another
+                # replica: the fastest answer wins the latency race, but
+                # both executions did the work — the duplicate bills too
+                hedge_ru += ru
                 lat = min(lat, latency_model(p, rng))  # hedged duplicate
             lats.append(lat)
     ids, dists = merge_topk(ids_l, dists_l, k)
     info = dict(
         ru_per_partition=rus,
-        ru_total=float(np.sum(rus)),
+        ru_total=float(np.sum(rus)) + hedge_ru,
         server_latencies_ms=lats,
         client_latency_ms=float(np.max(lats)) if lats else 0.0,
         hedges=hedges,
+        hedge_ru=hedge_ru,
     )
     return ids, dists, info
 
@@ -136,6 +144,179 @@ def batched_fanout_search(
         stats_per_partition=stats_l,
         server_latencies_ms=lat_ms,
         service_latency_ms=float(np.max(lat_ms)) if lat_ms else 0.0,
+    )
+    return ids, dists, info
+
+
+# ---------------------------------------------------------------------------
+# cross-partition pagination (§3.5 "Continuations" — client-side merge)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PartitionPageCursor:
+    """One partition's slice of a cross-partition pagination.
+
+    ``state`` is the partition-local ``PageState`` (dropped once the
+    partition is exhausted, shrinking the token); ``buf_*`` hold results
+    already fetched from the partition but not yet emitted in a merged
+    page; ``fetch_hwm`` is the partition's high-water mark — the largest
+    distance it has produced so far. A partition's page stream is
+    ascending, so everything it will produce later is ≥ ``fetch_hwm``;
+    the merge exploits that bound through its nonempty-buffer rule (see
+    ``paged_fanout_search``), and the token decoder enforces the
+    buffer-vs-hwm consistency a resumed token must satisfy.
+    """
+
+    pid: int
+    state: Optional[pgmod.PageState]
+    buf_ids: np.ndarray  # (n,) int64, ascending by buf_dists
+    buf_dists: np.ndarray  # (n,) float32
+    fetch_hwm: float = -np.inf
+    exhausted: bool = False
+
+
+@dataclasses.dataclass
+class PagedQueryState:
+    """The whole cross-partition continuation: one cursor per physical
+    partition plus global merge bookkeeping. This object IS the token —
+    ``serve.continuation`` round-trips it through a versioned, schema-
+    checked numpy codec (never pickle: tokens are client-supplied bytes)."""
+
+    shard_fp: int  # fingerprint of (shard_key, partition ids) at start
+    emit_hwm: float  # largest distance emitted in any merged page
+    pages: int  # merged pages emitted so far
+    cursors: list[PartitionPageCursor]
+
+    def exhausted(self) -> bool:
+        return all(c.exhausted and len(c.buf_ids) == 0 for c in self.cursors)
+
+
+def paged_fanout_fingerprint(shard_key, partitions) -> int:
+    """Bind a token to the routing that minted it: resuming under a
+    different shard key — or after a split/merge changed the partition
+    set — is rejected up front, not silently mis-merged."""
+    from .partitioner import hash_key
+
+    return hash_key((repr(shard_key), tuple(int(p.pid) for p in partitions)))
+
+
+def start_paged_fanout(partitions, query: np.ndarray, shard_key=None,
+                       L: Optional[int] = None) -> PagedQueryState:
+    """Open one pagination cursor per physical partition."""
+    query = np.asarray(query, np.float32)
+    cursors = [
+        PartitionPageCursor(
+            pid=int(p.pid),
+            state=p.start_pagination(query, L=L),
+            buf_ids=np.zeros((0,), np.int64),
+            buf_dists=np.zeros((0,), np.float32),
+        )
+        for p in partitions
+    ]
+    return PagedQueryState(
+        shard_fp=paged_fanout_fingerprint(shard_key, partitions),
+        emit_hwm=-np.inf, pages=0, cursors=cursors,
+    )
+
+
+def _fetch_partition_page(p, cur: PartitionPageCursor, query: np.ndarray,
+                          k: int, beam_width: Optional[int]) -> tuple[float, float]:
+    """Pull one page from partition ``p`` into the cursor's buffer.
+    Returns (ru, modelled latency ms) for this fetch."""
+    ids, dists, state, ru, stats = p.next_page(
+        query, cur.state, k=k, beam_width=beam_width
+    )
+    lat_ms = p.providers.meter.latency_ms(counters_for_latency(stats))
+    ids, dists = np.asarray(ids), np.asarray(dists)
+    valid = (ids >= 0) & np.isfinite(dists)
+    ids = ids[valid].astype(np.int64)
+    dists = dists[valid].astype(np.float32)
+    cur.state = state
+    if len(ids):
+        cur.fetch_hwm = max(cur.fetch_hwm, float(dists.max()))
+        bi = np.concatenate([cur.buf_ids, ids])
+        bd = np.concatenate([cur.buf_dists, dists])
+        # re-sort: full-precision re-rank can jitter the tail ordering
+        order = np.argsort(bd, kind="stable")
+        cur.buf_ids, cur.buf_dists = bi[order], bd[order]
+    if len(ids) == 0 or bool(pgmod.exhausted(state)):
+        cur.exhausted = True
+        cur.state = None  # nothing left to resume — shrink the token
+    return ru, lat_ms
+
+
+def paged_fanout_search(
+    partitions,  # Sequence[PhysicalPartition], index-aligned with cursors
+    query: np.ndarray,  # (D,)
+    pstate: PagedQueryState,
+    page_size: int,
+    beam_width: Optional[int] = None,
+) -> tuple[np.ndarray, np.ndarray, dict]:
+    """Produce the next globally-merged page across all partitions.
+
+    Buffered k-way merge: before every emit, each non-exhausted partition
+    holds a nonempty buffer, so the global buffer minimum is ≤ every
+    partition's ``fetch_hwm`` — nothing still unfetched anywhere can beat
+    it. Emitted results therefore never repeat and never skip, and the
+    per-partition leftovers ride along in the continuation token.
+
+    info carries per-partition RU and fetch latencies (partitions fetch
+    concurrently, so service latency is the max of per-partition sums, the
+    same worst-partition model as ``batched_fanout_search``) plus the fixed
+    per-request RU floor — a continuation request is never free, even when
+    a page is served entirely from the token's buffers (§2.2: every
+    request bills at least the request-processing charge).
+    """
+    assert len(partitions) == len(pstate.cursors), \
+        "cursors must be index-aligned with the partition routing"
+    query = np.asarray(query, np.float32)
+    n = len(partitions)
+    out_ids: list[int] = []
+    out_dists: list[float] = []
+    rus = [0.0] * n
+    lat_sums = [0.0] * n
+    fetches = 0
+    while len(out_ids) < page_size:
+        for i, (p, cur) in enumerate(zip(partitions, pstate.cursors)):
+            while not cur.exhausted and len(cur.buf_ids) == 0:
+                ru, lat = _fetch_partition_page(
+                    p, cur, query, page_size, beam_width
+                )
+                rus[i] += ru
+                lat_sums[i] += lat
+                fetches += 1
+        heads = [
+            (float(cur.buf_dists[0]), i)
+            for i, cur in enumerate(pstate.cursors) if len(cur.buf_ids)
+        ]
+        if not heads:
+            break  # every partition exhausted and drained
+        d, i = min(heads)
+        cur = pstate.cursors[i]
+        out_ids.append(int(cur.buf_ids[0]))
+        out_dists.append(d)
+        cur.buf_ids = cur.buf_ids[1:]
+        cur.buf_dists = cur.buf_dists[1:]
+        pstate.emit_hwm = max(pstate.emit_hwm, d)
+    pstate.pages += 1
+
+    ids = np.full((page_size,), -1, np.int64)
+    dists = np.full((page_size,), np.inf, np.float32)
+    ids[: len(out_ids)] = out_ids
+    dists[: len(out_dists)] = out_dists
+    request_ru = (
+        partitions[0].providers.meter.cfg.ru_per_page_request if n else 0.0
+    )
+    info = dict(
+        ru_per_partition=rus,
+        request_ru=request_ru,
+        ru_total=float(np.sum(rus)) + request_ru,
+        server_latencies_ms=lat_sums,
+        service_latency_ms=float(np.max(lat_sums)) if lat_sums else 0.0,
+        pages_fetched=fetches,
+        emit_hwm=pstate.emit_hwm,  # how deep into the result set we are
+        exhausted=pstate.exhausted(),
     )
     return ids, dists, info
 

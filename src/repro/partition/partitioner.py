@@ -103,6 +103,28 @@ class PhysicalPartition:
         self.governor.request(ru)
         return ids, dists, ru, stats
 
+    # -- pagination (one partition's slice of a cross-partition page) ----
+    def start_pagination(self, query: np.ndarray, L: Optional[int] = None):
+        """Open a pagination cursor over THIS partition's index."""
+        return self.index.start_pagination(np.asarray(query, np.float32), L=L)
+
+    def next_page(self, query: np.ndarray, state, k: int,
+                  beam_width: Optional[int] = None):
+        """Produce this partition's next page, RU-metered like the main
+        search path. Returns (doc_ids, dists, state, ru, stats): RU charges
+        the page's quantized comparisons + adjacency fetches + k re-rank
+        reads (a paged scan is never free), and the stats feed the
+        round-structured latency model."""
+        self.providers.begin_op()
+        ids, dists, new_state = self.index.next_page(
+            query, state, k=k, beam_width=beam_width
+        )
+        stats = self.index.page_stats(state, new_state, k)
+        self.providers.op += counters_for_ru(stats)
+        ru, _ = self.providers.end_op()
+        self.governor.request(ru)
+        return ids, dists, new_state, ru, stats
+
 
 class Collection:
     """A scaled-out collection: hash ranges → physical partitions."""
@@ -127,12 +149,28 @@ class Collection:
                 return p
         raise RuntimeError("hash ranges must cover the keyspace")
 
+    def owner_of(self, doc_id: int) -> Optional[PhysicalPartition]:
+        """The partition that currently holds ``doc_id`` (each partition
+        records the pk hash it ingested every doc under), or None."""
+        for p in self.partitions:
+            if int(doc_id) in p.doc_pk:
+                return p
+        return None
+
     def insert(self, doc_ids: Sequence[int], partition_keys: Sequence,
                vectors: np.ndarray) -> float:
         """Route documents to their partitions; split when full."""
         total_ru = 0.0
         by_part: dict[int, list[int]] = {}
         hashes = [hash_key(pk) for pk in partition_keys]
+        # Cosmos identity is (partition key, id): re-upserting an id under
+        # a key that hashes to a DIFFERENT partition moves the document —
+        # tombstone the old copy first, or it lingers live in its old
+        # partition serving stale results forever
+        for i, h in enumerate(hashes):
+            owner = self.owner_of(doc_ids[i])
+            if owner is not None and not owner.owns(h):
+                total_ru += owner.delete([int(doc_ids[i])])
         for i, h in enumerate(hashes):
             for j, p in enumerate(self.partitions):
                 if p.owns(h):
@@ -159,6 +197,18 @@ class Collection:
         ru = 0.0
         for d, pk in zip(doc_ids, partition_keys):
             ru += self._route(pk).delete([d])
+        return ru
+
+    def delete_by_id(self, doc_ids: Sequence[int]) -> float:
+        """Delete by locating each doc's OWNING partition — no
+        caller-supplied pk, so a delete can never route to the wrong
+        partition and silently no-op (unknown ids are skipped, matching
+        ``DiskANNIndex.delete`` semantics)."""
+        ru = 0.0
+        for d in doc_ids:
+            p = self.owner_of(d)
+            if p is not None:
+                ru += p.delete([int(d)])
         return ru
 
     # ------------------------------------------------------------------

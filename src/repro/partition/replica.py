@@ -28,6 +28,7 @@ class ReplicaState:
     rid: int
     alive: bool = True
     applied_lsn: int = 0
+    reads: int = 0  # queries served by this replica (read spreading)
 
 
 class ReplicaSet:
@@ -65,12 +66,20 @@ class ReplicaSet:
         return out
 
     def search(self, queries, k, L=None, **kw):
-        """Read-spread across healthy replicas (round robin)."""
+        """Read-spread across healthy replicas (round robin): the cursor
+        actually SELECTS the serving replica — dead replicas receive no
+        reads, and per-replica read counts make the spreading observable
+        (it is what fan-out hedging exploits for stragglers)."""
         healthy = self.healthy()
         if not healthy:
             raise RuntimeError("no healthy replicas")
+        replica = healthy[self._rr % len(healthy)]
         self._rr = (self._rr + 1) % len(healthy)
+        replica.reads += 1
         return self.partition.search(queries, k, L, **kw)
+
+    def read_counts(self) -> dict[int, int]:
+        return {r.rid: r.reads for r in self.replicas}
 
     # ------------------------------------------------------------------
     # failures

@@ -1,4 +1,6 @@
 """repro.serve — serving: the Cosmos-style vector service + engines."""
+from .continuation import (ContinuationError, decode_continuation,
+                           encode_continuation)
 from .engine import ServeEngine
 from .metrics import EngineMetrics, SimClock, poisson_arrivals
 from .vector_engine import (EngineConfig, ServeRequest, ServeResponse,
@@ -9,4 +11,5 @@ __all__ = [
     "VectorCollectionService", "VectorQuery", "ServeEngine",
     "VectorServeEngine", "EngineConfig", "ServeRequest", "ServeResponse",
     "Throttled", "EngineMetrics", "SimClock", "poisson_arrivals",
+    "ContinuationError", "encode_continuation", "decode_continuation",
 ]

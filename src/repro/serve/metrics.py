@@ -57,6 +57,7 @@ class EngineMetrics:
 
     queries_ok: int = 0
     queries_throttled: int = 0
+    pages_served: int = 0  # merged continuation pages (each RU-metered)
     batches: int = 0
     lanes_total: int = 0  # dispatched lanes incl. padding
     lanes_padded: int = 0
@@ -102,6 +103,7 @@ class EngineMetrics:
         return dict(
             queries_ok=self.queries_ok,
             queries_throttled=self.queries_throttled,
+            pages_served=self.pages_served,
             batches=self.batches,
             qps=self.queries_ok / elapsed,
             ru_per_s=self.ru_query_total / elapsed,

@@ -300,7 +300,7 @@ class VectorServeEngine:
                 # remainder was already pulled off the queue, so hand its
                 # admission reservations back too before propagating
                 for r in (q for c in chunks[i + 1 :] for q in c):
-                    self.tenant_governor(r.tenant).settle(-r.reserved_ru)
+                    self.tenant_governor(r.tenant).refund(r.reserved_ru)
                 raise
 
     def _dispatch_chunk(self, key: tuple, batch: list[ServeRequest]):
@@ -332,7 +332,7 @@ class VectorServeEngine:
             # hand the admission reservations back — a failed dispatch must
             # not bleed the tenants' budgets
             for r in batch:
-                self.tenant_governor(r.tenant).settle(-r.reserved_ru)
+                self.tenant_governor(r.tenant).refund(r.reserved_ru)
             raise
 
         service_ms += self.cfg.dispatch_overhead_ms
@@ -393,21 +393,32 @@ class VectorServeEngine:
     # admission, clock, RU settlement and metrics)
     # ------------------------------------------------------------------
     def execute_host(self, tenant: Any, plan: str,
-                     fn: Callable[[], tuple[np.ndarray, np.ndarray, float, float]]
-                     ) -> ServeResponse:
+                     fn: Callable[[], tuple],
+                     is_page: bool = False) -> ServeResponse:
+        """Run one host-side plan body under engine accounting: admission
+        (raises ``Throttled`` with the reservation untouched), clock, RU
+        settlement + EMA, and metrics. ``fn`` returns (ids, dists, ru,
+        service_ms) or (ids, dists, ru, service_ms, plan) — the 5-tuple
+        form lets the body report the plan it actually executed (e.g. the
+        per-partition aggregate of a filtered query)."""
         rejected, reserved = self._admit(tenant)
         if rejected is not None:
             raise Throttled(tenant, rejected.retry_after_s)
         try:
-            ids, dists, ru, service_ms = fn()
+            out = fn()
         except Exception:
             # e.g. a user filter predicate raising: refund the reservation
-            self.tenant_governor(tenant).settle(-reserved)
+            self.tenant_governor(tenant).refund(reserved)
             raise
+        ids, dists, ru, service_ms = out[:4]
+        if len(out) > 4:
+            plan = out[4]
         service_ms += self.cfg.dispatch_overhead_ms
         self.clock.advance(service_ms / 1000.0)
         self._settle(tenant, ru, reserved)
         self.metrics.queries_ok += 1
+        if is_page:
+            self.metrics.pages_served += 1
         self.metrics.latency_ms.observe(service_ms)
         self.metrics.wait_ms.observe(0.0)
         self.metrics.note_batch(1, 1, service_ms, ru, serving_jit_cache_size())

@@ -20,15 +20,19 @@ operation is `repro.partition.fanout.distributed_search_fn`.
 from __future__ import annotations
 
 import dataclasses
-import pickle
 from typing import Any, Callable, Optional, Sequence
 
 import numpy as np
 
 from ..core import GraphConfig
+from ..core.graph import bitmap_words
+from ..core.index import PAGE_BACKUP_CAP
 from ..partition import Collection, CollectionConfig, ReplicaSet
-from ..partition.fanout import merge_topk
+from ..partition.fanout import (merge_topk, paged_fanout_fingerprint,
+                                paged_fanout_search, start_paged_fanout)
 from ..store.ru import counters_for_latency, counters_for_ru
+from .continuation import (ContinuationError, decode_continuation,
+                           encode_continuation)
 from .vector_engine import EngineConfig, ServeRequest, Throttled, VectorServeEngine
 
 
@@ -41,6 +45,7 @@ class VectorQuery:
     exact: bool = False  # VectorDistance(..., true) → brute force
     shard_key: Any = None  # route to a sharded-DiskANN tenant index
     tenant: Any = "default"  # RU-admission principal (429s when over budget)
+    beam_width: Optional[int] = None  # paged-path W override; None → engine cfg
 
 
 @dataclasses.dataclass
@@ -124,9 +129,21 @@ class VectorCollectionService:
         return tally
 
     def _apply_upsert(self, documents, ids, pks, vectors) -> float:
+        ru = 0.0
+        if self.shard_key_path:
+            # sharded-DiskANN identity includes the shard key: re-upserting
+            # a doc under a different shard value MOVES it — tombstone the
+            # copy in the old tenant's index first, or that tenant serves
+            # the deleted/stale document forever
+            for d in documents:
+                old = self.docs.get(int(d["id"]))
+                if old is not None:
+                    old_key = old.get(self.shard_key_path)
+                    if old_key != d.get(self.shard_key_path):
+                        ru += self._tenant(old_key).delete_by_id([int(d["id"])])
         for d in documents:
             self.docs[int(d["id"])] = d
-        ru = self.collection.insert(ids, pks, vectors)
+        ru += self.collection.insert(ids, pks, vectors)
         if self.shard_key_path:
             groups: dict[Any, list[int]] = {}
             for i, d in enumerate(documents):
@@ -155,15 +172,18 @@ class VectorCollectionService:
         return tally
 
     def _apply_delete(self, doc_ids: Sequence[int]) -> float:
-        pks = [d for d in doc_ids]
+        doc_ids = [int(d) for d in doc_ids]
         shard_groups: dict[Any, list[int]] = {}
         for d in doc_ids:
-            doc = self.docs.pop(int(d), None)
+            doc = self.docs.pop(d, None)
             if doc is not None and self.shard_key_path:
-                shard_groups.setdefault(doc.get(self.shard_key_path), []).append(int(d))
-        ru = self.collection.delete(doc_ids, pks)
+                shard_groups.setdefault(doc.get(self.shard_key_path), []).append(d)
+        # route by each doc's OWNING partition (which recorded the pk at
+        # ingest) — deleting "by id as pk" sends custom-keyed docs to the
+        # wrong partition, where the tombstone is a silent no-op
+        ru = self.collection.delete_by_id(doc_ids)
         for key, ids in shard_groups.items():
-            ru += self._tenant(key).delete(ids, ids)
+            ru += self._tenant(key).delete_by_id(ids)
         return ru
 
     def _tenant(self, key) -> Collection:
@@ -203,43 +223,150 @@ class VectorCollectionService:
 
     def _run_filtered(self, q: VectorQuery, qv: np.ndarray):
         """Filtered plan body (needs the doc store for the predicate →
-        bitmap conversion; executed under the engine's accounting)."""
+        bitmap conversion; executed under the engine's accounting).
+
+        Partitions with no documents — and partitions where the predicate
+        matches nothing — are skipped outright: no O(capacity) bitmap is
+        minted and no search runs for them. The reported plan aggregates
+        every partition actually searched (e.g. ``filtered[beta×3]``),
+        not just whichever partition happened to run last."""
         target = self._partitions_for(q.shard_key)
         ids_l, d_l, ru, lat_ms = [], [], 0.0, 0.0
-        plan = ""
+        plans: dict[str, int] = {}
         for p in target:
+            if p.num_docs == 0:
+                continue
             mask = np.zeros(p.index.cfg.capacity, bool)
             for doc, slot in p.index.doc_to_slot.items():
                 if doc in self.docs and q.filter(self.docs[doc]):
                     mask[slot] = True
+            if not mask.any():
+                continue
             ids, dists, stats = p.index.filtered_search(qv[None, :], q.k, mask)
             ids_l.append(ids)
             d_l.append(dists)
-            plan = stats.plan
+            plans[stats.plan] = plans.get(stats.plan, 0) + 1
             # RU charges the work done; latency sees the round-structured
             # critical path — same split as the batched fanout path
             ru += p.providers.meter.ru(counters_for_ru(stats))
             lat_ms = max(lat_ms, p.providers.meter.latency_ms(
                 counters_for_latency(stats)))
+        if not ids_l:  # nothing matched anywhere
+            return (np.full((q.k,), -1, np.int64),
+                    np.full((q.k,), np.inf, np.float32),
+                    0.0, 0.0, "filtered[empty]")
         ids, dists = merge_topk(ids_l, d_l, q.k)
-        return ids[0], dists[0], ru, lat_ms
+        plan = "filtered[" + ",".join(
+            f"{name}×{count}" for name, count in sorted(plans.items())
+        ) + "]"
+        return ids[0], dists[0], ru, lat_ms, plan
 
     # ------------------------------------------------------------------
     # pagination / continuation tokens (§3.5 "Continuations")
     # ------------------------------------------------------------------
     def query_page(self, q: VectorQuery, continuation: Optional[bytes] = None,
                    page_size: int = 10) -> QueryResult:
-        """Paginated query over partition 0 (single-partition pagination;
-        cross-partition pagination merges client-side as in the SDK)."""
-        part = self.collection.partitions[0]
+        """One page of a cross-partition paginated query, through the
+        engine.
+
+        The continuation token carries one pagination cursor per physical
+        partition (plus fetched-but-unemitted buffers and per-partition
+        high-water marks); each page fans out ``next_page`` to whichever
+        partitions need refilling and merges client-side, so pages never
+        repeat or skip results across partitions. The page is RU-metered
+        and admission-controlled exactly like the main path: an
+        over-budget tenant gets ``Throttled`` (429 + retry-after) with no
+        budget consumed, and every served page bills at least the request
+        floor. ``shard_key`` routes to a sharded-DiskANN tenant index;
+        ``q.beam_width`` overrides the engine's per-round hop batching.
+
+        Returns ``continuation=None`` once every partition is exhausted
+        and its buffers are drained. The client re-sends the SAME query
+        vector with each token (the token deliberately excludes it, as in
+        the SDK); resuming under a different shard key or after a
+        partition split/merge raises ``ContinuationError``.
+        """
         qv = np.asarray(q.vector, np.float32)
-        if continuation is None:
-            state = part.index.start_pagination(qv)
-        else:
-            state = pickle.loads(continuation)
-        ids, dists, state = part.index.next_page(qv, state, k=page_size)
-        token = pickle.dumps(state)
-        return QueryResult(ids, dists, 0.0, "paginated", continuation=token)
+        target = self._partitions_for(q.shard_key)
+        W = int(q.beam_width or self.engine.cfg.beam_width)
+        # beam_width is client input on this path: bound it here as a
+        # client error, not a bare assert inside the jitted kernel
+        W_max = min((p.index.cfg.L_search for p in target), default=1)
+        if not 1 <= W <= W_max:
+            raise ValueError(
+                f"beam_width {W} out of range [1, {W_max}] for this "
+                f"collection's search list size"
+            )
+        holder: dict[str, Any] = {}
+
+        def body():
+            # cursor construction / token decode happens HERE, behind the
+            # engine's admission check: a throttled tenant (or a malformed
+            # token) must not trigger per-partition work
+            if continuation is None:
+                pstate = start_paged_fanout(target, qv, shard_key=q.shard_key)
+            else:
+                pstate = decode_continuation(continuation)
+                if pstate.shard_fp != paged_fanout_fingerprint(q.shard_key,
+                                                               target):
+                    raise ContinuationError(
+                        "token does not match this query's routing "
+                        "(different shard key, or the partition set changed)"
+                    )
+                self._check_token_topology(pstate, target)
+            holder["pstate"] = pstate
+            ids, dists, info = paged_fanout_search(
+                target, qv, pstate, page_size, beam_width=W
+            )
+            return (ids, dists, info["ru_total"],
+                    info["service_latency_ms"], "paginated")
+
+        resp = self.engine.execute_host(q.tenant, "paginated", body,
+                                        is_page=True)
+        pstate = holder["pstate"]
+        token = None if pstate.exhausted() else encode_continuation(pstate)
+        return QueryResult(resp.ids, resp.dists, resp.ru, resp.plan,
+                           continuation=token, latency_ms=resp.latency_ms)
+
+    @staticmethod
+    def _check_token_topology(pstate, target) -> None:
+        """Schema-level binding of a decoded token to the live partitions:
+        cursor count, partition ids, visited-bitmap widths, AND the beam /
+        backup array widths must all match the routing that will serve the
+        next page. The width checks matter beyond correctness: array
+        shapes are jit signatures, so a well-formed token with an
+        arbitrary L would mint a fresh compile per request — an easy way
+        for a client to break the serving layer's zero-recompile
+        contract."""
+        if len(pstate.cursors) != len(target):
+            raise ContinuationError(
+                f"token has {len(pstate.cursors)} cursors for "
+                f"{len(target)} partitions"
+            )
+        for cur, p in zip(pstate.cursors, target):
+            if cur.pid != p.pid:
+                raise ContinuationError(
+                    f"token cursor pid {cur.pid} != partition {p.pid}"
+                )
+            if cur.state is not None:
+                L_want = p.index.cfg.L_search
+                if cur.state.best_ids.shape[0] != L_want:
+                    raise ContinuationError(
+                        f"token beam width {cur.state.best_ids.shape[0]} "
+                        f"!= configured L_search {L_want}"
+                    )
+                if cur.state.backup_ids.shape[0] != PAGE_BACKUP_CAP:
+                    raise ContinuationError(
+                        f"token backup width {cur.state.backup_ids.shape[0]}"
+                        f" != {PAGE_BACKUP_CAP}"
+                    )
+                words = bitmap_words(p.index.cfg.capacity)
+                if cur.state.bitmap.shape[0] != words:
+                    raise ContinuationError(
+                        f"token bitmap width {cur.state.bitmap.shape[0]} "
+                        f"does not fit partition capacity "
+                        f"{p.index.cfg.capacity}"
+                    )
 
 
 class _RUTally:

@@ -36,6 +36,10 @@ class RUConfig:
     ru_per_cache_miss: float = 0.05
     # upfront vector charge (§3.4 "Upfront charging"): per KB of vector
     ru_upfront_per_kb: float = 1.0
+    # minimum charge per continuation/page request (§2.2): Cosmos bills
+    # every request at least the request-processing floor, so a paginated
+    # query is never free even when a page is answered from buffered state
+    ru_per_page_request: float = 1.0
 
     # latency model (paper §4.4 micro-measurements)
     us_per_quant_read: float = 10.0
@@ -213,3 +217,9 @@ class ResourceGovernor:
             self.refill_to(now_s)
         self.available -= ru
         self.consumed += ru
+
+    def refund(self, ru: float, now_s: Optional[float] = None):
+        """Hand back an unused admission reservation (failed dispatches,
+        throttled page chains): the budget returns and the reservation no
+        longer counts as consumption."""
+        self.settle(-ru, now_s=now_s)

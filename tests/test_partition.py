@@ -95,6 +95,41 @@ def test_replica_failover_and_rebuild():
     np.testing.assert_array_equal(fresh.vectors, col.partitions[0].providers.vectors)
 
 
+def test_replica_round_robin_spreads_reads():
+    """Regression: the RR cursor used to advance without selecting — read
+    spreading was dead code. Reads must rotate across healthy replicas
+    and dead replicas must receive none."""
+    col, data = _collection(np.random.RandomState(16), n=200, max_per=400, parts=1)
+    rs = ReplicaSet(col.partitions[0], num_replicas=4)
+    rs.kill(2)  # a secondary dies; primary stays
+    for _ in range(9):
+        rs.search(data[:1], 3)
+    counts = rs.read_counts()
+    assert counts[2] == 0, "dead replicas must receive no reads"
+    healthy = [counts[r] for r in (0, 1, 3)]
+    assert sum(healthy) == 9
+    assert max(healthy) - min(healthy) <= 1, f"uneven spread: {counts}"
+
+
+def test_hedged_duplicates_charge_ru():
+    """Regression: a hedge is a second server-side execution — it must
+    bill, not just win the latency race for free."""
+    col, data = _collection(np.random.RandomState(17), n=200, max_per=400, parts=2)
+    q = data[:2]
+    always_slow = lambda p, rr: 100.0  # every partition trips the hedge
+    _, _, info = fanout_search(col.partitions, q, 5, latency_model=always_slow,
+                               hedge_at_ms=10.0)
+    assert info["hedges"] == len(col.partitions)
+    assert info["hedge_ru"] > 0
+    assert info["ru_total"] == pytest.approx(
+        sum(info["ru_per_partition"]) + info["hedge_ru"]
+    )
+    _, _, no_hedge = fanout_search(col.partitions, q, 5,
+                                   latency_model=always_slow)
+    assert no_hedge["hedges"] == 0 and no_hedge["hedge_ru"] == 0.0
+    assert info["ru_total"] > no_hedge["ru_total"]
+
+
 def test_quorum_loss_raises():
     col, _ = _collection(np.random.RandomState(15), n=200, max_per=400, parts=1)
     rs = ReplicaSet(col.partitions[0], num_replicas=4)

@@ -112,6 +112,101 @@ def test_delete_removes_from_results(service):
     assert victim not in res.ids.tolist()
 
 
+def test_rekeyed_shard_value_moves_tenant_copy(service):
+    """Sharded-DiskANN identity includes the shard key: re-upserting a doc
+    under a different shard value must remove it from the old tenant's
+    index — otherwise that tenant serves the stale copy forever, even
+    after a delete."""
+    svc, data = service
+    doc = 444  # tenant t0 in the fixture (444 % 4 == 0)
+    assert svc.docs[doc]["tenant"] == "t0"
+    svc.upsert([{"id": doc, "tenant": "t1", "category": doc % 7}],
+               data[doc][None, :])
+    r0 = svc.query(VectorQuery(vector=data[doc], k=10, shard_key="t0"))
+    assert doc not in r0.ids.tolist(), "old tenant must not serve the moved doc"
+    r1 = svc.query(VectorQuery(vector=data[doc], k=10, shard_key="t1"))
+    assert doc in r1.ids.tolist()
+    svc.delete([doc])
+    for t in ("t0", "t1"):
+        r = svc.query(VectorQuery(vector=data[doc], k=10, shard_key=t))
+        assert doc not in r.ids.tolist()
+
+
+@pytest.fixture(scope="module")
+def multi_service():
+    """A ≥3-physical-partition service with CUSTOM partition keys — the
+    regression surface for pk-routed deletes and per-partition plans."""
+    rng = np.random.RandomState(9)
+    N, D = 240, 16
+    g = GraphConfig(capacity=160, R=12, M=8, L_build=32, L_search=32,
+                    bootstrap_sample=32, refine_sample=10**9, batch_size=40)
+    svc = VectorCollectionService(dim=D, graph=g,
+                                  max_vectors_per_partition=140,
+                                  initial_partitions=3)
+    data = clustered_data(rng, N, D)
+    docs = [{"id": i, "category": i % 7} for i in range(N)]
+    svc.upsert(docs, data, partition_keys=[f"user-{i}" for i in range(N)])
+    assert len(svc.collection.partitions) >= 3
+    return svc, data
+
+
+def test_delete_routes_by_upsert_partition_key(multi_service):
+    """Regression: deletes used to fabricate pks from doc ids, so docs
+    upserted under custom partition_keys were routed to the wrong
+    partition and never tombstoned."""
+    svc, data = multi_service
+    victims = [11, 57, 123, 200]
+    before = svc.collection.num_docs
+    svc.delete(victims)
+    assert svc.collection.num_docs == before - len(victims), \
+        "custom-keyed docs must actually be tombstoned in their partition"
+    for v in victims:
+        res = svc.query(VectorQuery(vector=data[v], k=10))
+        assert v not in res.ids.tolist()
+        assert v not in svc.docs
+
+
+def test_rekeyed_upsert_moves_document(multi_service):
+    """Cosmos identity is (partition key, id): re-upserting an id under a
+    key that routes to a DIFFERENT partition must MOVE the document —
+    tombstoning the old copy — not leave it live serving stale results."""
+    from repro.partition.partitioner import hash_key
+
+    svc, data = multi_service
+    doc_id, before = 33, svc.collection.num_docs
+    old_owner = svc.collection.owner_of(doc_id)
+    new_pk = next(f"rekey-{j}" for j in range(100)
+                  if not old_owner.owns(hash_key(f"rekey-{j}")))
+    svc.upsert([{"id": doc_id, "category": doc_id % 7}],
+               data[doc_id][None, :], partition_keys=[new_pk])
+    assert svc.collection.num_docs == before, "a re-key must not duplicate"
+    assert svc.collection.owner_of(doc_id) is not old_owner
+    svc.delete([doc_id])
+    assert svc.collection.num_docs == before - 1
+    res = svc.query(VectorQuery(vector=data[doc_id], k=10))
+    assert doc_id not in res.ids.tolist()
+
+
+def test_filtered_plan_aggregates_over_partitions(multi_service):
+    """Regression: the filtered path reported only the LAST partition's
+    plan; it must aggregate every partition actually searched, and skip
+    partitions where the predicate matches nothing."""
+    svc, data = multi_service
+    res = svc.query(VectorQuery(vector=data[30] + 0.01, k=5,
+                                filter=lambda d: d["category"] == 2))
+    assert res.plan.startswith("filtered[") and "×" in res.plan
+    counts = sum(int(part.split("×")[1]) for part in
+                 res.plan[len("filtered["):-1].split(","))
+    assert 1 <= counts <= len(svc.collection.partitions)
+    for i in res.ids[res.ids >= 0]:
+        assert svc.docs[int(i)]["category"] == 2
+
+    nothing = svc.query(VectorQuery(vector=data[30] + 0.01, k=5,
+                                    filter=lambda d: False))
+    assert nothing.plan == "filtered[empty]"
+    assert (nothing.ids < 0).all() and nothing.ru == 0.0
+
+
 def test_serve_engine_decode():
     import jax
     from repro.configs import get_smoke_config
