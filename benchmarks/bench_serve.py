@@ -23,7 +23,12 @@ later scale PRs (caching, replication, multi-backend) are judged against:
   * ``pagination`` — cross-partition paged queries through the engine:
     RU per page (floor: every page > 0 — a continuation is never free),
     drain parity with the one-shot query (no repeats, no gaps across ≥3
-    physical partitions), and the engine's ``pages_served`` accounting.
+    physical partitions), and the engine's ``pages_served`` accounting;
+  * ``filtered`` — the declarative-predicate workload: N same-predicate
+    queries through the engine's batched path (one compiled bitmap per
+    partition, broadcast through the bucketed search) vs N legacy
+    callable-filter queries on the host path (floors: ≥ 2× wall speedup,
+    ``filtered-batched[...]`` plans, recall parity ≤ 0.01).
 """
 from __future__ import annotations
 
@@ -40,6 +45,7 @@ from repro.serve import (EngineConfig, ServeRequest, VectorCollectionService,
 from repro.serve.metrics import EngineMetrics
 from repro.serve.vector_engine import serving_jit_cache_size
 
+from . import bench_filtered
 from .common import clustered, pct
 
 
@@ -292,6 +298,9 @@ def run(n: int = 3000, dim: int = 32, n_queries: int = 384,
     speed = measure_speedup(svc, data, n_queries, rng)
     mixed = measure_mixed_ingest(max(n // 4, 400), dim, max(n_queries // 4, 16))
     paged = measure_pagination()
+    filtered = bench_filtered.run_batched(
+        n=max(n // 2, 1200), dim=dim, n_queries=max(n_queries // 8, 32)
+    )
 
     out = dict(
         config=dict(n=n, dim=dim, n_queries=n_queries, rates=list(rates),
@@ -301,6 +310,7 @@ def run(n: int = 3000, dim: int = 32, n_queries: int = 384,
         speedup_batch16=speed,
         mixed_ingest=mixed,
         pagination=paged,
+        filtered=filtered,
     )
     return out
 
@@ -345,6 +355,11 @@ def main(smoke: bool = False):
           f"{pg['partitions']} partitions, RU/page min={pg['ru_min_page']:.2f} "
           f"mean={pg['ru_mean_page']:.2f}, drained={pg['drained']}, "
           f"parity={pg['drain_matches_single_query']}")
+    ft = out["filtered"]
+    print(f"  filtered: batched {ft['speedup']:.2f}x wall "
+          f"({ft['host_qps_wall']:.1f} → {ft['batched_qps_wall']:.1f} q/s), "
+          f"plan {ft['plan_batched']}, recall Δ={ft['recall_delta']:.3f}, "
+          f"occupancy {ft['mean_batch_size']:.1f}")
 
     # acceptance floors (ISSUE 2 + ISSUE 3): the batch-16 speedup and the
     # zero-recompile contract gate at BOTH scales (scripts/check.sh --smoke
@@ -373,6 +388,15 @@ def main(smoke: bool = False):
         "paged drain diverged from the one-shot result set"
     assert pg["pages_served_metric"] == pg["pages"], \
         "engine metrics must account every served page"
+    # ISSUE 5: same-predicate filtered queries batch through the engine —
+    # the plan string proves it — at ≥ 2× the legacy host path's wall
+    # throughput and recall parity within 0.01
+    assert ft["plan_batched"].startswith("filtered-batched["), \
+        f"predicate plan not batched: {ft['plan_batched']}"
+    assert ft["speedup"] >= 2.0, \
+        f"batched-filtered speedup {ft['speedup']:.2f}x < 2.0x"
+    assert ft["recall_delta"] <= 0.01, \
+        f"filtered recall parity broke: Δ={ft['recall_delta']:.3f}"
     return out
 
 

@@ -47,7 +47,8 @@ def main() -> None:
                       f"zilliz_ratio={out['query_ratios']['zilliz']:.0f}x")),
         ("fig9_filtered", bench_filtered.main,
          lambda out: f"beta_p99={out[('beta', 100)]['p99']:.2f}ms;"
-                     f"post_p99={out[('post', 100)]['p99']:.2f}ms"),
+                     f"post_p99={out[('post', 100)]['p99']:.2f}ms;"
+                     f"batched={out['batched']['speedup']:.1f}x"),
         ("fig10_scaleout", bench_scaleout.main,
          lambda rows: f"ru_p1={rows[0]['ru']:.0f};ru_p8={rows[-1]['ru']:.0f}"),
         ("fig11_12_ingest", bench_ingest.main,

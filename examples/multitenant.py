@@ -11,7 +11,7 @@ import numpy as np
 
 from repro.core import GraphConfig
 from repro.core import recall as rec
-from repro.serve import VectorCollectionService, VectorQuery
+from repro.serve import F, VectorCollectionService, VectorQuery
 
 
 def main():
@@ -56,7 +56,7 @@ def main():
     filt_ids, filt_ru = [], 0.0
     for q in tq:
         res = svc.query(VectorQuery(vector=q, k=10,
-                                    filter=lambda d: d["tenant"] == f"tenant-{t}"))
+                                    filter=F.eq("tenant", f"tenant-{t}")))
         filt_ids.append(res.ids)
         filt_ru += res.ru
     r_filt = rec.recall_at_k(np.stack(filt_ids), gt, 10)

@@ -6,7 +6,7 @@ import numpy as np
 
 from repro.core import GraphConfig
 from repro.core import recall as rec
-from repro.serve import VectorCollectionService, VectorQuery
+from repro.serve import F, VectorCollectionService, VectorQuery
 
 
 def main():
@@ -39,8 +39,10 @@ def main():
     gt = rec.ground_truth(queries, vectors, np.ones(n, bool), 10)
     print(f"recall@10 = {rec.recall_at_k(ids, gt, 10):.3f}")
 
-    # filtered (hybrid) query — §3.5
-    res = svc.query(VectorQuery(vector=q, k=5, filter=lambda d: d["category"] == 2))
+    # filtered (hybrid) query — §3.5: a declarative predicate compiles to
+    # index-term bitmaps and batches through the engine (same-predicate
+    # queries share one compiled bitmap; plan shows filtered-batched[...])
+    res = svc.query(VectorQuery(vector=q, k=5, filter=F.eq("category", 2)))
     cats = [svc.docs[int(i)]["category"] for i in res.ids if i >= 0]
     print(f"filtered query -> categories {cats} (all 2), plan={res.plan}")
 

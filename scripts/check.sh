@@ -3,8 +3,9 @@
 # run the tier-1 pytest suite. Future PRs are judged against this script.
 #
 #   scripts/check.sh            # import lint + tier-1 tests
-#   scripts/check.sh --smoke    # ...then bench_serve + bench_query at tiny
-#                               # sizes, so benchmarks can't silently rot
+#   scripts/check.sh --smoke    # ...then bench_serve + bench_query +
+#                               # bench_filtered at tiny sizes, so
+#                               # benchmarks can't silently rot
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="$PWD/src${PYTHONPATH:+:$PYTHONPATH}"
@@ -62,6 +63,36 @@ if hits:
         print(" ", h)
     sys.exit(1)
 print("ok: no pickle-family imports under src/repro/serve")
+
+# Opaque callable filters are deprecated: they can't batch, can't cache,
+# and rebuild an O(capacity) bitmap by scanning the doc store. The ONLY
+# place the serving layer may invoke one is the legacy shim
+# (_legacy_filter_mask). AST-walk serve/ and reject any other
+# `<expr>.filter(...)` call.
+LEGACY_SHIM = "_legacy_filter_mask"
+hits = []
+for path in sorted(Path("src/repro/serve").rglob("*.py")):
+    tree = ast.parse(path.read_text(), filename=str(path))
+    shim_calls = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef) and node.name == LEGACY_SHIM:
+            for sub in ast.walk(node):
+                shim_calls.add(id(sub))
+    for node in ast.walk(tree):
+        if (
+            isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr == "filter"
+            and id(node) not in shim_calls
+        ):
+            hits.append(f"{path}:{node.lineno}: calls .filter(...) outside "
+                        f"the {LEGACY_SHIM} shim")
+if hits:
+    print("LEGACY FILTER LINT FAIL (callable filters only via the shim):")
+    for h in hits:
+        print(" ", h)
+    sys.exit(1)
+print(f"ok: serve/ evaluates callable filters only inside {LEGACY_SHIM}")
 EOF
 
 echo "== tier-1 tests =="
@@ -71,4 +102,5 @@ if [[ "$SMOKE" == 1 ]]; then
   echo "== smoke benchmarks (tiny sizes; asserts are the contract) =="
   python -m benchmarks.bench_serve --smoke
   python -m benchmarks.bench_query --smoke
+  python -m benchmarks.bench_filtered --smoke
 fi

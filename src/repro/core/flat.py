@@ -32,10 +32,15 @@ QFLAT_MAX_MATCHES = 5000
 def brute_force(
     queries: jax.Array, vectors: jax.Array, live: jax.Array, *, k: int, metric: str = "l2"
 ) -> tuple[jax.Array, jax.Array]:
-    """Exact top-k by scanning the document store. (B, k) ids, dists."""
+    """Exact top-k by scanning the document store. (B, k) ids, dists.
+
+    When fewer than k entries pass ``live`` (e.g. a highly selective
+    predicate mask), the remainder comes back as -1/inf — never as a
+    masked-out document smuggled in with an arbitrary distance."""
     d = pqmod.pairwise_distance(queries, vectors, metric)
     d = jnp.where(live[None, :], d, INF)
     neg, idx = jax.lax.top_k(-d, k)
+    idx = jnp.where(jnp.isfinite(neg), idx, -1)
     return idx.astype(jnp.int32), -neg
 
 
@@ -58,6 +63,9 @@ def qflat_scan(
         if fm is not None:
             d = jnp.where(fm, d, INF)
         neg, idx = jax.lax.top_k(-d, kprime)
+        # fewer matches than k': pad with -1, or the re-rank stage would
+        # re-score filtered-OUT docs by true distance and let them win
+        idx = jnp.where(jnp.isfinite(neg), idx, -1)
         return idx.astype(jnp.int32), -neg
 
     if filter_mask is None:

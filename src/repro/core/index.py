@@ -477,11 +477,29 @@ class DiskANNIndex:
         beta: float = 0.3,
         rerank_multiplier: float = fmod.QUANTIZED_LIST_MULTIPLIER,
         beam_width: Optional[int] = None,
+        pad_to_bucket: bool = False,
+        batch_buckets: tuple[int, ...] = smod.BATCH_BUCKETS,
+        filter_words: Optional[np.ndarray] = None,
     ) -> tuple[np.ndarray, np.ndarray, QueryStats]:
         """Query-planner routing by selectivity, then post-filter or
-        β-biased graph search."""
+        β-biased graph search.
+
+        With ``pad_to_bucket`` the micro-batch pads to the next static
+        bucket before any jitted stage — the serving engine's batched
+        filtered path (same-predicate queries share one bitmap broadcast)
+        reuses the exact (bucket, L, W) signature set as unfiltered
+        serving, so steady-state filtered traffic triggers zero
+        recompiles. Outputs and stats slice back to the true batch.
+        ``filter_words`` optionally supplies ``doc_filter`` pre-packed in
+        the uint32 ``filter_bits`` layout (the predicate compiler's native
+        output), skipping the β-branch re-pack."""
         W = int(beam_width or self.cfg.beam_width)
         queries = np.asarray(queries, np.float32)
+        B = len(queries)
+        if pad_to_bucket:
+            queries = smod.pad_batch_np(
+                queries, smod.next_bucket(B, batch_buckets)
+            )
         L = L or self.cfg.L_search
         matches = int((doc_filter & self.pv.live).sum())
         stats = QueryStats()
@@ -502,7 +520,8 @@ class DiskANNIndex:
                 jnp.asarray(queries), vectors, fmask, k=k, metric=self.cfg.metric
             )
             stats.full_reads = matches
-            return self._to_doc_ids(np.asarray(ids)), np.asarray(dists), stats
+            return (self._to_doc_ids(np.asarray(ids))[:B],
+                    np.asarray(dists)[:B], stats)
 
         if mode == "qflat":
             luts = self._luts(queries)
@@ -514,24 +533,28 @@ class DiskANNIndex:
             )
             stats.cmps = matches
             stats.full_reads = kprime
-            return self._to_doc_ids(np.asarray(ids)), np.asarray(dists), stats
+            return (self._to_doc_ids(np.asarray(ids))[:B],
+                    np.asarray(dists)[:B], stats)
 
         luts = self._luts(queries)
         if mode == "post":
-            res = smod.batch_greedy_search(
+            res = smod.bucketed_batch_greedy_search(
                 neighbors, codes, versions, live, luts, jnp.int32(self.medoid),
-                L=max(L, kprime), beam_width=W,
+                L=max(L, kprime), batch_buckets=batch_buckets, beam_width=W,
             )
             beam = np.asarray(res.beam_ids)
             passes = doc_filter[np.maximum(beam, 0)] & (beam >= 0)
             beam = np.where(passes, beam, -1)
         else:  # beta (Alg 7)
-            fbits = self._pack_bits(np.asarray(doc_filter))
-            B = len(queries)
-            fb = jnp.asarray(np.broadcast_to(fbits, (B,) + fbits.shape))
-            res = smod.batch_greedy_search(
+            fbits = (filter_words if filter_words is not None
+                     else self._pack_bits(np.asarray(doc_filter)))
+            fb = jnp.asarray(
+                np.broadcast_to(fbits, (len(queries),) + fbits.shape)
+            )
+            res = smod.bucketed_batch_greedy_search(
                 neighbors, codes, versions, live, luts, jnp.int32(self.medoid),
-                L=max(L, kprime), filter_bits=fb, beta=beta, beam_width=W,
+                L=max(L, kprime), batch_buckets=batch_buckets,
+                filter_bits=fb, beta=beta, beam_width=W,
             )
             beam = np.asarray(res.beam_ids)
             passes = doc_filter[np.maximum(beam, 0)] & (beam >= 0)
@@ -540,11 +563,12 @@ class DiskANNIndex:
             jnp.asarray(queries), jnp.asarray(beam[:, : max(L, kprime)]), vectors,
             k=k, metric=self.cfg.metric,
         )
-        stats.hops = float(np.asarray(res.n_hops).mean())
-        stats.cmps = float(np.asarray(res.n_cmps).mean())
-        stats.expansions = float(np.asarray(res.n_exp).mean())
+        stats.hops = float(np.asarray(res.n_hops)[:B].mean())
+        stats.cmps = float(np.asarray(res.n_cmps)[:B].mean())
+        stats.expansions = float(np.asarray(res.n_exp)[:B].mean())
         stats.full_reads = float(kprime)
-        return self._to_doc_ids(np.asarray(ids)), np.asarray(dists), stats
+        return (self._to_doc_ids(np.asarray(ids))[:B],
+                np.asarray(dists)[:B], stats)
 
     @staticmethod
     def _pack_bits(mask: np.ndarray) -> np.ndarray:
@@ -583,13 +607,25 @@ class DiskANNIndex:
     def next_page(
         self, query: np.ndarray, state: pgmod.PageState, k: int,
         rerank: bool = True, beam_width: Optional[int] = None,
+        slot_filter: Optional[np.ndarray] = None,  # bool over doc slots
     ) -> tuple[np.ndarray, np.ndarray, pgmod.PageState]:
+        """One page of k results. With ``slot_filter`` (a compiled predicate
+        bitmap) non-matching slots are dropped from the page AFTER the
+        traversal step, so the visited set still advances and later pages
+        surface the matches the traversal hasn't reached yet — a filtered
+        page may carry fewer than k rows, but the stream stays
+        gap-free/repeat-free (the fan-out merge refetches empty pages)."""
         neighbors, codes, versions, live, vectors = self.pv.materialize(self.ctx)
         lut = self._luts(query[None, :])[0]
         ids, dists, state = pgmod.next_page(
             neighbors, codes, versions, live, lut, state, k=k,
             beam_width=int(beam_width or self.cfg.beam_width),
         )
+        if slot_filter is not None:
+            arr = np.asarray(ids)
+            keep = (arr >= 0) & slot_filter[np.maximum(arr, 0)]
+            ids = jnp.asarray(np.where(keep, arr, -1))
+            dists = jnp.asarray(np.where(keep, np.asarray(dists), np.inf))
         if rerank:
             rids, rd = fmod.rerank(
                 jnp.asarray(query[None, :]), ids[None, :], vectors,

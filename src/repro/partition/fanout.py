@@ -32,6 +32,7 @@ from ..core import flat as fmod
 from ..core import paginate as pgmod
 from ..core import pq as pqmod
 from ..core import search as smod
+from ..store.props import words_to_mask
 from ..store.ru import counters_for_latency
 
 INF = jnp.float32(jnp.inf)
@@ -148,6 +149,95 @@ def batched_fanout_search(
     return ids, dists, info
 
 
+def compile_partition_filter(p, predicate):
+    """Compile ``predicate`` against one partition's property-term index.
+    Returns (bool slot mask, packed uint32 words, posting reads billed);
+    mask and words are None when the predicate matches nothing in this
+    partition. Pure bitmap algebra over the inverted PROP_TERM postings,
+    cached per (partition, canonical predicate) and invalidated by ingest
+    epoch. Never touches the doc store or ``doc_to_slot``. The words are
+    already in the ``filter_bits`` layout, so the β-search path consumes
+    them directly without a re-pack."""
+    words = p.props.compile(predicate)
+    nreads = p.props.last_compile_reads
+    if not words.any():
+        return None, None, nreads
+    return words_to_mask(words, p.index.cfg.capacity), words, nreads
+
+
+def batched_filtered_fanout_search(
+    partitions,  # Sequence[PhysicalPartition]
+    queries: np.ndarray,  # (B, D) — a micro-batch sharing ONE predicate
+    k: int,
+    predicate,  # serve.predicate.Predicate (canonical, hashable)
+    L: Optional[int] = None,
+    batch_buckets: Optional[tuple[int, ...]] = None,
+    beam_width: Optional[int] = None,
+) -> tuple[np.ndarray, np.ndarray, dict]:
+    """Multi-query scatter/gather for FILTERED micro-batches: every lane
+    shares the same canonical predicate (the engine groups by predicate
+    key), so the predicate compiles to one bitmap per partition —
+    broadcast through ``bucketed_batch_greedy_search`` via the
+    ``filter_bits`` plumbing — instead of one O(capacity) document scan
+    per query per partition (the legacy callable path).
+
+    Empty partitions and partitions where the predicate matches nothing
+    are skipped outright (no bitmap minted, no search run). info carries
+    the per-partition plan aggregate as ``plan`` (e.g.
+    ``filtered-batched[beta×2,qflat×1]``), RU/stats/latency in the same
+    shape as ``batched_fanout_search``.
+    """
+    kw: dict = {}
+    if batch_buckets is not None:
+        kw = dict(pad_to_bucket=True, batch_buckets=batch_buckets)
+    if beam_width is not None:
+        kw["beam_width"] = beam_width
+    B, k = len(queries), int(k)
+    ids_l, dists_l, rus, lat_ms, stats_l = [], [], [], [], []
+    plans: dict[str, int] = {}
+    compile_ru = 0.0
+    for p in partitions:
+        if p.num_docs == 0:
+            continue
+        mask, words, nreads = compile_partition_filter(p, predicate)
+        if mask is None:
+            # the compile still read postings (cache miss) — a no-match
+            # partition is skipped, not free
+            compile_ru += nreads * p.providers.meter.cfg.ru_per_prop_read
+            continue
+        ids, dists, ru, stats = p.filtered_search_batch(
+            queries, k, mask, L=L, term_reads=nreads,
+            filter_words=words, **kw
+        )
+        ids_l.append(ids)
+        dists_l.append(dists)
+        rus.append(ru)
+        stats_l.append(stats)
+        plans[stats.plan] = plans.get(stats.plan, 0) + 1
+        lat_ms.append(
+            p.providers.meter.latency_ms(counters_for_latency(stats))
+        )
+    if not ids_l:  # predicate matches nothing anywhere
+        ids = np.full((B, k), -1, np.int64)
+        dists = np.full((B, k), np.inf, np.float32)
+        plan = "filtered-batched[empty]"
+    else:
+        ids, dists = merge_topk(ids_l, dists_l, k)
+        plan = "filtered-batched[" + ",".join(
+            f"{name}×{count}" for name, count in sorted(plans.items())
+        ) + "]"
+    info = dict(
+        ru_per_partition=rus,
+        ru_total=(float(np.sum(rus)) if rus else 0.0) + compile_ru,
+        stats_per_partition=stats_l,
+        server_latencies_ms=lat_ms,
+        service_latency_ms=float(np.max(lat_ms)) if lat_ms else 0.0,
+        plan=plan,
+        partitions_searched=len(ids_l),
+    )
+    return ids, dists, info
+
+
 # ---------------------------------------------------------------------------
 # cross-partition pagination (§3.5 "Continuations" — client-side merge)
 # ---------------------------------------------------------------------------
@@ -192,40 +282,52 @@ class PagedQueryState:
         return all(c.exhausted and len(c.buf_ids) == 0 for c in self.cursors)
 
 
-def paged_fanout_fingerprint(shard_key, partitions) -> int:
+def paged_fanout_fingerprint(shard_key, partitions, pred_key=None) -> int:
     """Bind a token to the routing that minted it: resuming under a
     different shard key — or after a split/merge changed the partition
-    set — is rejected up front, not silently mis-merged."""
+    set, or under a DIFFERENT predicate (``pred_key`` = the predicate's
+    canonical key bytes) — is rejected up front, not silently mis-merged."""
     from .partitioner import hash_key
 
-    return hash_key((repr(shard_key), tuple(int(p.pid) for p in partitions)))
+    ident: tuple = (repr(shard_key), tuple(int(p.pid) for p in partitions))
+    if pred_key is not None:
+        ident += (pred_key,)
+    return hash_key(ident)
 
 
 def start_paged_fanout(partitions, query: np.ndarray, shard_key=None,
-                       L: Optional[int] = None) -> PagedQueryState:
-    """Open one pagination cursor per physical partition."""
+                       L: Optional[int] = None, pred_key=None,
+                       slot_filters: Optional[Sequence] = None) -> PagedQueryState:
+    """Open one pagination cursor per physical partition. With
+    ``slot_filters`` (one compiled predicate mask — or None — per
+    partition, index-aligned), partitions where the predicate matches
+    nothing start exhausted: no cursor state is minted and no page is
+    ever fetched from them."""
     query = np.asarray(query, np.float32)
-    cursors = [
-        PartitionPageCursor(
+    cursors = []
+    for i, p in enumerate(partitions):
+        dead = (slot_filters is not None and slot_filters[i] is None) \
+            or p.num_docs == 0
+        cursors.append(PartitionPageCursor(
             pid=int(p.pid),
-            state=p.start_pagination(query, L=L),
+            state=None if dead else p.start_pagination(query, L=L),
             buf_ids=np.zeros((0,), np.int64),
             buf_dists=np.zeros((0,), np.float32),
-        )
-        for p in partitions
-    ]
+            exhausted=dead,
+        ))
     return PagedQueryState(
-        shard_fp=paged_fanout_fingerprint(shard_key, partitions),
+        shard_fp=paged_fanout_fingerprint(shard_key, partitions, pred_key),
         emit_hwm=-np.inf, pages=0, cursors=cursors,
     )
 
 
 def _fetch_partition_page(p, cur: PartitionPageCursor, query: np.ndarray,
-                          k: int, beam_width: Optional[int]) -> tuple[float, float]:
+                          k: int, beam_width: Optional[int],
+                          slot_filter=None) -> tuple[float, float]:
     """Pull one page from partition ``p`` into the cursor's buffer.
     Returns (ru, modelled latency ms) for this fetch."""
     ids, dists, state, ru, stats = p.next_page(
-        query, cur.state, k=k, beam_width=beam_width
+        query, cur.state, k=k, beam_width=beam_width, slot_filter=slot_filter
     )
     lat_ms = p.providers.meter.latency_ms(counters_for_latency(stats))
     ids, dists = np.asarray(ids), np.asarray(dists)
@@ -240,7 +342,10 @@ def _fetch_partition_page(p, cur: PartitionPageCursor, query: np.ndarray,
         # re-sort: full-precision re-rank can jitter the tail ordering
         order = np.argsort(bd, kind="stable")
         cur.buf_ids, cur.buf_dists = bi[order], bd[order]
-    if len(ids) == 0 or bool(pgmod.exhausted(state)):
+    # an empty page means "done" only on the unfiltered path: a filtered
+    # page can legitimately carry zero matches while the traversal still
+    # has unvisited region — exhaustion there is the traversal's call
+    if (len(ids) == 0 and slot_filter is None) or bool(pgmod.exhausted(state)):
         cur.exhausted = True
         cur.state = None  # nothing left to resume — shrink the token
     return ru, lat_ms
@@ -252,6 +357,7 @@ def paged_fanout_search(
     pstate: PagedQueryState,
     page_size: int,
     beam_width: Optional[int] = None,
+    slot_filters: Optional[Sequence] = None,  # per-partition masks or None
 ) -> tuple[np.ndarray, np.ndarray, dict]:
     """Produce the next globally-merged page across all partitions.
 
@@ -281,7 +387,9 @@ def paged_fanout_search(
         for i, (p, cur) in enumerate(zip(partitions, pstate.cursors)):
             while not cur.exhausted and len(cur.buf_ids) == 0:
                 ru, lat = _fetch_partition_page(
-                    p, cur, query, page_size, beam_width
+                    p, cur, query, page_size, beam_width,
+                    slot_filter=None if slot_filters is None
+                    else slot_filters[i],
                 )
                 rus[i] += ru
                 lat_sums[i] += lat

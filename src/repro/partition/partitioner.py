@@ -21,6 +21,7 @@ import numpy as np
 
 from ..core import DiskANNIndex, GraphConfig
 from ..core.providers import Context
+from ..store.props import PropertyTermIndex
 from ..store.provider import StoreProviderSet
 from ..store.ru import ResourceGovernor, RUMeter, counters_for_ru
 
@@ -56,6 +57,11 @@ class PhysicalPartition:
                                   seed=pid, context=Context(replica=pid))
         self.governor = ResourceGovernor(cfg.provisioned_ru_s)
         self.doc_pk: dict[int, int] = {}  # doc id -> partition key hash
+        # inverted property-term postings over THIS partition's slots (the
+        # predicate/WHERE index) + each doc's extracted (path, value) items
+        # so re-homing (split/merge/re-key) carries the terms along
+        self.props = PropertyTermIndex(cfg.graph.capacity, store=self.providers)
+        self.doc_props: dict[int, tuple] = {}
 
     def owns(self, h: int) -> bool:
         return self.lo <= h < self.hi
@@ -65,17 +71,32 @@ class PhysicalPartition:
         return len(self.doc_pk)
 
     def insert(self, doc_ids: Sequence[int], pk_hashes: Sequence[int],
-               vectors: np.ndarray) -> tuple[float, float]:
+               vectors: np.ndarray,
+               props: Optional[Sequence[tuple]] = None) -> tuple[float, float]:
+        """``props`` aligns with ``doc_ids``: each entry is the doc's
+        (path, value) property items (``serve.predicate.property_items``).
+        None keeps a replaced doc's existing terms (core-level callers that
+        never index properties stay property-free)."""
         self.providers.begin_op()
         self.index.insert(doc_ids, vectors)
-        for d, h in zip(doc_ids, pk_hashes):
-            self.doc_pk[int(d)] = int(h)
+        for j, (d, h) in enumerate(zip(doc_ids, pk_hashes)):
+            d = int(d)
+            self.doc_pk[d] = int(h)
+            items = (tuple(props[j]) if props is not None
+                     else self.doc_props.get(d, ()))
+            self.props.assign(self.index.doc_to_slot[d], items)
+            self.doc_props[d] = items
         ru, lat = self.providers.end_op()
         delay = self.governor.request(ru)
         return ru, lat + delay * 1000.0
 
     def delete(self, doc_ids: Sequence[int]) -> float:
         self.providers.begin_op()
+        for d in doc_ids:
+            slot = self.index.doc_to_slot.get(int(d))
+            if slot is not None:
+                self.props.remove(slot)
+            self.doc_props.pop(int(d), None)
         self.index.delete(doc_ids)
         for d in doc_ids:
             self.doc_pk.pop(int(d), None)
@@ -103,21 +124,44 @@ class PhysicalPartition:
         self.governor.request(ru)
         return ids, dists, ru, stats
 
+    def filtered_search_batch(
+        self, queries: np.ndarray, k: int, doc_filter: np.ndarray,
+        L: Optional[int] = None, term_reads: int = 0, **kw
+    ) -> tuple[np.ndarray, np.ndarray, float, "QueryStats"]:
+        """Dense multi-query FILTERED search — the serving engine's batched
+        predicate path. ``doc_filter`` is the compiled predicate mask over
+        this partition's slots (shared by every lane of the micro-batch);
+        ``term_reads`` is the posting-lookup count the predicate→bitmap
+        compilation performed (0 on a bitmap-cache hit), billed as
+        property-term reads. Extra ``kw`` (e.g. ``filter_words``,
+        ``pad_to_bucket``) pass through to ``DiskANNIndex.filtered_search``."""
+        self.providers.begin_op()
+        self.providers.op.prop_reads += int(term_reads)
+        ids, dists, stats = self.index.filtered_search(
+            queries, k, doc_filter, L=L, **kw
+        )
+        self.providers.op += counters_for_ru(stats, lanes=len(queries))
+        ru, _ = self.providers.end_op()
+        self.governor.request(ru)
+        return ids, dists, ru, stats
+
     # -- pagination (one partition's slice of a cross-partition page) ----
     def start_pagination(self, query: np.ndarray, L: Optional[int] = None):
         """Open a pagination cursor over THIS partition's index."""
         return self.index.start_pagination(np.asarray(query, np.float32), L=L)
 
     def next_page(self, query: np.ndarray, state, k: int,
-                  beam_width: Optional[int] = None):
+                  beam_width: Optional[int] = None,
+                  slot_filter: Optional[np.ndarray] = None):
         """Produce this partition's next page, RU-metered like the main
         search path. Returns (doc_ids, dists, state, ru, stats): RU charges
         the page's quantized comparisons + adjacency fetches + k re-rank
         reads (a paged scan is never free), and the stats feed the
-        round-structured latency model."""
+        round-structured latency model. ``slot_filter`` threads a compiled
+        predicate bitmap through the page (filtered pagination)."""
         self.providers.begin_op()
         ids, dists, new_state = self.index.next_page(
-            query, state, k=k, beam_width=beam_width
+            query, state, k=k, beam_width=beam_width, slot_filter=slot_filter
         )
         stats = self.index.page_stats(state, new_state, k)
         self.providers.op += counters_for_ru(stats)
@@ -158,8 +202,11 @@ class Collection:
         return None
 
     def insert(self, doc_ids: Sequence[int], partition_keys: Sequence,
-               vectors: np.ndarray) -> float:
-        """Route documents to their partitions; split when full."""
+               vectors: np.ndarray,
+               props: Optional[Sequence[tuple]] = None) -> float:
+        """Route documents to their partitions; split when full. ``props``
+        (aligned with ``doc_ids``) carries each doc's property-term items
+        into the owning partition's inverted predicate index."""
         total_ru = 0.0
         by_part: dict[int, list[int]] = {}
         hashes = [hash_key(pk) for pk in partition_keys]
@@ -185,10 +232,13 @@ class Collection:
                     [doc_ids[i] for i in rows],
                     [partition_keys[i] for i in rows],
                     vectors[rows],
+                    props=[props[i] for i in rows] if props is not None else None,
                 )
                 continue
             ru, _ = p.insert(
-                [doc_ids[i] for i in rows], [hashes[i] for i in rows], vectors[rows]
+                [doc_ids[i] for i in rows], [hashes[i] for i in rows],
+                vectors[rows],
+                props=[props[i] for i in rows] if props is not None else None,
             )
             total_ru += ru
         return total_ru
@@ -228,7 +278,9 @@ class Collection:
                 continue
             vec = old.providers.vectors[slot][None, :]
             dst = left if h < mid else right
-            dst.insert([doc], [h], vec)
+            # property terms re-home with the document: the new partition's
+            # posting bitmaps must track its doc_to_slot exactly
+            dst.insert([doc], [h], vec, props=[old.doc_props.get(doc, ())])
         self.partitions = (
             self.partitions[:j] + [left, right] + self.partitions[j + 1 :]
         )
@@ -245,7 +297,8 @@ class Collection:
                 slot = src.index.doc_to_slot.get(doc)
                 if slot is None or not src.providers.live[slot]:
                     continue
-                big.insert([doc], [h], src.providers.vectors[slot][None, :])
+                big.insert([doc], [h], src.providers.vectors[slot][None, :],
+                           props=[src.doc_props.get(doc, ())])
         self.partitions = self.partitions[:j] + [big] + self.partitions[j + 2 :]
         self.merges += 1
 

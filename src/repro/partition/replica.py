@@ -49,11 +49,11 @@ class ReplicaSet:
         return [r for r in self.replicas if r.alive]
 
     # ------------------------------------------------------------------
-    def insert(self, doc_ids, pk_hashes, vectors: np.ndarray):
+    def insert(self, doc_ids, pk_hashes, vectors: np.ndarray, props=None):
         """Write through the primary; ack at quorum."""
         if not self.replicas[self.primary].alive:
             self.failover()
-        out = self.partition.insert(doc_ids, pk_hashes, vectors)
+        out = self.partition.insert(doc_ids, pk_hashes, vectors, props=props)
         self.lsn += 1
         acked = 0
         for r in self.healthy():

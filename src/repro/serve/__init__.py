@@ -3,6 +3,7 @@ from .continuation import (ContinuationError, decode_continuation,
                            encode_continuation)
 from .engine import ServeEngine
 from .metrics import EngineMetrics, SimClock, poisson_arrivals
+from .predicate import F, Predicate, from_obj, property_items
 from .vector_engine import (EngineConfig, ServeRequest, ServeResponse,
                             Throttled, VectorServeEngine)
 from .vector_service import VectorCollectionService, VectorQuery
@@ -12,4 +13,5 @@ __all__ = [
     "VectorServeEngine", "EngineConfig", "ServeRequest", "ServeResponse",
     "Throttled", "EngineMetrics", "SimClock", "poisson_arrivals",
     "ContinuationError", "encode_continuation", "decode_continuation",
+    "F", "Predicate", "from_obj", "property_items",
 ]

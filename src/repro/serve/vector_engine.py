@@ -41,9 +41,12 @@ import numpy as np
 
 from ..core import flat as fmod
 from ..core import search as smod
-from ..partition.fanout import batched_fanout_search, merge_topk
+from ..partition.fanout import (batched_fanout_search,
+                                batched_filtered_fanout_search,
+                                compile_partition_filter, merge_topk)
 from ..store.ru import OpCounters, ResourceGovernor
 from .metrics import EngineMetrics, SimClock
+from .predicate import Predicate
 
 
 def serving_jit_cache_size() -> int:
@@ -96,6 +99,11 @@ class ServeRequest:
     tenant: Any = "default"
     exact: bool = False
     shard_key: Any = None
+    # declarative WHERE clause (serve.predicate). Predicates are hashable
+    # by canonical key, so same-predicate requests coalesce into one
+    # micro-batch sharing one compiled bitmap per partition — filtered
+    # queries ride the batched path instead of falling off to host code.
+    predicate: Optional[Predicate] = None
     # offered arrival time; < 0 → stamped with the clock at submit(). A
     # workload generator passes the true arrival so queueing delay under
     # overload is charged to latency even when the engine is running behind.
@@ -201,12 +209,14 @@ class VectorServeEngine:
     def submit_query(self, vector: np.ndarray, k: int = 10,
                      L: Optional[int] = None, tenant: Any = "default",
                      exact: bool = False, shard_key: Any = None,
-                     arrival_s: float = -1.0) -> int:
+                     arrival_s: float = -1.0,
+                     predicate: Optional[Predicate] = None) -> int:
         rid = self._next_rid
         self._next_rid += 1
         self.submit(ServeRequest(rid=rid, vector=np.asarray(vector, np.float32),
                                  k=k, L=L, tenant=tenant, exact=exact,
-                                 shard_key=shard_key, arrival_s=arrival_s))
+                                 shard_key=shard_key, arrival_s=arrival_s,
+                                 predicate=predicate))
         return rid
 
     def submit_ingest(self, kind: str, apply_fn: Callable[[], float], n_ops: int):
@@ -220,7 +230,8 @@ class VectorServeEngine:
     # ------------------------------------------------------------------
     def _group_key(self, r: ServeRequest):
         L = r.L or max(r.k, int(round(self.cfg.search_list_multiplier * r.k)))
-        return (r.shard_key, r.k, L, r.exact)
+        pk = r.predicate.key() if r.predicate is not None else None
+        return (r.shard_key, r.k, L, r.exact, pk)
 
     def _due_groups(self, force: bool) -> list[tuple]:
         groups: dict[tuple, list[ServeRequest]] = {}
@@ -304,7 +315,8 @@ class VectorServeEngine:
                 raise
 
     def _dispatch_chunk(self, key: tuple, batch: list[ServeRequest]):
-        shard_key, k, L, exact = key
+        shard_key, k, L, exact, _pred_key = key
+        predicate = batch[0].predicate  # whole group shares one canonical key
         dispatch_s = self.clock.now()
         queries = np.stack([r.vector for r in batch]).astype(np.float32)
 
@@ -312,17 +324,25 @@ class VectorServeEngine:
             partitions = self._resolve(shard_key)
             if exact:
                 ids, dists, ru_total, service_ms, plan = self._exact_scan(
-                    partitions, queries, k
+                    partitions, queries, k, predicate=predicate
                 )
             else:
-                ids, dists, info = batched_fanout_search(
-                    partitions, queries, k, L=L,
-                    batch_buckets=self.cfg.batch_buckets,
-                    beam_width=self.cfg.beam_width,
-                )
+                if predicate is not None:
+                    ids, dists, info = batched_filtered_fanout_search(
+                        partitions, queries, k, predicate, L=L,
+                        batch_buckets=self.cfg.batch_buckets,
+                        beam_width=self.cfg.beam_width,
+                    )
+                    plan = info["plan"]
+                else:
+                    ids, dists, info = batched_fanout_search(
+                        partitions, queries, k, L=L,
+                        batch_buckets=self.cfg.batch_buckets,
+                        beam_width=self.cfg.beam_width,
+                    )
+                    plan = "graph"
                 ru_total = info["ru_total"]
                 service_ms = info["service_latency_ms"]
-                plan = "graph"
                 pstats = info["stats_per_partition"]
                 if pstats:
                     self.metrics.note_hops(
@@ -356,36 +376,58 @@ class VectorServeEngine:
             self.metrics.wait_ms.observe(wait_ms)
             self._settle(r.tenant, ru_q, r.reserved_ru)
 
-    def _exact_scan(self, partitions, queries: np.ndarray, k: int):
+    def _exact_scan(self, partitions, queries: np.ndarray, k: int,
+                    predicate: Optional[Predicate] = None):
         """Batched VectorDistance(..., true): bucketed brute force per
         partition + merge (the paper's full-scan plan, RU-costed as a
-        quantized-ish scan)."""
+        quantized-ish scan). With ``predicate`` the flat scan runs over
+        the FILTERED subset — the compiled bitmap masks the scan, so
+        ``WHERE`` + ``VectorDistance(..., true)`` brute-forces exactly the
+        matching documents instead of silently ignoring the filter."""
         B = len(queries)
+        plan = "exact" if predicate is None else "exact-filtered"
         if not partitions:  # empty tenant collection: nothing to scan
             return (np.full((B, k), -1, np.int64), np.full((B, k), np.inf),
-                    0.0, 0.0, "exact")
+                    0.0, 0.0, plan)
         padded = smod.pad_batch_np(
             queries, smod.next_bucket(B, self.cfg.batch_buckets)
         )
         ids_l, d_l, ru, service_ms = [], [], 0.0, 0.0
         for p in partitions:
             pv = p.providers
+            scan_mask = pv.live
+            n_scan = p.num_docs
+            if predicate is not None:
+                if p.num_docs == 0:
+                    continue
+                mask, _words, nreads = compile_partition_filter(p, predicate)
+                # bill the compile's posting lookups even when the
+                # partition is then skipped as a no-match
+                ru += nreads * pv.meter.cfg.ru_per_prop_read
+                if mask is None:
+                    continue
+                scan_mask = mask & pv.live
+                n_scan = int(scan_mask.sum())
             ids, dists = fmod.brute_force(
                 jnp.asarray(padded), jnp.asarray(pv.vectors),
-                jnp.asarray(pv.live), k=k, metric=p.index.cfg.metric,
+                jnp.asarray(scan_mask), k=k, metric=p.index.cfg.metric,
             )
             ids_l.append(p.index._to_doc_ids(np.asarray(ids))[:B])
             d_l.append(np.asarray(dists)[:B])
-            # every lane scans the partition: full scan at quantized-ish
-            # cost, PER QUERY (RU must not deflate with batch size)
-            ru += 0.5 * p.num_docs * 0.0125 * B
+            # every lane scans the (filtered) subset: full scan at
+            # quantized-ish cost, PER QUERY (RU must not deflate with
+            # batch size)
+            ru += 0.5 * n_scan * 0.0125 * B
             # partitions scan in parallel — client latency tracks the worst
             # partition (§4.3), same model as the graph path
             service_ms = max(service_ms, pv.meter.latency_ms(
-                OpCounters(quant_reads=p.num_docs)
+                OpCounters(quant_reads=n_scan)
             ))
+        if not ids_l:  # predicate matched nothing anywhere
+            return (np.full((B, k), -1, np.int64), np.full((B, k), np.inf),
+                    ru, service_ms, plan)
         ids, dists = merge_topk(ids_l, d_l, k)
-        return ids, dists, ru, service_ms, "exact"
+        return ids, dists, ru, service_ms, plan
 
     # ------------------------------------------------------------------
     # host-path execution (filtered plans need the document store; the

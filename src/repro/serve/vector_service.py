@@ -11,8 +11,8 @@ Since the serving PR this class is a thin façade over
 ``serve.vector_engine.VectorServeEngine``: every query path flows through
 the engine (admission control, micro-batching, metrics, simulated clock),
 and ingest rides the engine's interleaved mini-batch queue. The service
-keeps what needs the document store — predicate→bitmap conversion for
-filtered plans, tenant routing, and pagination state.
+keeps what needs the document store — property-term extraction at ingest,
+the deprecated callable-filter shim, tenant routing, and pagination state.
 
 This is the host-side service; the device-parallel path for the same
 operation is `repro.partition.fanout.distributed_search_fn`.
@@ -28,19 +28,30 @@ from ..core import GraphConfig
 from ..core.graph import bitmap_words
 from ..core.index import PAGE_BACKUP_CAP
 from ..partition import Collection, CollectionConfig, ReplicaSet
-from ..partition.fanout import (merge_topk, paged_fanout_fingerprint,
-                                paged_fanout_search, start_paged_fanout)
+from ..partition.fanout import (compile_partition_filter, merge_topk,
+                                paged_fanout_fingerprint, paged_fanout_search,
+                                start_paged_fanout)
 from ..store.ru import counters_for_latency, counters_for_ru
 from .continuation import (ContinuationError, decode_continuation,
                            encode_continuation)
+from .predicate import Predicate, property_items
 from .vector_engine import EngineConfig, ServeRequest, Throttled, VectorServeEngine
+
+# plan-string marker for the deprecated callable-filter path (opaque Python
+# predicates can't batch, can't cache, and rebuild an O(capacity) bitmap by
+# scanning the doc store per partition per query — pass a serve.F Predicate)
+LEGACY_FILTER_PLAN = "filtered-legacy"
 
 
 @dataclasses.dataclass
 class VectorQuery:
     vector: np.ndarray
     k: int = 10
-    filter: Optional[Callable[[dict], bool]] = None  # predicate over docs
+    # WHERE clause: a declarative ``serve.predicate.Predicate`` (compiled
+    # to index-term bitmaps; batches through the engine) — or, DEPRECATED,
+    # an opaque ``Callable[[dict], bool]`` served by the legacy host path
+    # (plan strings report ``filtered-legacy[...]``).
+    filter: Optional[Predicate | Callable[[dict], bool]] = None
     search_list_multiplier: float = 5.0  # searchListSizeMultiplier
     exact: bool = False  # VectorDistance(..., true) → brute force
     shard_key: Any = None  # route to a sharded-DiskANN tenant index
@@ -143,14 +154,19 @@ class VectorCollectionService:
                         ru += self._tenant(old_key).delete_by_id([int(d["id"])])
         for d in documents:
             self.docs[int(d["id"])] = d
-        ru += self.collection.insert(ids, pks, vectors)
+        # property-term extraction happens ONCE at ingest: each partition's
+        # inverted PROP_TERM postings track the doc from here on, so the
+        # predicate query path never has to look at the document again
+        props = [property_items(d) for d in documents]
+        ru += self.collection.insert(ids, pks, vectors, props=props)
         if self.shard_key_path:
             groups: dict[Any, list[int]] = {}
             for i, d in enumerate(documents):
                 groups.setdefault(d.get(self.shard_key_path), []).append(i)
             for key, rows in groups.items():
                 ru += self._tenant(key).insert(
-                    [ids[i] for i in rows], [pks[i] for i in rows], vectors[rows]
+                    [ids[i] for i in rows], [pks[i] for i in rows],
+                    vectors[rows], props=[props[i] for i in rows],
                 )
         return ru
 
@@ -198,15 +214,28 @@ class VectorCollectionService:
     # ------------------------------------------------------------------
     def query(self, q: VectorQuery) -> QueryResult:
         """Route one query through the serving engine. Raises ``Throttled``
-        when the tenant is over its RU budget (the 429 path)."""
+        when the tenant is over its RU budget (the 429 path).
+
+        ``q.filter`` routing: a declarative ``Predicate`` flows through the
+        engine's micro-batcher (same-predicate queries coalesce and share
+        one compiled bitmap per partition — plan ``filtered-batched[...]``
+        / ``exact-filtered``); a legacy callable falls back to the host
+        path (plan ``filtered-legacy[...]`` — deprecated, scans the doc
+        store per partition per query)."""
         qv = np.asarray(q.vector, np.float32)
 
-        # precedence as before the engine rewire: VectorDistance(..., true)
-        # forces the exact plan even when a filter is also set
-        if q.filter is not None and not q.exact:
-            resp = self.engine.execute_host(
-                q.tenant, "filtered", lambda: self._run_filtered(q, qv)
-            )
+        if q.filter is not None and not isinstance(q.filter, Predicate):
+            # DEPRECATED opaque-callable path; exact + filter brute-forces
+            # over the filtered subset (never silently drops the filter)
+            if q.exact:
+                resp = self.engine.execute_host(
+                    q.tenant, "exact-filtered-legacy",
+                    lambda: self._run_exact_filtered_legacy(q, qv),
+                )
+            else:
+                resp = self.engine.execute_host(
+                    q.tenant, "filtered", lambda: self._run_filtered(q, qv)
+                )
             return QueryResult(resp.ids, resp.dists, resp.ru, resp.plan,
                                latency_ms=resp.latency_ms)
 
@@ -214,32 +243,43 @@ class VectorCollectionService:
         rid = self.engine.next_rid()
         resp = self.engine.query_sync(ServeRequest(
             rid=rid, vector=qv, k=q.k, L=L, tenant=q.tenant,
-            exact=q.exact, shard_key=q.shard_key,
+            exact=q.exact, shard_key=q.shard_key, predicate=q.filter,
         ))
         if resp.status == 429:
             raise Throttled(q.tenant, resp.retry_after_s)
         return QueryResult(resp.ids, resp.dists, resp.ru, resp.plan,
                            latency_ms=resp.latency_ms)
 
-    def _run_filtered(self, q: VectorQuery, qv: np.ndarray):
-        """Filtered plan body (needs the doc store for the predicate →
-        bitmap conversion; executed under the engine's accounting).
+    # -- DEPRECATED callable-filter shim ---------------------------------
+    def _legacy_filter_mask(self, p, fn) -> np.ndarray:
+        """THE legacy shim: the only place an opaque callable filter is
+        ever evaluated (``scripts/check.sh`` lints serve/ for stray
+        ``.filter(...)`` calls). Rebuilds an O(capacity) slot mask by
+        scanning the partition's documents — everything the declarative
+        Predicate path exists to avoid."""
+        mask = np.zeros(p.index.cfg.capacity, bool)
+        for doc, slot in p.index.doc_to_slot.items():
+            if doc in self.docs and fn(self.docs[doc]):
+                mask[slot] = True
+        return mask
 
-        Partitions with no documents — and partitions where the predicate
-        matches nothing — are skipped outright: no O(capacity) bitmap is
-        minted and no search runs for them. The reported plan aggregates
-        every partition actually searched (e.g. ``filtered[beta×3]``),
-        not just whichever partition happened to run last."""
+    def _run_filtered(self, q: VectorQuery, qv: np.ndarray):
+        """Legacy callable-filter plan body (needs the doc store for the
+        predicate → bitmap conversion; executed under the engine's
+        accounting).
+
+        Partitions with no documents — and partitions where the filter
+        matches nothing — are skipped outright: no search runs for them.
+        The reported plan aggregates every partition actually searched
+        (e.g. ``filtered-legacy[beta×3]``), carrying the deprecation
+        marker."""
         target = self._partitions_for(q.shard_key)
         ids_l, d_l, ru, lat_ms = [], [], 0.0, 0.0
         plans: dict[str, int] = {}
         for p in target:
             if p.num_docs == 0:
                 continue
-            mask = np.zeros(p.index.cfg.capacity, bool)
-            for doc, slot in p.index.doc_to_slot.items():
-                if doc in self.docs and q.filter(self.docs[doc]):
-                    mask[slot] = True
+            mask = self._legacy_filter_mask(p, q.filter)
             if not mask.any():
                 continue
             ids, dists, stats = p.index.filtered_search(qv[None, :], q.k, mask)
@@ -254,12 +294,39 @@ class VectorCollectionService:
         if not ids_l:  # nothing matched anywhere
             return (np.full((q.k,), -1, np.int64),
                     np.full((q.k,), np.inf, np.float32),
-                    0.0, 0.0, "filtered[empty]")
+                    0.0, 0.0, f"{LEGACY_FILTER_PLAN}[empty]")
         ids, dists = merge_topk(ids_l, d_l, q.k)
-        plan = "filtered[" + ",".join(
+        plan = LEGACY_FILTER_PLAN + "[" + ",".join(
             f"{name}×{count}" for name, count in sorted(plans.items())
         ) + "]"
         return ids[0], dists[0], ru, lat_ms, plan
+
+    def _run_exact_filtered_legacy(self, q: VectorQuery, qv: np.ndarray):
+        """Exact + callable filter: brute force over the filtered subset
+        (the filter is applied, not ignored — a WHERE clause with
+        ``VectorDistance(..., true)`` must constrain the flat scan)."""
+        target = self._partitions_for(q.shard_key)
+        ids_l, d_l, ru, lat_ms = [], [], 0.0, 0.0
+        for p in target:
+            if p.num_docs == 0:
+                continue
+            mask = self._legacy_filter_mask(p, q.filter)
+            if not mask.any():
+                continue
+            ids, dists, ru_p, stats = p.filtered_search_batch(
+                qv[None, :], q.k, mask, mode="brute"
+            )
+            ids_l.append(ids)
+            d_l.append(dists)
+            ru += ru_p
+            lat_ms = max(lat_ms, p.providers.meter.latency_ms(
+                counters_for_latency(stats)))
+        if not ids_l:
+            return (np.full((q.k,), -1, np.int64),
+                    np.full((q.k,), np.inf, np.float32),
+                    0.0, 0.0, f"exact-{LEGACY_FILTER_PLAN}[empty]")
+        ids, dists = merge_topk(ids_l, d_l, q.k)
+        return ids[0], dists[0], ru, lat_ms, f"exact-{LEGACY_FILTER_PLAN}"
 
     # ------------------------------------------------------------------
     # pagination / continuation tokens (§3.5 "Continuations")
@@ -280,12 +347,30 @@ class VectorCollectionService:
         floor. ``shard_key`` routes to a sharded-DiskANN tenant index;
         ``q.beam_width`` overrides the engine's per-round hop batching.
 
+        ``q.filter`` must be a declarative ``Predicate`` (or None): the
+        compiled per-partition bitmap threads through
+        ``paged_fanout_search`` so every emitted row satisfies the
+        predicate, with no-match partitions exhausted at birth. Opaque
+        callable filters are REJECTED here — the old behavior silently
+        ignored them and returned unfiltered pages, which is worse than an
+        error. The token binds to the predicate's canonical key: resuming
+        a filtered pagination under a different predicate raises
+        ``ContinuationError``.
+
         Returns ``continuation=None`` once every partition is exhausted
         and its buffers are drained. The client re-sends the SAME query
-        vector with each token (the token deliberately excludes it, as in
-        the SDK); resuming under a different shard key or after a
-        partition split/merge raises ``ContinuationError``.
+        vector (and predicate) with each token (the token deliberately
+        excludes them, as in the SDK); resuming under a different shard
+        key or after a partition split/merge raises ``ContinuationError``.
         """
+        if q.filter is not None and not isinstance(q.filter, Predicate):
+            raise ValueError(
+                "query_page does not support callable filters (they were "
+                "previously ignored, silently returning unfiltered pages); "
+                "pass a declarative predicate built with repro.serve.F"
+            )
+        pred = q.filter
+        pred_key = pred.key() if pred is not None else None
         qv = np.asarray(q.vector, np.float32)
         target = self._partitions_for(q.shard_key)
         W = int(q.beam_width or self.engine.cfg.beam_width)
@@ -300,26 +385,58 @@ class VectorCollectionService:
         holder: dict[str, Any] = {}
 
         def body():
-            # cursor construction / token decode happens HERE, behind the
-            # engine's admission check: a throttled tenant (or a malformed
-            # token) must not trigger per-partition work
+            # cursor construction / token decode / predicate compilation
+            # happen HERE, behind the engine's admission check: a throttled
+            # tenant (or a malformed token) must not trigger per-partition
+            # work
+            slot_filters = None
+            compile_ru = 0.0
+            if pred is not None:
+                slot_filters = []
+                for p in target:
+                    if p.num_docs == 0:
+                        slot_filters.append(None)
+                        continue
+                    mask, _words, nreads = compile_partition_filter(p, pred)
+                    # compile cost bills like the batched path — a filtered
+                    # page on a cold bitmap cache is not free
+                    compile_ru += (
+                        nreads * p.providers.meter.cfg.ru_per_prop_read
+                    )
+                    slot_filters.append(mask)
             if continuation is None:
-                pstate = start_paged_fanout(target, qv, shard_key=q.shard_key)
+                pstate = start_paged_fanout(target, qv, shard_key=q.shard_key,
+                                            pred_key=pred_key,
+                                            slot_filters=slot_filters)
             else:
                 pstate = decode_continuation(continuation)
-                if pstate.shard_fp != paged_fanout_fingerprint(q.shard_key,
-                                                               target):
+                if pstate.shard_fp != paged_fanout_fingerprint(
+                        q.shard_key, target, pred_key):
                     raise ContinuationError(
                         "token does not match this query's routing "
-                        "(different shard key, or the partition set changed)"
+                        "(different shard key or predicate, or the "
+                        "partition set changed)"
                     )
                 self._check_token_topology(pstate, target)
+            if slot_filters is not None:
+                # a partition whose match-set went empty since the last
+                # page (ingest re-labelled / deleted its matches) must NOT
+                # fall back to unfiltered fetches — a None slot_filter
+                # means "no filter" downstream. Exhaust its cursor;
+                # already-buffered rows (which matched at fetch time)
+                # still drain.
+                for cur, mask in zip(pstate.cursors, slot_filters):
+                    if mask is None and not cur.exhausted:
+                        cur.exhausted = True
+                        cur.state = None
             holder["pstate"] = pstate
             ids, dists, info = paged_fanout_search(
-                target, qv, pstate, page_size, beam_width=W
+                target, qv, pstate, page_size, beam_width=W,
+                slot_filters=slot_filters,
             )
-            return (ids, dists, info["ru_total"],
-                    info["service_latency_ms"], "paginated")
+            return (ids, dists, info["ru_total"] + compile_ru,
+                    info["service_latency_ms"],
+                    "paginated" if pred is None else "paginated-filtered")
 
         resp = self.engine.execute_host(q.tenant, "paginated", body,
                                         is_page=True)

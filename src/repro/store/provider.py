@@ -122,6 +122,21 @@ class StoreProviderSet(ArrayProviderSet):
         return np.frombuffer(codes, np.uint8), ver
 
     # ------------------------------------------------------------------
+    # inverted property terms (predicate postings)
+    # ------------------------------------------------------------------
+    def write_prop_posting(self, term_key: bytes, words: np.ndarray):
+        """Persist one PROP_TERM posting bitmap (store.props write-through):
+        the predicate index durably rides the same Bw-Tree as the quantized
+        and adjacency terms, and each upsert is RU-metered."""
+        self.tree.upsert(term_key, self.codec.encode_posting(words))
+        self.op.prop_writes += 1
+
+    def read_prop_posting(self, term_key: bytes) -> Optional[np.ndarray]:
+        self.op.prop_reads += 1
+        v = self.tree.get(term_key)
+        return None if v is None else self.codec.decode_posting(v)
+
+    # ------------------------------------------------------------------
     # document store (full vectors)
     # ------------------------------------------------------------------
     def set_full(self, ctx: Context, ids, vecs):

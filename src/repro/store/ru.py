@@ -30,6 +30,13 @@ class RUConfig:
     ru_per_full_read: float = 0.50  # document-store vector load
     ru_per_quant_write: float = 0.50
     ru_per_adj_write: float = 0.30  # incl. blind appends
+    # inverted property-term postings (the predicate/WHERE index): writes
+    # are bitmap upserts riding the doc write; reads are the per-leaf-term
+    # posting lookups a predicate compilation performs on a bitmap-cache
+    # miss (a cache hit costs zero — the hit rate is directly visible in
+    # query RU)
+    ru_per_prop_write: float = 0.05
+    ru_per_prop_read: float = 0.005
     ru_per_doc_write: float = 5.0  # the transactional document write
     ru_per_cpu_ms: float = 0.50
     ru_per_page_read: float = 0.005  # Bw-Tree page touch (cache-miss extra)
@@ -55,6 +62,8 @@ class OpCounters:
     full_reads: int = 0
     quant_writes: int = 0
     adj_writes: int = 0
+    prop_writes: int = 0  # property-term posting upserts
+    prop_reads: int = 0  # posting lookups (predicate compile, cache miss)
     doc_writes: int = 0
     cpu_ms: float = 0.0
     page_reads: int = 0
@@ -87,6 +96,8 @@ class RUMeter:
             + g.ru_per_full_read * c.full_reads
             + g.ru_per_quant_write * c.quant_writes
             + g.ru_per_adj_write * c.adj_writes
+            + g.ru_per_prop_write * c.prop_writes
+            + g.ru_per_prop_read * c.prop_reads
             + g.ru_per_doc_write * c.doc_writes
             + g.ru_per_cpu_ms * c.cpu_ms
             + g.ru_per_page_read * c.page_reads

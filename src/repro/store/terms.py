@@ -21,8 +21,17 @@ import hashlib
 import struct
 from typing import Iterator, Optional
 
+import numpy as np
+
 QUANT_TERM = 0x17
 ADJ_TERM = 0x18
+# Inverted property term (the predicate/WHERE-clause term kind, §3.3/§3.5):
+#     TermKey  = pathhash(15B) | 0x19 | [shardhash(8B)] | valuehash(8B)
+#     TermValue = posting bitmap over the partition's doc slots (packed
+#                 uint32 little-endian words — the PES bitmap role, for
+#                 real this time: predicates compile to AND/OR/NOT over
+#                 these postings with zero document scans)
+PROP_TERM = 0x19
 
 
 def path_hash(path: str) -> bytes:
@@ -33,6 +42,29 @@ def path_hash(path: str) -> bytes:
 def shard_hash(shard_key) -> bytes:
     """8-byte hash of a shard-key value (tenant id, year, ...)."""
     return hashlib.blake2b(repr(shard_key).encode(), digest_size=8).digest()
+
+
+def value_token(v) -> bytes:
+    """Deterministic typed encoding of a scalar property value — the single
+    source of value identity shared by predicate canonical keys
+    (serve/predicate.py) and property-term hashes, so True ≠ 1 and
+    3 ≠ "3" consistently on both sides of the index."""
+    if isinstance(v, bool):  # before int: bool is an int subclass
+        return b"b:" + (b"1" if v else b"0")
+    if isinstance(v, int):
+        return b"i:%d" % v
+    if isinstance(v, float):
+        return b"f:" + repr(v).encode()
+    if isinstance(v, str):
+        return b"s:" + v.encode()
+    if v is None:
+        return b"n:"
+    raise TypeError(f"unsupported property value type {type(v).__name__}")
+
+
+def prop_value_hash(value) -> bytes:
+    """8-byte hash of a property value for the PROP_TERM key suffix."""
+    return hashlib.blake2b(value_token(value), digest_size=8).digest()
 
 
 def merge_adjacency(base: Optional[bytes], deltas: list[bytes]) -> bytes:
@@ -67,6 +99,26 @@ class TermCodec:
     def adj_prefix(self, shard=None) -> bytes:
         mid = shard_hash(shard) if shard is not None else b""
         return self.prefix + bytes([ADJ_TERM]) + mid
+
+    @staticmethod
+    def prop_key(path: str, value, shard=None) -> bytes:
+        """Inverted property-term key: the property path is hashed like the
+        vector path (each indexed path owns a contiguous key range), the
+        value hashed through the SAME typed token as predicate canonical
+        keys, so a predicate and the ingest path can never disagree about
+        value identity."""
+        mid = shard_hash(shard) if shard is not None else b""
+        return path_hash(path) + bytes([PROP_TERM]) + mid + prop_value_hash(value)
+
+    # -- values -------------------------------------------------------------
+    @staticmethod
+    def encode_posting(words) -> bytes:
+        """Posting bitmap value: packed uint32 words, little-endian."""
+        return np.asarray(words, dtype="<u4").tobytes()
+
+    @staticmethod
+    def decode_posting(v: bytes) -> np.ndarray:
+        return np.frombuffer(v, dtype="<u4").astype(np.uint32)
 
     # -- values -------------------------------------------------------------
     @staticmethod

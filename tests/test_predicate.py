@@ -1,0 +1,442 @@
+"""Declarative predicate API: AST canonicalization, the property-term
+index (maintenance parity under delete / re-upsert / re-key / split), the
+engine's batched filtered path, exact+filter, and filtered pagination."""
+import numpy as np
+import pytest
+
+from repro.core import GraphConfig
+from repro.serve import (F, Predicate, VectorCollectionService, VectorQuery,
+                         from_obj, property_items)
+from repro.store.props import (COMPILE_CACHE_CAP, PropertyTermIndex,
+                               mask_to_words, words_to_mask)
+
+from conftest import clustered_data
+
+
+# ---------------------------------------------------------------------------
+# AST: canonicalization / equality / hashing / serialization
+# ---------------------------------------------------------------------------
+
+
+def test_canonicalization_and_hashing():
+    a = F.and_(F.eq("label", 3), F.range("price", 10, 20))
+    b = F.and_(F.range("price", 10, 20), F.eq("label", 3))
+    assert a == b and hash(a) == hash(b) and a.key() == b.key()
+
+    assert F.in_("x", [3, 1, 2, 3]) == F.in_("x", [1, 2, 3])
+    assert F.in_("x", [7]) == F.eq("x", 7)  # single-value in_ → eq
+    assert F.not_(F.not_(a)) == a  # double negation cancels
+    # nested and flattens + dedups
+    assert F.and_(F.eq("x", 1), F.and_(F.eq("y", 2), F.eq("x", 1))) == \
+        F.and_(F.eq("y", 2), F.eq("x", 1))
+    # or/and are distinct even with the same children
+    assert F.and_(F.eq("x", 1), F.eq("y", 2)) != F.or_(F.eq("x", 1), F.eq("y", 2))
+    # typed value identity: bool is not int, int is not str
+    assert F.eq("x", True) != F.eq("x", 1)
+    assert F.eq("x", 1) != F.eq("x", "1")
+
+
+def test_operator_sugar_and_serialization():
+    p = (F.eq("genre", "jazz") | F.eq("genre", "blues")) & ~F.eq("year", 1999)
+    assert isinstance(p, Predicate)
+    rt = from_obj(p.to_obj())
+    assert rt == p and rt.key() == p.key()
+    # deterministic: a structurally-reordered build round-trips to same key
+    q = ~F.eq("year", 1999) & (F.eq("genre", "blues") | F.eq("genre", "jazz"))
+    assert from_obj(q.to_obj()) == p
+
+
+def test_constructor_validation():
+    with pytest.raises(ValueError):
+        F.in_("x", [])
+    with pytest.raises(ValueError):
+        F.and_()
+    with pytest.raises(TypeError):
+        F.eq("x", [1, 2])  # values must be scalars
+    # the doc key is never property-indexed: a predicate over it would
+    # silently compile to an always-empty bitmap — reject at construction
+    for build in (lambda: F.eq("id", 7), lambda: F.in_("id", [1, 2]),
+                  lambda: F.range("id", 0, 9)):
+        with pytest.raises(ValueError, match="not property-indexed"):
+            build()
+
+
+def test_matches_reference_semantics():
+    doc = {"id": 1, "label": 3, "meta": {"genre": "jazz"}, "tags": ["a", "b"],
+           "price": 12.5}
+    assert F.eq("label", 3).matches(doc)
+    assert not F.eq("label", 4).matches(doc)
+    assert F.eq("meta/genre", "jazz").matches(doc)  # nested path
+    assert F.eq("tags", "a").matches(doc)  # list membership
+    assert F.range("price", 10, 20).matches(doc)
+    assert not F.range("label", "a", "z").matches(doc)  # type-incomparable
+    assert (~F.eq("missing", 1)).matches(doc)  # absent field passes NOT
+    assert not F.eq("missing", 1).matches(doc)
+
+
+# ---------------------------------------------------------------------------
+# PropertyTermIndex: pure bitmap maintenance
+# ---------------------------------------------------------------------------
+
+
+def test_property_index_assign_remove_universe():
+    idx = PropertyTermIndex(100)
+    idx.assign(3, (("label", 1), ("color", "red")))
+    idx.assign(7, (("label", 1),))
+    m = idx.mask(idx.compile(F.eq("label", 1)))
+    assert set(np.nonzero(m)[0]) == {3, 7}
+    # re-assign slot 3 with CHANGED values: old postings must clear
+    idx.assign(3, (("label", 2),))
+    assert set(np.nonzero(idx.mask(idx.compile(F.eq("label", 1))))[0]) == {7}
+    assert set(np.nonzero(idx.mask(idx.compile(F.eq("color", "red"))))[0]) == set()
+    # NOT complements within present docs only
+    m = idx.mask(idx.compile(~F.eq("label", 1)))
+    assert set(np.nonzero(m)[0]) == {3}
+    idx.remove(7)
+    assert set(np.nonzero(idx.mask(idx.compile(F.eq("label", 1))))[0]) == set()
+    assert set(np.nonzero(idx.mask(idx.compile(~F.eq("label", 99))))[0]) == {3}
+
+
+def test_compile_cache_epoch_invalidation():
+    idx = PropertyTermIndex(64)
+    idx.assign(1, (("x", 1),))
+    pred = F.eq("x", 1)
+    idx.compile(pred)
+    assert idx.last_compile_reads > 0  # cold compile touched postings
+    idx.compile(pred)
+    assert idx.last_compile_reads == 0  # cache hit
+    idx.assign(2, (("x", 1),))  # mutation bumps epoch
+    m = idx.mask(idx.compile(pred))
+    assert idx.last_compile_reads > 0  # recompiled
+    assert set(np.nonzero(m)[0]) == {1, 2}
+
+
+def test_compile_cache_bounded_without_ingest():
+    """A query-only workload with many distinct predicates must not grow
+    the compiled-bitmap cache past its cap (no ingest → no epoch bump to
+    clear it)."""
+    idx = PropertyTermIndex(64)
+    idx.assign(1, (("x", 1),))
+    for v in range(COMPILE_CACHE_CAP + 40):
+        idx.compile(F.eq("x", v))
+    assert len(idx._cache) <= COMPILE_CACHE_CAP
+
+
+def test_words_mask_roundtrip():
+    rng = np.random.RandomState(0)
+    mask = rng.rand(1000) < 0.3
+    assert (words_to_mask(mask_to_words(mask), 1000) == mask).all()
+
+
+# ---------------------------------------------------------------------------
+# service-level maintenance parity: posting bitmaps must track doc_to_slot
+# exactly through delete / re-upsert / re-key / split
+# ---------------------------------------------------------------------------
+
+PREDS = [
+    F.eq("label", 1),
+    F.in_("label", [0, 2]),
+    F.range("price", 5.0, 30.0),
+    F.and_(F.range("price", 0.0, 40.0), ~F.eq("label", 3)),
+    F.or_(F.eq("label", 4), F.eq("color", "red")),
+]
+
+
+def _assert_parity(svc, collection=None):
+    """Compiled predicate bitmaps == brute-force doc scans, per partition."""
+    col = collection or svc.collection
+    for p in col.partitions:
+        for pred in PREDS:
+            got = set(np.nonzero(p.props.mask(p.props.compile(pred)))[0])
+            want = {
+                slot for doc, slot in p.index.doc_to_slot.items()
+                if doc in svc.docs and pred.matches(svc.docs[doc])
+                and doc in p.doc_pk  # doc currently homed here
+            }
+            assert got == want, (p.pid, pred, got ^ want)
+
+
+def _mk_service(n=300, parts=1, shard=None, cap=400, maxv=350):
+    rng = np.random.RandomState(7)
+    g = GraphConfig(capacity=cap, R=12, M=8, L_build=24, L_search=32,
+                    bootstrap_sample=64, refine_sample=10**9, batch_size=64)
+    svc = VectorCollectionService(dim=16, graph=g,
+                                  max_vectors_per_partition=maxv,
+                                  initial_partitions=parts,
+                                  shard_key_path=shard)
+    data = clustered_data(rng, n, 16)
+    docs = [{"id": i, "label": i % 5, "price": float(i % 45),
+             "color": "red" if i % 3 == 0 else "blue",
+             **({"tenant": f"t{i % 2}"} if shard else {})}
+            for i in range(n)]
+    svc.upsert(docs, data)
+    return svc, data, docs
+
+
+def test_property_parity_after_delete_and_reupsert():
+    svc, data, docs = _mk_service()
+    _assert_parity(svc)
+    # delete a slice
+    svc.delete(list(range(0, 60, 2)))
+    _assert_parity(svc)
+    # re-upsert some deleted and some live docs with CHANGED field values
+    changed = [{"id": i, "label": 9, "price": 7.5, "color": "green"}
+               for i in list(range(0, 30, 2)) + [61, 63]]
+    svc.upsert(changed, data[[d["id"] for d in changed]])
+    _assert_parity(svc)
+    got = svc.query(VectorQuery(vector=data[61] + 0.01, k=8,
+                                filter=F.eq("label", 9)))
+    assert all(svc.docs[int(i)]["label"] == 9 for i in got.ids[got.ids >= 0])
+    # the old values must no longer match the re-upserted docs
+    res = svc.query(VectorQuery(vector=data[61] + 0.01, k=300,
+                                filter=F.eq("label", 61 % 5), exact=True))
+    assert 61 not in res.ids.tolist()
+
+
+def test_property_parity_after_shard_rekey():
+    svc, data, docs = _mk_service(shard="tenant")
+    _assert_parity(svc)
+    for t in ("t0", "t1"):
+        _assert_parity(svc, svc._tenant_collections[t])
+    # re-home doc 4 (t0 → t1): the OLD tenant's postings must drop it
+    moved = {"id": 4, "label": 4 % 5, "price": 4.0, "color": "blue",
+             "tenant": "t1"}
+    svc.upsert([moved], data[4:5])
+    _assert_parity(svc)
+    for t in ("t0", "t1"):
+        _assert_parity(svc, svc._tenant_collections[t])
+    res = svc.query(VectorQuery(vector=data[4] + 0.001, k=5, shard_key="t0",
+                                filter=F.eq("label", 4 % 5)))
+    assert 4 not in res.ids.tolist()
+
+
+def test_property_parity_after_partition_split():
+    svc, data, docs = _mk_service(n=200, cap=300, maxv=260)
+    assert len(svc.collection.partitions) == 1
+    # overflow the partition → split() re-homes docs into new partitions
+    rng = np.random.RandomState(8)
+    extra_n = 120
+    extra = clustered_data(rng, extra_n, 16)
+    svc.upsert([{"id": 1000 + i, "label": i % 5, "price": float(i % 45),
+                 "color": "red" if i % 3 == 0 else "blue"}
+                for i in range(extra_n)], extra)
+    assert len(svc.collection.partitions) >= 2, "split did not trigger"
+    _assert_parity(svc)
+
+
+# ---------------------------------------------------------------------------
+# engine: batched same-predicate execution
+# ---------------------------------------------------------------------------
+
+
+class _GuardedDict(dict):
+    """doc_to_slot guard: predicate queries must never iterate it."""
+
+    def __init__(self, *a):
+        super().__init__(*a)
+        self.scans = 0
+
+    def items(self):
+        self.scans += 1
+        return super().items()
+
+
+@pytest.fixture(scope="module")
+def pred_service():
+    svc, data, docs = _mk_service(n=380, parts=2, cap=300, maxv=280)
+    return svc, data, docs
+
+
+def test_same_predicate_queries_batch_through_engine(pred_service):
+    svc, data, docs = pred_service
+    pred = F.in_("label", [0, 1])
+    rids = [svc.engine.submit_query(data[i] + 0.01, k=5, predicate=pred)
+            for i in range(16)]
+    svc.engine.drain()
+    resps = [svc.engine.pop_response(r) for r in rids]
+    assert all(r.status == 200 for r in resps)
+    # ONE micro-batch, through the batched (bucketed) search path
+    assert resps[0].batch_size == 16
+    assert resps[0].plan.startswith("filtered-batched[")
+    for r in resps:
+        for i in r.ids[r.ids >= 0]:
+            assert svc.docs[int(i)]["label"] in (0, 1)
+
+
+def test_predicate_path_never_scans_documents(pred_service):
+    svc, data, docs = pred_service
+    guards = []
+    for p in svc.collection.partitions:
+        g = _GuardedDict(p.index.doc_to_slot)
+        p.index.doc_to_slot = g
+        guards.append(g)
+    try:
+        res = svc.query(VectorQuery(vector=data[3] + 0.01, k=5,
+                                    filter=F.eq("label", 2)))
+        assert res.plan.startswith("filtered-batched[")
+        assert all(g.scans == 0 for g in guards), \
+            "predicate path iterated doc_to_slot (document scan)"
+        # the legacy callable path DOES scan — the guard proves it can see
+        svc.query(VectorQuery(vector=data[3] + 0.01, k=5,
+                              filter=lambda d: d["label"] == 2))
+        assert sum(g.scans for g in guards) > 0
+    finally:
+        for p, g in zip(svc.collection.partitions, guards):
+            p.index.doc_to_slot = dict(g)
+
+
+def test_predicate_recall_parity_with_legacy_path(pred_service):
+    svc, data, docs = pred_service
+    pred = F.eq("label", 3)
+    fn = lambda d: d["label"] == 3  # noqa: E731
+    agree = 0
+    qs = [data[i] + 0.01 for i in range(0, 60, 3)]
+    for q in qs:
+        a = svc.query(VectorQuery(vector=q, k=5, filter=pred))
+        b = svc.query(VectorQuery(vector=q, k=5, filter=fn))
+        agree += len(set(a.ids.tolist()) & set(b.ids.tolist())) / 5.0
+    assert agree / len(qs) >= 0.99, f"parity {agree / len(qs):.3f} < 0.99"
+
+
+def test_exact_filtered_is_filtered_ground_truth(pred_service):
+    svc, data, docs = pred_service
+    pred = F.and_(F.eq("label", 1), F.eq("color", "blue"))
+    q = data[21] + 0.01
+    res = svc.query(VectorQuery(vector=q, k=6, filter=pred, exact=True))
+    assert res.plan == "exact-filtered"
+    match_ids = [d["id"] for d in docs if pred.matches(d)]
+    dists = ((data[match_ids] - q) ** 2).sum(1)
+    gt = [match_ids[i] for i in np.argsort(dists)[:6]]
+    assert set(res.ids.tolist()) == set(gt)
+    # legacy callable + exact: also constrained (the silent-drop bug)
+    res2 = svc.query(VectorQuery(vector=q, k=6, exact=True,
+                                 filter=lambda d: pred.matches(d)))
+    assert set(res2.ids.tolist()) == set(gt)
+    assert res2.plan == "exact-filtered-legacy"
+
+
+def test_predicate_no_match_everywhere(pred_service):
+    svc, data, docs = pred_service
+    res = svc.query(VectorQuery(vector=data[0], k=5,
+                                filter=F.eq("label", 777)))
+    assert res.plan == "filtered-batched[empty]"
+    assert (res.ids < 0).all()
+
+
+def test_filtered_search_beta_bucketed_padding(pred_service):
+    """The β/post graph modes now run through the bucketed batched entry:
+    a padded micro-batch (B=3 → bucket 4, filter_bits broadcast + padded)
+    must return exactly what the unpadded call returns."""
+    svc, data, docs = pred_service
+    p = svc.collection.partitions[0]
+    mask = np.zeros(p.index.cfg.capacity, bool)
+    mask[: p.index.count] = True
+    mask[::3] = False
+    qs = np.stack([data[1], data[5], data[9]]) + 0.01
+    for mode in ("beta", "post"):
+        a_ids, a_d, a_st = p.index.filtered_search(
+            qs, 5, mask, mode=mode, pad_to_bucket=True
+        )
+        b_ids, b_d, b_st = p.index.filtered_search(qs, 5, mask, mode=mode)
+        assert a_ids.shape == (3, 5)
+        np.testing.assert_array_equal(a_ids, b_ids)
+        np.testing.assert_allclose(a_d, b_d, rtol=1e-6)
+        assert a_st.plan == b_st.plan == mode
+
+
+# ---------------------------------------------------------------------------
+# filtered pagination
+# ---------------------------------------------------------------------------
+
+
+def test_query_page_rejects_callable_filters(pred_service):
+    svc, data, docs = pred_service
+    with pytest.raises(ValueError, match="callable"):
+        svc.query_page(VectorQuery(vector=data[0], filter=lambda d: True),
+                       None, page_size=5)
+
+
+def test_filtered_pagination_drain_parity(pred_service):
+    svc, data, docs = pred_service
+    pred = F.in_("label", [0, 4])
+    q = data[12] + 0.01
+
+    token, seen = None, []
+    while True:
+        r = svc.query_page(VectorQuery(vector=q, filter=pred), token,
+                           page_size=7)
+        assert r.plan == "paginated-filtered"
+        ids = [i for i in r.ids.tolist() if i >= 0]
+        assert all(svc.docs[i]["label"] in (0, 4) for i in ids)
+        assert not (set(ids) & set(seen)), "page repeated a result"
+        seen.extend(ids)
+        token = r.continuation
+        if token is None:
+            break
+
+    token, unfiltered = None, set()
+    while True:
+        r = svc.query_page(VectorQuery(vector=q), token, page_size=7)
+        unfiltered.update(i for i in r.ids.tolist() if i >= 0)
+        token = r.continuation
+        if token is None:
+            break
+    want = {i for i in unfiltered if svc.docs[i]["label"] in (0, 4)}
+    assert set(seen) == want, "filtered drain ≠ predicate ∩ unfiltered drain"
+
+
+def test_filtered_pagination_match_set_gone_empty():
+    """Regression: resuming a filtered pagination after ingest emptied the
+    predicate's match set must NOT fall back to unfiltered fetches (a
+    None slot_filter means 'no filter' downstream) — only rows that
+    matched at fetch time may still drain, then the stream ends."""
+    svc, data, docs = _mk_service(n=260, cap=350, maxv=340)
+    pred = F.eq("label", 2)
+    q = data[2] + 0.01
+    r1 = svc.query_page(VectorQuery(vector=q, filter=pred), None, page_size=5)
+    originally_matching = [d["id"] for d in docs if d["label"] == 2]
+    assert r1.continuation is not None
+    # re-label EVERY label-2 doc: the match set is now empty
+    svc.upsert([{**docs[i], "label": 99} for i in originally_matching],
+               data[originally_matching])
+    emitted, token = [], r1.continuation
+    while token is not None:
+        r = svc.query_page(VectorQuery(vector=q, filter=pred), token,
+                           page_size=5)
+        emitted += [i for i in r.ids.tolist() if i >= 0]
+        token = r.continuation
+    assert set(emitted) <= set(originally_matching), \
+        "never-matching docs leaked into filtered pages after resume"
+
+
+def test_filtered_pagination_binds_token_to_predicate(pred_service):
+    from repro.serve import ContinuationError
+    svc, data, docs = pred_service
+    q = data[9] + 0.01
+    r = svc.query_page(VectorQuery(vector=q, filter=F.eq("label", 0)), None,
+                       page_size=5)
+    assert r.continuation is not None
+    with pytest.raises(ContinuationError):
+        svc.query_page(VectorQuery(vector=q, filter=F.eq("label", 1)),
+                       r.continuation, page_size=5)
+    with pytest.raises(ContinuationError):  # filtered token on unfiltered q
+        svc.query_page(VectorQuery(vector=q), r.continuation, page_size=5)
+
+
+# ---------------------------------------------------------------------------
+# property_items extraction
+# ---------------------------------------------------------------------------
+
+
+def test_property_items_extraction():
+    doc = {"id": 5, "label": 2, "meta": {"genre": "jazz", "year": 1959},
+           "tags": ["hot", "cool"], "emb_note": None}
+    items = dict()
+    for path, value in property_items(doc):
+        items.setdefault(path, []).append(value)
+    assert "id" not in items  # the doc key is not a predicate term
+    assert items["label"] == [2]
+    assert items["meta/genre"] == ["jazz"]
+    assert items["meta/year"] == [1959]
+    assert sorted(items["tags"]) == ["cool", "hot"]
+    assert items["emb_note"] == [None]

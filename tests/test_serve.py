@@ -190,20 +190,22 @@ def test_rekeyed_upsert_moves_document(multi_service):
 def test_filtered_plan_aggregates_over_partitions(multi_service):
     """Regression: the filtered path reported only the LAST partition's
     plan; it must aggregate every partition actually searched, and skip
-    partitions where the predicate matches nothing."""
+    partitions where the predicate matches nothing. Since the predicate
+    API redesign, callable filters ride the deprecated legacy host path
+    and their plans carry the ``filtered-legacy`` marker."""
     svc, data = multi_service
     res = svc.query(VectorQuery(vector=data[30] + 0.01, k=5,
                                 filter=lambda d: d["category"] == 2))
-    assert res.plan.startswith("filtered[") and "×" in res.plan
+    assert res.plan.startswith("filtered-legacy[") and "×" in res.plan
     counts = sum(int(part.split("×")[1]) for part in
-                 res.plan[len("filtered["):-1].split(","))
+                 res.plan[len("filtered-legacy["):-1].split(","))
     assert 1 <= counts <= len(svc.collection.partitions)
     for i in res.ids[res.ids >= 0]:
         assert svc.docs[int(i)]["category"] == 2
 
     nothing = svc.query(VectorQuery(vector=data[30] + 0.01, k=5,
                                     filter=lambda d: False))
-    assert nothing.plan == "filtered[empty]"
+    assert nothing.plan == "filtered-legacy[empty]"
     assert (nothing.ids < 0).all() and nothing.ru == 0.0
 
 
