@@ -64,35 +64,27 @@ if hits:
     sys.exit(1)
 print("ok: no pickle-family imports under src/repro/serve")
 
-# Opaque callable filters are deprecated: they can't batch, can't cache,
-# and rebuild an O(capacity) bitmap by scanning the doc store. The ONLY
-# place the serving layer may invoke one is the legacy shim
-# (_legacy_filter_mask). AST-walk serve/ and reject any other
-# `<expr>.filter(...)` call.
-LEGACY_SHIM = "_legacy_filter_mask"
+# Opaque callable filters are retired: they can't batch, can't cache,
+# and (historically) rebuilt an O(capacity) bitmap by scanning the doc
+# store. The serving layer must never invoke one — filters arrive as
+# declarative Predicates compiled to index-term bitmaps. AST-walk serve/
+# and reject ANY `<expr>.filter(...)` call.
 hits = []
 for path in sorted(Path("src/repro/serve").rglob("*.py")):
     tree = ast.parse(path.read_text(), filename=str(path))
-    shim_calls = set()
-    for node in ast.walk(tree):
-        if isinstance(node, ast.FunctionDef) and node.name == LEGACY_SHIM:
-            for sub in ast.walk(node):
-                shim_calls.add(id(sub))
     for node in ast.walk(tree):
         if (
             isinstance(node, ast.Call)
             and isinstance(node.func, ast.Attribute)
             and node.func.attr == "filter"
-            and id(node) not in shim_calls
         ):
-            hits.append(f"{path}:{node.lineno}: calls .filter(...) outside "
-                        f"the {LEGACY_SHIM} shim")
+            hits.append(f"{path}:{node.lineno}: calls .filter(...)")
 if hits:
-    print("LEGACY FILTER LINT FAIL (callable filters only via the shim):")
+    print("FILTER LINT FAIL (serve/ must never evaluate callable filters):")
     for h in hits:
         print(" ", h)
     sys.exit(1)
-print(f"ok: serve/ evaluates callable filters only inside {LEGACY_SHIM}")
+print("ok: serve/ never evaluates callable filters")
 EOF
 
 echo "== tier-1 tests =="

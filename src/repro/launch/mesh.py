@@ -28,3 +28,14 @@ def make_host_mesh(shape: tuple[int, ...] = None, axes: tuple[str, ...] = None):
     if shape is None:
         shape, axes = (n,), ("data",)
     return compat.make_mesh(shape, axes)
+
+
+def make_serve_mesh(devices: int = None) -> jax.sharding.Mesh:
+    """1-D data mesh for the serving engine's SPMD fan-out
+    (`partition.fanout.SpmdFanout`): partitions shard across the single
+    ``data`` axis, one stacked-graph search per device slice. Defaults to
+    every visible device (1 on a plain CPU host; set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to emulate a
+    pod)."""
+    n = devices or len(jax.devices())
+    return compat.make_mesh((n,), ("data",))

@@ -16,7 +16,8 @@ import numpy as np
 from ..configs import get_config, get_smoke_config
 from ..core import GraphConfig
 from ..models import model as M
-from ..serve import ServeEngine, VectorCollectionService, VectorQuery
+from ..serve import (EngineConfig, ServeEngine, VectorCollectionService,
+                     VectorQuery)
 
 
 def main(argv=None):
@@ -26,6 +27,13 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--corpus", type=int, default=500)
     ap.add_argument("--max-new-tokens", type=int, default=8)
+    ap.add_argument("--dispatch-mode", default="serial",
+                    choices=("serial", "replica", "spmd"),
+                    help="engine dispatch plane: serial (one lane), "
+                         "replica (N concurrent lanes + hedging), spmd "
+                         "(shard_map partition fan-out)")
+    ap.add_argument("--lanes", type=int, default=4,
+                    help="replica lanes for --dispatch-mode=replica")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -41,6 +49,8 @@ def main(argv=None):
         graph=GraphConfig(capacity=args.corpus + 256, R=16, M=8, L_build=32,
                           L_search=48, bootstrap_sample=128, refine_sample=10**9),
         max_vectors_per_partition=args.corpus + 128,
+        engine_cfg=EngineConfig(dispatch_mode=args.dispatch_mode,
+                                lanes=args.lanes),
     )
     vecs = rng.randn(args.corpus, dim).astype(np.float32)
     svc.upsert([{"id": i} for i in range(args.corpus)], vecs)

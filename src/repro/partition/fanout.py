@@ -15,6 +15,14 @@ Two implementations of the same scatter/gather:
     shard per device, lockstep beam search over the local shard, local
     re-rank, then a global top-k merge via all_gather. This is what the
     multi-pod dry-run lowers for the production meshes.
+
+  * ``SpmdFanout`` — the engine-facing SPMD dispatch
+    (``EngineConfig.dispatch_mode="spmd"``): live partitions stack into
+    per-partition arrays sharded over a mesh, and ONE jitted shard_map
+    program runs every partition's bucketed search + re-rank as a single
+    data-parallel call — bit-identical to the serial per-partition loop,
+    RU metered on each partition's own meter, zero steady-state
+    recompiles (`spmd_jit_cache_size` feeds the serving cache telemetry).
 """
 from __future__ import annotations
 
@@ -32,8 +40,9 @@ from ..core import flat as fmod
 from ..core import paginate as pgmod
 from ..core import pq as pqmod
 from ..core import search as smod
+from ..core.index import QueryStats
 from ..store.props import words_to_mask
-from ..store.ru import counters_for_latency
+from ..store.ru import counters_for_latency, counters_for_ru
 
 INF = jnp.float32(jnp.inf)
 
@@ -358,6 +367,7 @@ def paged_fanout_search(
     page_size: int,
     beam_width: Optional[int] = None,
     slot_filters: Optional[Sequence] = None,  # per-partition masks or None
+    executor=None,  # serve.executor.LaneExecutor: lane-scheduled refills
 ) -> tuple[np.ndarray, np.ndarray, dict]:
     """Produce the next globally-merged page across all partitions.
 
@@ -367,12 +377,18 @@ def paged_fanout_search(
     it. Emitted results therefore never repeat and never skip, and the
     per-partition leftovers ride along in the continuation token.
 
-    info carries per-partition RU and fetch latencies (partitions fetch
-    concurrently, so service latency is the max of per-partition sums, the
-    same worst-partition model as ``batched_fanout_search``) plus the fixed
-    per-request RU floor — a continuation request is never free, even when
-    a page is served entirely from the token's buffers (§2.2: every
-    request bills at least the request-processing charge).
+    Refills run as multi-cursor ROUNDS: every starved partition pulls one
+    ``next_page`` per round until all buffers are non-empty. With an
+    ``executor`` each round books its fetches across the replica lanes
+    and service latency is the lane horizon of the whole page — the max
+    fetch per round with ≥P lanes, the host-loop sum with one lane;
+    without one, the legacy accounting stands (max of per-partition
+    sums). The fetch sequence per partition is identical either way, so
+    results, cursors and RU never depend on the executor. info also
+    carries the fixed per-request RU floor — a continuation request is
+    never free, even when a page is served entirely from the token's
+    buffers (§2.2: every request bills at least the request-processing
+    charge).
     """
     assert len(partitions) == len(pstate.cursors), \
         "cursors must be index-aligned with the partition routing"
@@ -383,9 +399,15 @@ def paged_fanout_search(
     rus = [0.0] * n
     lat_sums = [0.0] * n
     fetches = 0
-    while len(out_ids) < page_size:
-        for i, (p, cur) in enumerate(zip(partitions, pstate.cursors)):
-            while not cur.exhausted and len(cur.buf_ids) == 0:
+    exec_ms = 0.0
+
+    def _refill_rounds():
+        nonlocal fetches, exec_ms
+        while True:
+            round_lats = []
+            for i, (p, cur) in enumerate(zip(partitions, pstate.cursors)):
+                if cur.exhausted or len(cur.buf_ids):
+                    continue
                 ru, lat = _fetch_partition_page(
                     p, cur, query, page_size, beam_width,
                     slot_filter=None if slot_filters is None
@@ -393,7 +415,19 @@ def paged_fanout_search(
                 )
                 rus[i] += ru
                 lat_sums[i] += lat
+                round_lats.append(lat)
                 fetches += 1
+            if not round_lats:
+                return
+            if executor is not None:
+                # schedule_round returns the lane horizon relative to the
+                # (unmoving) clock; successive rounds stack on the same
+                # lanes, so the LAST horizon is the page's total makespan
+                # — taking the max, not the sum, avoids double counting
+                exec_ms = max(exec_ms, executor.schedule_round(round_lats))
+
+    while len(out_ids) < page_size:
+        _refill_rounds()
         heads = [
             (float(cur.buf_dists[0]), i)
             for i, cur in enumerate(pstate.cursors) if len(cur.buf_ids)
@@ -421,7 +455,9 @@ def paged_fanout_search(
         request_ru=request_ru,
         ru_total=float(np.sum(rus)) + request_ru,
         server_latencies_ms=lat_sums,
-        service_latency_ms=float(np.max(lat_sums)) if lat_sums else 0.0,
+        service_latency_ms=(exec_ms if executor is not None
+                            else float(np.max(lat_sums)) if lat_sums else 0.0),
+        lane_scheduled=executor is not None,
         pages_fetched=fetches,
         emit_hwm=pstate.emit_hwm,  # how deep into the result set we are
         exhausted=pstate.exhausted(),
@@ -499,3 +535,236 @@ def distributed_search_fn(
         check=False,
     )
     return jax.jit(shmapped)
+
+
+# ---------------------------------------------------------------------------
+# engine-facing SPMD fan-out (EngineConfig.dispatch_mode="spmd")
+# ---------------------------------------------------------------------------
+
+_SPMD_PROGRAMS: list = []
+
+
+def spmd_jit_cache_size() -> int:
+    """Compiled-signature count across every SpmdFanout program. Feeds
+    ``serve.vector_engine.serving_jit_cache_size`` so the zero-recompile
+    contract covers the spmd dispatch path too."""
+    n = 0
+    for f in _SPMD_PROGRAMS:
+        try:
+            n += int(f._cache_size())
+        except AttributeError:
+            pass
+    return n
+
+
+class SpmdFanout:
+    """One jitted shard_map dispatch driving every partition's search.
+
+    Where ``batched_fanout_search`` loops partitions on the host — one
+    device call per partition — this stacks the live partitions' provider
+    arrays along a leading axis, shards that axis over ``mesh``, and runs
+    the bucketed graph search + full-precision re-rank for ALL partitions
+    as one data-parallel program (inner `vmap` over the device-local
+    partitions). The per-partition merge stays on the host, in original
+    partition order, so results are **bit-identical** to the serial loop:
+    LUTs come from the very same host jitted calls (`DiskANNIndex._luts`
+    on the bucket-padded queries), and a vmapped while_loop carries each
+    lane's state through `select` once finished — the same numerics the
+    serial path runs, just batched one level higher.
+
+    Caching discipline (the zero-recompile contract):
+      * programs are cached per (L_eff, k, k', W, metric) closure — shape
+        changes (bucket, partition count, V) hit jit's own cache, and
+        every program registers in `spmd_jit_cache_size`;
+      * the stacked arrays are cached per partition-set and invalidated
+        by each partition's ``providers.write_count`` epoch (plus count /
+        schema-count / medoid, which can move without a provider write).
+
+    Partitions whose graph isn't built (or that are empty) fall back to
+    the host ``search_batch`` — the same call the serial path makes — and
+    their results interleave back at their original merge position. RU is
+    metered on each partition's own meter/governor exactly like
+    ``PhysicalPartition.search_batch`` (work-based counters, per-lane).
+    """
+
+    def __init__(self, mesh: jax.sharding.Mesh):
+        self.mesh = mesh
+        self.n_devices = int(np.prod(mesh.devices.shape))
+        self._programs: dict = {}
+        self._stacks: dict = {}
+
+    # -- stacked provider arrays (cached per write epoch) ----------------
+    def _stacked(self, prog_parts, P_pad: int) -> dict:
+        key = tuple(id(p) for p in prog_parts) + (P_pad,)
+        stamp = tuple(
+            (p.providers.write_count, p.index.count, len(p.index.schemas),
+             int(p.index.medoid))
+            for p in prog_parts
+        )
+        hit = self._stacks.get(key)
+        if hit is not None and hit[0] == stamp:
+            return hit[1]
+        # pad the partition axis to the mesh size by repeating partition 0
+        # (its results are computed and discarded — never merged)
+        all_p = list(prog_parts) + [prog_parts[0]] * (P_pad - len(prog_parts))
+        mats = [p.index.pv.materialize(p.index.ctx) for p in all_p]
+        arrs = dict(
+            neighbors=jnp.stack([m[0] for m in mats]),
+            codes=jnp.stack([m[1] for m in mats]),
+            versions=jnp.stack([m[2] for m in mats]),
+            live=jnp.stack([m[3] for m in mats]),
+            vectors=jnp.stack([m[4] for m in mats]),
+            # x64 is disabled: the doc-id table rides along as int32 and
+            # widens back to int64 on the host
+            slot_to_doc=jnp.asarray(np.stack(
+                [p.index.slot_to_doc for p in all_p]).astype(np.int32)),
+            medoid=jnp.asarray([p.index.medoid for p in all_p], jnp.int32),
+        )
+        self._stacks[key] = (stamp, arrs)
+        return arrs
+
+    # -- the jitted program (cached per static closure) ------------------
+    def _program(self, L_eff: int, k: int, kprime: int, W: int, metric: str):
+        key = (L_eff, k, kprime, W, metric)
+        fn = self._programs.get(key)
+        if fn is not None:
+            return fn
+        axes = tuple(self.mesh.axis_names)
+        sh, rep = P(axes), P()
+
+        def local(neighbors, codes, versions, live, vectors, s2d, medoid,
+                  luts, queries):
+            # block shapes: (P_local, ...) per device; queries replicated
+            def one_partition(nb, cd, vr, lv, vc, sd, md, lt):
+                res = smod.batch_greedy_search(
+                    nb, cd, vr, lv, lt, md, L=L_eff, beam_width=W
+                )
+                ids, dists = fmod.rerank(
+                    queries, res.beam_ids[:, :kprime], vc, k=k, metric=metric
+                )
+                doc = jnp.where(ids >= 0, sd[jnp.maximum(ids, 0)], -1)
+                return doc, dists, res.n_hops, res.n_exp, res.n_cmps
+
+            return jax.vmap(one_partition)(
+                neighbors, codes, versions, live, vectors, s2d, medoid, luts
+            )
+
+        fn = jax.jit(compat.shard_map(
+            local, self.mesh,
+            in_specs=(sh,) * 8 + (rep,),
+            out_specs=(sh,) * 5,
+            check=False,
+        ))
+        self._programs[key] = fn
+        _SPMD_PROGRAMS.append(fn)
+        return fn
+
+    # -- the engine entry point ------------------------------------------
+    def search(
+        self,
+        partitions,  # Sequence[PhysicalPartition]
+        queries: np.ndarray,  # (B, D)
+        k: int,
+        L: Optional[int] = None,
+        batch_buckets: tuple[int, ...] = smod.BATCH_BUCKETS,
+        beam_width: Optional[int] = None,
+        rerank_multiplier: float = fmod.QUANTIZED_LIST_MULTIPLIER,
+    ) -> tuple[np.ndarray, np.ndarray, dict]:
+        """Drop-in for ``batched_fanout_search``: same (ids, dists, info)."""
+        parts = list(partitions)
+        queries = np.asarray(queries, np.float32)
+        B, k = len(queries), int(k)
+        n = len(parts)
+        prog_idx = [i for i, p in enumerate(parts)
+                    if p.index._graph_built and p.num_docs > 0]
+        in_prog = set(prog_idx)
+
+        ids_by: list = [None] * n
+        d_by: list = [None] * n
+        rus: list = [0.0] * n
+        stats_by: list = [None] * n
+        lat_by: list = [0.0] * n
+
+        # host fallback — identical to the serial loop's search_batch call
+        W = int(beam_width) if beam_width is not None else None
+        for i, p in enumerate(parts):
+            if i in in_prog:
+                continue
+            kw: dict = dict(pad_to_bucket=True, batch_buckets=batch_buckets)
+            if W is not None:
+                kw["beam_width"] = W
+            ids, dists, ru, stats = p.search_batch(queries, k, L, **kw)
+            ids_by[i], d_by[i], rus[i], stats_by[i] = ids, dists, ru, stats
+            lat_by[i] = p.providers.meter.latency_ms(
+                counters_for_latency(stats))
+
+        if prog_idx:
+            prog_parts = [parts[i] for i in prog_idx]
+            idx0 = prog_parts[0].index
+            W_eff = W or idx0.cfg.beam_width
+            L_req = int(L or idx0.cfg.L_search)
+            kprime = max(k, int(round(rerank_multiplier * k)))
+            L_eff = max(L_req, kprime)
+            bucket = smod.next_bucket(B, batch_buckets)
+            padded = smod.pad_batch_np(queries, bucket)
+
+            # per-partition LUTs from the SAME host jitted calls the serial
+            # path makes (identical inputs → identical tables, bit for bit);
+            # the V axis pads to the widest schema set by repeating the last
+            # table — padded tables are never selected (versions < V_p)
+            luts = [p.index._luts(padded) for p in prog_parts]
+            V_max = max(lt.shape[1] for lt in luts)
+            luts = [
+                lt if lt.shape[1] == V_max else jnp.concatenate(
+                    [lt, jnp.broadcast_to(
+                        lt[:, -1:],
+                        (lt.shape[0], V_max - lt.shape[1]) + lt.shape[2:])],
+                    axis=1)
+                for lt in luts
+            ]
+            P_n = len(prog_parts)
+            P_pad = -(-P_n // self.n_devices) * self.n_devices
+            luts_st = jnp.stack(list(luts) + [luts[0]] * (P_pad - P_n))
+            arrs = self._stacked(prog_parts, P_pad)
+            fn = self._program(L_eff, k, kprime, int(W_eff),
+                               idx0.cfg.metric)
+            doc, dist, hops, exps, cmps = fn(
+                arrs["neighbors"], arrs["codes"], arrs["versions"],
+                arrs["live"], arrs["vectors"], arrs["slot_to_doc"],
+                arrs["medoid"], luts_st, jnp.asarray(padded),
+            )
+            doc, dist = np.asarray(doc), np.asarray(dist)
+            hops, exps, cmps = (np.asarray(hops), np.asarray(exps),
+                                np.asarray(cmps))
+            for j, i in enumerate(prog_idx):
+                p = parts[i]
+                st = QueryStats(
+                    hops=float(hops[j, :B].mean()),
+                    cmps=float(cmps[j, :B].mean()),
+                    expansions=float(exps[j, :B].mean()),
+                    full_reads=float(kprime),
+                    plan="graph-spmd",
+                )
+                # meter exactly like PhysicalPartition.search_batch: the
+                # work ran on the mesh, but it is THIS partition's work
+                pv = p.providers
+                pv.begin_op()
+                pv.op += counters_for_ru(st, lanes=B)
+                ru, _ = pv.end_op()
+                p.governor.request(ru)
+                ids_by[i] = doc[j, :B].astype(np.int64)
+                d_by[i] = dist[j, :B]
+                rus[i], stats_by[i] = ru, st
+                lat_by[i] = pv.meter.latency_ms(counters_for_latency(st))
+
+        ids, dists = merge_topk(ids_by, d_by, k)
+        info = dict(
+            ru_per_partition=rus,
+            ru_total=float(np.sum(rus)),
+            stats_per_partition=stats_by,
+            server_latencies_ms=lat_by,
+            service_latency_ms=float(np.max(lat_by)) if lat_by else 0.0,
+            spmd=dict(partitions_in_program=len(prog_idx),
+                      mesh_devices=self.n_devices),
+        )
+        return ids, dists, info

@@ -29,15 +29,19 @@ class ReplicaState:
     alive: bool = True
     applied_lsn: int = 0
     reads: int = 0  # queries served by this replica (read spreading)
+    down_since_s: float = 0.0  # when the replica died (re-probe cooldown)
 
 
 class ReplicaSet:
-    def __init__(self, partition, num_replicas: int = 4):
+    def __init__(self, partition, num_replicas: int = 4,
+                 reprobe_after_s: float = 5.0):
         self.partition = partition  # PhysicalPartition with StoreProviderSet
         self.replicas = [ReplicaState(i) for i in range(num_replicas)]
         self.primary = 0
         self.lsn = 0
         self.failovers = 0
+        self.reprobe_after_s = float(reprobe_after_s)
+        self.recoveries = 0
         self._rr = 0
 
     # ------------------------------------------------------------------
@@ -78,16 +82,37 @@ class ReplicaSet:
         replica.reads += 1
         return self.partition.search(queries, k, L, **kw)
 
+    def note_read(self, rid: int):
+        """Attribute one externally-routed read (the engine's lane plane
+        routes reads itself; this keeps per-replica counts observable)."""
+        self.replicas[rid].reads += 1
+
     def read_counts(self) -> dict[int, int]:
         return {r.rid: r.reads for r in self.replicas}
 
     # ------------------------------------------------------------------
     # failures
     # ------------------------------------------------------------------
-    def kill(self, rid: int):
-        self.replicas[rid].alive = False
+    def kill(self, rid: int, now_s: float = 0.0):
+        r = self.replicas[rid]
+        if not r.alive:
+            return
+        r.alive = False
+        r.down_since_s = float(now_s)
         if rid == self.primary:
             self.failover()
+
+    def probe_dead(self, now_s: float) -> list[int]:
+        """Re-probe dead replicas whose cooldown has elapsed and bring
+        them back through the real rebuild path — a dead replica is not
+        dead forever. Returns the rids revived this probe."""
+        revived = []
+        for r in self.replicas:
+            if not r.alive and now_s - r.down_since_s >= self.reprobe_after_s:
+                self.rebuild(r.rid)
+                self.recoveries += 1
+                revived.append(r.rid)
+        return revived
 
     def failover(self):
         """Promote the most-caught-up healthy secondary."""

@@ -69,6 +69,11 @@ class EngineMetrics:
     # batching shows up here as mean_hops dropping ~W×
     hops_weighted: float = 0.0
     hops_lanes: int = 0
+    # dispatch-plane telemetry: hedged duplicates bill RU; lane faults
+    # and recoveries mirror the executor's health machine
+    hedges: int = 0
+    hedges_won: int = 0
+    hedge_ru_total: float = 0.0
     started_s: float = 0.0
     latency_ms: Histogram = dataclasses.field(default_factory=Histogram)
     wait_ms: Histogram = dataclasses.field(default_factory=Histogram)
@@ -85,6 +90,11 @@ class EngineMetrics:
         self.ru_query_total += ru
         self.occupancy.observe(true_lanes / max(bucket, 1))
         self.jit_cache_trajectory.append(int(cache_size))
+
+    def note_hedge(self, won: bool, hedge_ru: float):
+        self.hedges += 1
+        self.hedges_won += int(won)
+        self.hedge_ru_total += hedge_ru
 
     def note_hops(self, mean_hops: float, true_lanes: int):
         self.hops_weighted += mean_hops * true_lanes
@@ -114,6 +124,10 @@ class EngineMetrics:
             p95_ms=self.latency_ms.percentile(95),
             p99_ms=self.latency_ms.percentile(99),
             mean_wait_ms=self.wait_ms.mean(),
+            p95_wait_ms=self.wait_ms.percentile(95),
+            hedges=self.hedges,
+            hedges_won=self.hedges_won,
+            hedge_ru_total=self.hedge_ru_total,
             mean_hops=self.hops_weighted / max(self.hops_lanes, 1),
             mean_occupancy=self.occupancy.mean(),
             pad_fraction=self.lanes_padded / max(self.lanes_total, 1),

@@ -14,6 +14,12 @@ serving layer in front of the collection/partition stack:
     traffic triggers zero recompiles; the jit cache size is exported as a
     metric precisely because compile stalls are the tail-latency failure
     mode this design removes;
+  * **dispatch plane** — micro-batches route through a ``LaneExecutor``
+    (`serve.executor`): N replica lanes running concurrently under the
+    simulated clock (``dispatch_mode="replica"``), straggler hedging with
+    RU billed for duplicates, lane-health → replica routing; or ONE jitted
+    shard_map program driving every partition's search as a data-parallel
+    SPMD dispatch (``dispatch_mode="spmd"``, `partition.fanout.SpmdFanout`);
   * **RU-based admission control** — each tenant owns a
     ``store.ru.ResourceGovernor``; over-budget tenants get a 429-style
     `Throttled` rejection with a retry-after instead of degrading everyone
@@ -41,24 +47,27 @@ import numpy as np
 
 from ..core import flat as fmod
 from ..core import search as smod
-from ..partition.fanout import (batched_fanout_search,
+from ..partition.fanout import (SpmdFanout, batched_fanout_search,
                                 batched_filtered_fanout_search,
-                                compile_partition_filter, merge_topk)
+                                compile_partition_filter, merge_topk,
+                                spmd_jit_cache_size)
 from ..store.ru import OpCounters, ResourceGovernor
+from .executor import LaneExecutor
 from .metrics import EngineMetrics, SimClock
 from .predicate import Predicate
 
 
 def serving_jit_cache_size() -> int:
     """Total compiled-signature count across the serving hot path (graph
-    search + re-rank + brute force). Flat trajectory == zero recompiles."""
+    search + re-rank + brute force + the spmd fan-out program). Flat
+    trajectory == zero recompiles."""
     n = max(smod.jit_cache_size(), 0)
     for f in (fmod.brute_force, fmod.rerank):
         try:
             n += int(f._cache_size())
         except AttributeError:
             pass
-    return n
+    return n + spmd_jit_cache_size()
 
 
 class Throttled(Exception):
@@ -88,6 +97,14 @@ class EngineConfig:
     ingest_chunk: int = 64  # docs per interleaved ingest mini-batch
     ingest_interleave: int = 1  # ingest chunks drained per query batch
     ingest_ms_per_ru: float = 0.4  # §4.4: ~65 RU, ~25 ms per insert
+    # ---- dispatch plane (serve.executor) ----
+    dispatch_mode: str = "serial"  # serial | replica | spmd
+    lanes: int = 4  # replica lanes when dispatch_mode == "replica"
+    hedge_at_ms: Optional[float] = None  # straggler hedge threshold (replica)
+    straggler_p: float = 0.0  # per-dispatch straggler probability
+    straggler_factor: float = 4.0  # service-time inflation when straggling
+    lane_reprobe_after_s: float = 5.0  # down-lane re-probe cooldown
+    dispatch_seed: int = 0  # lane-plane RNG seed (straggler draws)
 
 
 @dataclasses.dataclass
@@ -134,12 +151,40 @@ class VectorServeEngine:
         cfg: EngineConfig = EngineConfig(),
         clock: Optional[SimClock] = None,
         resolver: Optional[Callable[[Any], Sequence]] = None,
+        replica_sets: Optional[Sequence] = None,  # partition.ReplicaSet list
+        spmd_mesh=None,  # jax Mesh for dispatch_mode="spmd"; None → default
     ):
         self.collection = collection
         self.cfg = cfg
         self.clock = clock or SimClock()
         # shard_key → partition list (the service wires tenant collections in)
         self._resolve = resolver or (lambda _sk: collection.partitions)
+        # lane health mirrors into replica health: a down lane kills its
+        # replica in every set (reads stop routing there), a re-probed lane
+        # rebuilds it through the real snapshot+WAL recovery path
+        self.replica_sets = list(replica_sets) if replica_sets else []
+        on_down = on_up = on_read = None
+        if self.replica_sets:
+            def on_down(lane: int, now_s: float):
+                for rs in self.replica_sets:
+                    rs.kill(lane % len(rs.replicas), now_s=now_s)
+
+            def on_up(lane: int, now_s: float):
+                for rs in self.replica_sets:
+                    rs.probe_dead(now_s)
+
+            def on_read(lane: int):
+                for rs in self.replica_sets:
+                    rs.note_read(lane % len(rs.replicas))
+        self.executor = LaneExecutor(
+            self.clock, lanes=cfg.lanes, mode=cfg.dispatch_mode,
+            hedge_at_ms=cfg.hedge_at_ms, straggler_p=cfg.straggler_p,
+            straggler_factor=cfg.straggler_factor,
+            reprobe_after_s=cfg.lane_reprobe_after_s, seed=cfg.dispatch_seed,
+            on_lane_down=on_down, on_lane_up=on_up, on_lane_read=on_read,
+        )
+        self._spmd_mesh = spmd_mesh
+        self._spmd_fanout: Optional[SpmdFanout] = None
         self.queue: list[ServeRequest] = []
         self._ingest_q: deque[tuple[str, Callable[[], float], int]] = deque()
         self.responses: dict[int, ServeResponse] = {}
@@ -270,6 +315,9 @@ class VectorServeEngine:
         while self.queue or self._ingest_q:
             if not self.pump(force=False) and self.queue:
                 self.pump(force=True)
+        # replica lanes are future-scheduled: bring the clock to the lane
+        # horizon so drained == everything actually finished
+        self.executor.quiesce()
         return self.responses
 
     def query_sync(self, req: ServeRequest) -> ServeResponse:
@@ -317,10 +365,11 @@ class VectorServeEngine:
     def _dispatch_chunk(self, key: tuple, batch: list[ServeRequest]):
         shard_key, k, L, exact, _pred_key = key
         predicate = batch[0].predicate  # whole group shares one canonical key
-        dispatch_s = self.clock.now()
         queries = np.stack([r.vector for r in batch]).astype(np.float32)
 
-        try:
+        def run():
+            # the plan body: the executor decides WHERE/WHEN this service
+            # time is spent, never what runs
             partitions = self._resolve(shard_key)
             if exact:
                 ids, dists, ru_total, service_ms, plan = self._exact_scan(
@@ -334,6 +383,14 @@ class VectorServeEngine:
                         beam_width=self.cfg.beam_width,
                     )
                     plan = info["plan"]
+                elif self.cfg.dispatch_mode == "spmd":
+                    ids, dists, info = self._spmd().search(
+                        partitions, queries, k, L=L,
+                        batch_buckets=self.cfg.batch_buckets,
+                        beam_width=self.cfg.beam_width,
+                        rerank_multiplier=self.cfg.search_list_multiplier,
+                    )
+                    plan = "graph-spmd"
                 else:
                     ids, dists, info = batched_fanout_search(
                         partitions, queries, k, L=L,
@@ -348,6 +405,11 @@ class VectorServeEngine:
                     self.metrics.note_hops(
                         float(np.mean([s.hops for s in pstats])), len(batch)
                     )
+            service_ms += self.cfg.dispatch_overhead_ms
+            return (ids, dists, plan), service_ms, ru_total
+
+        try:
+            out = self.executor.dispatch(run)
         except Exception:
             # hand the admission reservations back — a failed dispatch must
             # not bleed the tenants' budgets
@@ -355,9 +417,11 @@ class VectorServeEngine:
                 self.tenant_governor(r.tenant).refund(r.reserved_ru)
             raise
 
-        service_ms += self.cfg.dispatch_overhead_ms
-        self.clock.advance(service_ms / 1000.0)
-        done_s = self.clock.now()
+        ids, dists, plan = out.payload
+        ru_total = out.ru + out.hedge_ru  # hedged duplicates bill in full
+        service_ms = (out.end_s - out.start_s) * 1000.0
+        if out.hedged:
+            self.metrics.note_hedge(out.hedge_won, out.hedge_ru)
 
         B = len(batch)
         bucket = smod.next_bucket(B, self.cfg.batch_buckets)
@@ -365,8 +429,11 @@ class VectorServeEngine:
                                 serving_jit_cache_size())
         ru_q = ru_total / B
         for i, r in enumerate(batch):
-            wait_ms = (dispatch_s - r.arrival_s) * 1000.0
-            lat_ms = (done_s - r.arrival_s) * 1000.0
+            # start_s includes lane queue wait: under replica dispatch a
+            # batch that finds every lane busy pays that wait in its
+            # latency percentiles, exactly like a real executor pool
+            wait_ms = (out.start_s - r.arrival_s) * 1000.0
+            lat_ms = (out.end_s - r.arrival_s) * 1000.0
             self.responses[r.rid] = ServeResponse(
                 rid=r.rid, status=200, ids=ids[i], dists=dists[i], ru=ru_q,
                 plan=plan, latency_ms=lat_ms, wait_ms=wait_ms, batch_size=B,
@@ -375,6 +442,15 @@ class VectorServeEngine:
             self.metrics.latency_ms.observe(lat_ms)
             self.metrics.wait_ms.observe(wait_ms)
             self._settle(r.tenant, ru_q, r.reserved_ru)
+
+    def _spmd(self) -> SpmdFanout:
+        if self._spmd_fanout is None:
+            mesh = self._spmd_mesh
+            if mesh is None:
+                from ..launch.mesh import make_serve_mesh
+                mesh = make_serve_mesh()
+            self._spmd_fanout = SpmdFanout(mesh)
+        return self._spmd_fanout
 
     def _exact_scan(self, partitions, queries: np.ndarray, k: int,
                     predicate: Optional[Predicate] = None):
@@ -446,26 +522,40 @@ class VectorServeEngine:
         rejected, reserved = self._admit(tenant)
         if rejected is not None:
             raise Throttled(tenant, rejected.retry_after_s)
-        try:
+        submit_s = self.clock.now()
+
+        def run():
             out = fn()
+            ids, dists, ru, service_ms = out[:4]
+            body_plan = out[4] if len(out) > 4 else plan
+            return ((ids, dists, body_plan),
+                    service_ms + self.cfg.dispatch_overhead_ms, ru)
+
+        # page bodies schedule their own multi-cursor refill rounds on the
+        # lanes (paged_fanout_search), so they must not also book a lane
+        try:
+            out = self.executor.dispatch(run, occupy=not is_page)
         except Exception:
             # e.g. a user filter predicate raising: refund the reservation
             self.tenant_governor(tenant).refund(reserved)
             raise
-        ids, dists, ru, service_ms = out[:4]
-        if len(out) > 4:
-            plan = out[4]
-        service_ms += self.cfg.dispatch_overhead_ms
-        self.clock.advance(service_ms / 1000.0)
+        ids, dists, plan_out = out.payload
+        ru = out.ru + out.hedge_ru
+        if out.hedged:
+            self.metrics.note_hedge(out.hedge_won, out.hedge_ru)
+        service_ms = (out.end_s - out.start_s) * 1000.0
+        wait_ms = (out.start_s - submit_s) * 1000.0
+        lat_ms = (out.end_s - submit_s) * 1000.0
         self._settle(tenant, ru, reserved)
         self.metrics.queries_ok += 1
         if is_page:
             self.metrics.pages_served += 1
-        self.metrics.latency_ms.observe(service_ms)
-        self.metrics.wait_ms.observe(0.0)
+        self.metrics.latency_ms.observe(lat_ms)
+        self.metrics.wait_ms.observe(wait_ms)
         self.metrics.note_batch(1, 1, service_ms, ru, serving_jit_cache_size())
         return ServeResponse(rid=-1, status=200, ids=ids, dists=dists, ru=ru,
-                             plan=plan, latency_ms=service_ms, batch_size=1)
+                             plan=plan_out, latency_ms=lat_ms, wait_ms=wait_ms,
+                             batch_size=1)
 
     # ------------------------------------------------------------------
     # interleaved ingest
@@ -499,6 +589,7 @@ class VectorServeEngine:
         snap = self.metrics.snapshot(self.clock.now())
         snap["queue_depth"] = len(self.queue)
         snap["ingest_backlog"] = self.ingest_backlog
+        snap["dispatch"] = self.executor.snapshot()
         snap["tenants"] = {
             t: dict(available_ru=g.available, consumed_ru=g.consumed,
                     throttle_events=g.throttle_events)

@@ -12,15 +12,18 @@ Since the serving PR this class is a thin façade over
 the engine (admission control, micro-batching, metrics, simulated clock),
 and ingest rides the engine's interleaved mini-batch queue. The service
 keeps what needs the document store — property-term extraction at ingest,
-the deprecated callable-filter shim, tenant routing, and pagination state.
+tenant routing, and pagination state. The engine's dispatch plane
+(``EngineConfig.dispatch_mode``) gets this service's replica sets wired
+in, so lane health routes reads and dead replicas re-probe.
 
 This is the host-side service; the device-parallel path for the same
-operation is `repro.partition.fanout.distributed_search_fn`.
+operation is `repro.partition.fanout.SpmdFanout` (the engine's
+``dispatch_mode="spmd"``).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional, Sequence
+from typing import Any, Optional, Sequence
 
 import numpy as np
 
@@ -28,30 +31,24 @@ from ..core import GraphConfig
 from ..core.graph import bitmap_words
 from ..core.index import PAGE_BACKUP_CAP
 from ..partition import Collection, CollectionConfig, ReplicaSet
-from ..partition.fanout import (compile_partition_filter, merge_topk,
+from ..partition.fanout import (compile_partition_filter,
                                 paged_fanout_fingerprint, paged_fanout_search,
                                 start_paged_fanout)
-from ..store.ru import counters_for_latency, counters_for_ru
 from .continuation import (ContinuationError, decode_continuation,
                            encode_continuation)
 from .predicate import Predicate, property_items
 from .vector_engine import EngineConfig, ServeRequest, Throttled, VectorServeEngine
-
-# plan-string marker for the deprecated callable-filter path (opaque Python
-# predicates can't batch, can't cache, and rebuild an O(capacity) bitmap by
-# scanning the doc store per partition per query — pass a serve.F Predicate)
-LEGACY_FILTER_PLAN = "filtered-legacy"
 
 
 @dataclasses.dataclass
 class VectorQuery:
     vector: np.ndarray
     k: int = 10
-    # WHERE clause: a declarative ``serve.predicate.Predicate`` (compiled
-    # to index-term bitmaps; batches through the engine) — or, DEPRECATED,
-    # an opaque ``Callable[[dict], bool]`` served by the legacy host path
-    # (plan strings report ``filtered-legacy[...]``).
-    filter: Optional[Predicate | Callable[[dict], bool]] = None
+    # WHERE clause: a declarative ``serve.predicate.Predicate``, compiled
+    # to index-term bitmaps and batched through the engine. Opaque
+    # callables are rejected with ``ValueError`` — the legacy host path
+    # (``filtered-legacy[...]`` plans) is gone.
+    filter: Optional[Predicate] = None
     search_list_multiplier: float = 5.0  # searchListSizeMultiplier
     exact: bool = False  # VectorDistance(..., true) → brute force
     shard_key: Any = None  # route to a sharded-DiskANN tenant index
@@ -99,7 +96,8 @@ class VectorCollectionService:
         # sharded DiskANN: tenant value → per-tenant collection
         self._tenant_collections: dict[Any, Collection] = {}
         self.engine = VectorServeEngine(
-            self.collection, cfg=engine_cfg, resolver=self._partitions_for
+            self.collection, cfg=engine_cfg, resolver=self._partitions_for,
+            replica_sets=self.replica_sets,
         )
 
     def _partitions_for(self, shard_key: Any):
@@ -216,28 +214,22 @@ class VectorCollectionService:
         """Route one query through the serving engine. Raises ``Throttled``
         when the tenant is over its RU budget (the 429 path).
 
-        ``q.filter`` routing: a declarative ``Predicate`` flows through the
-        engine's micro-batcher (same-predicate queries coalesce and share
-        one compiled bitmap per partition — plan ``filtered-batched[...]``
-        / ``exact-filtered``); a legacy callable falls back to the host
-        path (plan ``filtered-legacy[...]`` — deprecated, scans the doc
-        store per partition per query)."""
+        ``q.filter`` must be a declarative ``Predicate`` (or None): it
+        flows through the engine's micro-batcher (same-predicate queries
+        coalesce and share one compiled bitmap per partition — plan
+        ``filtered-batched[...]`` / ``exact-filtered``). Opaque callables
+        raise ``ValueError``: the legacy host path that served them
+        (O(capacity) doc-store scan per partition per query, plans
+        ``filtered-legacy[...]``) is retired."""
         qv = np.asarray(q.vector, np.float32)
 
         if q.filter is not None and not isinstance(q.filter, Predicate):
-            # DEPRECATED opaque-callable path; exact + filter brute-forces
-            # over the filtered subset (never silently drops the filter)
-            if q.exact:
-                resp = self.engine.execute_host(
-                    q.tenant, "exact-filtered-legacy",
-                    lambda: self._run_exact_filtered_legacy(q, qv),
-                )
-            else:
-                resp = self.engine.execute_host(
-                    q.tenant, "filtered", lambda: self._run_filtered(q, qv)
-                )
-            return QueryResult(resp.ids, resp.dists, resp.ru, resp.plan,
-                               latency_ms=resp.latency_ms)
+            raise ValueError(
+                "callable filters are no longer supported (the legacy "
+                "filtered-legacy[...] host path is retired); build a "
+                "declarative predicate with repro.serve.F, e.g. "
+                "F.eq('category', 3)"
+            )
 
         L = max(q.k, int(round(q.search_list_multiplier * q.k)))
         rid = self.engine.next_rid()
@@ -249,84 +241,6 @@ class VectorCollectionService:
             raise Throttled(q.tenant, resp.retry_after_s)
         return QueryResult(resp.ids, resp.dists, resp.ru, resp.plan,
                            latency_ms=resp.latency_ms)
-
-    # -- DEPRECATED callable-filter shim ---------------------------------
-    def _legacy_filter_mask(self, p, fn) -> np.ndarray:
-        """THE legacy shim: the only place an opaque callable filter is
-        ever evaluated (``scripts/check.sh`` lints serve/ for stray
-        ``.filter(...)`` calls). Rebuilds an O(capacity) slot mask by
-        scanning the partition's documents — everything the declarative
-        Predicate path exists to avoid."""
-        mask = np.zeros(p.index.cfg.capacity, bool)
-        for doc, slot in p.index.doc_to_slot.items():
-            if doc in self.docs and fn(self.docs[doc]):
-                mask[slot] = True
-        return mask
-
-    def _run_filtered(self, q: VectorQuery, qv: np.ndarray):
-        """Legacy callable-filter plan body (needs the doc store for the
-        predicate → bitmap conversion; executed under the engine's
-        accounting).
-
-        Partitions with no documents — and partitions where the filter
-        matches nothing — are skipped outright: no search runs for them.
-        The reported plan aggregates every partition actually searched
-        (e.g. ``filtered-legacy[beta×3]``), carrying the deprecation
-        marker."""
-        target = self._partitions_for(q.shard_key)
-        ids_l, d_l, ru, lat_ms = [], [], 0.0, 0.0
-        plans: dict[str, int] = {}
-        for p in target:
-            if p.num_docs == 0:
-                continue
-            mask = self._legacy_filter_mask(p, q.filter)
-            if not mask.any():
-                continue
-            ids, dists, stats = p.index.filtered_search(qv[None, :], q.k, mask)
-            ids_l.append(ids)
-            d_l.append(dists)
-            plans[stats.plan] = plans.get(stats.plan, 0) + 1
-            # RU charges the work done; latency sees the round-structured
-            # critical path — same split as the batched fanout path
-            ru += p.providers.meter.ru(counters_for_ru(stats))
-            lat_ms = max(lat_ms, p.providers.meter.latency_ms(
-                counters_for_latency(stats)))
-        if not ids_l:  # nothing matched anywhere
-            return (np.full((q.k,), -1, np.int64),
-                    np.full((q.k,), np.inf, np.float32),
-                    0.0, 0.0, f"{LEGACY_FILTER_PLAN}[empty]")
-        ids, dists = merge_topk(ids_l, d_l, q.k)
-        plan = LEGACY_FILTER_PLAN + "[" + ",".join(
-            f"{name}×{count}" for name, count in sorted(plans.items())
-        ) + "]"
-        return ids[0], dists[0], ru, lat_ms, plan
-
-    def _run_exact_filtered_legacy(self, q: VectorQuery, qv: np.ndarray):
-        """Exact + callable filter: brute force over the filtered subset
-        (the filter is applied, not ignored — a WHERE clause with
-        ``VectorDistance(..., true)`` must constrain the flat scan)."""
-        target = self._partitions_for(q.shard_key)
-        ids_l, d_l, ru, lat_ms = [], [], 0.0, 0.0
-        for p in target:
-            if p.num_docs == 0:
-                continue
-            mask = self._legacy_filter_mask(p, q.filter)
-            if not mask.any():
-                continue
-            ids, dists, ru_p, stats = p.filtered_search_batch(
-                qv[None, :], q.k, mask, mode="brute"
-            )
-            ids_l.append(ids)
-            d_l.append(dists)
-            ru += ru_p
-            lat_ms = max(lat_ms, p.providers.meter.latency_ms(
-                counters_for_latency(stats)))
-        if not ids_l:
-            return (np.full((q.k,), -1, np.int64),
-                    np.full((q.k,), np.inf, np.float32),
-                    0.0, 0.0, f"exact-{LEGACY_FILTER_PLAN}[empty]")
-        ids, dists = merge_topk(ids_l, d_l, q.k)
-        return ids[0], dists[0], ru, lat_ms, f"exact-{LEGACY_FILTER_PLAN}"
 
     # ------------------------------------------------------------------
     # pagination / continuation tokens (§3.5 "Continuations")
@@ -430,9 +344,15 @@ class VectorCollectionService:
                         cur.exhausted = True
                         cur.state = None
             holder["pstate"] = pstate
+            # under a multi-lane dispatch plane, each refill round's
+            # per-partition fetches schedule onto executor lanes (round
+            # makespan, not sum); serial keeps the legacy max-of-sums
+            # accounting byte-identical
+            lane_exec = (self.engine.executor
+                         if self.engine.cfg.dispatch_mode != "serial" else None)
             ids, dists, info = paged_fanout_search(
                 target, qv, pstate, page_size, beam_width=W,
-                slot_filters=slot_filters,
+                slot_filters=slot_filters, executor=lane_exec,
             )
             return (ids, dists, info["ru_total"] + compile_ru,
                     info["service_latency_ms"],

@@ -1,0 +1,310 @@
+"""Dispatch plane: LaneExecutor lanes/hedging/faults, mode parity
+(serial == replica == spmd bit-for-bit), queue wait in percentiles,
+zero recompiles under spmd, lane-scheduled page refills."""
+import numpy as np
+import pytest
+
+from repro.core import GraphConfig
+from repro.partition.fanout import (paged_fanout_search, spmd_jit_cache_size,
+                                    start_paged_fanout)
+from repro.serve import EngineConfig, VectorCollectionService, VectorServeEngine
+from repro.serve.executor import DISPATCH_MODES, LaneExecutor
+from repro.serve.metrics import SimClock
+
+from conftest import clustered_data
+
+
+@pytest.fixture(scope="module")
+def service():
+    """≥3 physical partitions so spmd actually shards a partition axis."""
+    rng = np.random.RandomState(21)
+    N, D = 360, 16
+    g = GraphConfig(capacity=220, R=12, M=8, L_build=32, L_search=32,
+                    bootstrap_sample=32, refine_sample=10**9, batch_size=40)
+    svc = VectorCollectionService(dim=D, graph=g,
+                                  max_vectors_per_partition=200,
+                                  initial_partitions=3)
+    data = clustered_data(rng, N, D)
+    svc.upsert([{"id": i, "category": i % 5} for i in range(N)], data)
+    return svc, data
+
+
+def _run_batch(engine, queries, k=5):
+    rids = [engine.submit_query(q, k=k) for q in queries]
+    engine.drain()
+    resps = [engine.pop_response(r) for r in rids]
+    assert all(r.status == 200 for r in resps)
+    ids = np.stack([r.ids for r in resps])
+    dists = np.stack([r.dists for r in resps])
+    return ids, dists, resps
+
+
+# ---------------------------------------------------------------------------
+# mode parity — the acceptance bar: spmd is BIT-identical to serial
+# ---------------------------------------------------------------------------
+
+
+def test_dispatch_mode_parity_bit_identical(service):
+    svc, data = service
+    rng = np.random.RandomState(5)
+    queries = data[rng.choice(len(data), 8, replace=False)] + 0.01
+    results = {}
+    for mode in DISPATCH_MODES:
+        eng = VectorServeEngine(
+            svc.collection, cfg=EngineConfig(dispatch_mode=mode, lanes=4)
+        )
+        results[mode] = _run_batch(eng, queries)
+    ids0, d0, resps0 = results["serial"]
+    assert resps0[0].plan == "graph"
+    for mode in ("replica", "spmd"):
+        ids, dists, resps = results[mode]
+        np.testing.assert_array_equal(ids, ids0)
+        # bit-identical, not approximately equal: same numerics, same order
+        np.testing.assert_array_equal(dists, d0)
+        assert resps[0].ru == pytest.approx(resps0[0].ru)
+    assert results["spmd"][2][0].plan == "graph-spmd"
+
+
+def test_invalid_dispatch_mode_rejected():
+    with pytest.raises(ValueError, match="dispatch mode"):
+        LaneExecutor(SimClock(), mode="warp")
+
+
+# ---------------------------------------------------------------------------
+# hedging — duplicates bill RU, they are never free
+# ---------------------------------------------------------------------------
+
+
+def test_hedged_dispatch_bills_duplicate_ru(service):
+    svc, data = service
+    q = data[7] + 0.01
+    base = VectorServeEngine(svc.collection, cfg=EngineConfig())
+    _, _, (r0,) = _run_batch(base, q[None])
+
+    eng = VectorServeEngine(
+        svc.collection,
+        cfg=EngineConfig(dispatch_mode="replica", lanes=2, hedge_at_ms=1e-4,
+                         straggler_p=1.0, straggler_factor=4.0),
+    )
+    _, _, (r1,) = _run_batch(eng, q[None])
+    assert eng.metrics.hedges == 1
+    assert eng.metrics.hedge_ru_total == pytest.approx(r0.ru)
+    assert r1.ru == pytest.approx(2 * r0.ru)  # primary + duplicate
+    assert eng.executor.snapshot()["hedges"] == 1
+    # same straggler on ONE lane: no second lane, no hedge, no extra RU
+    solo = VectorServeEngine(
+        svc.collection,
+        cfg=EngineConfig(dispatch_mode="replica", lanes=1, hedge_at_ms=1e-4,
+                         straggler_p=1.0),
+    )
+    _, _, (r2,) = _run_batch(solo, q[None])
+    assert solo.metrics.hedges == 0 and r2.ru == pytest.approx(r0.ru)
+
+
+# ---------------------------------------------------------------------------
+# lane health — faults retry (work runs once), refunds, re-probe revival
+# ---------------------------------------------------------------------------
+
+
+def test_lane_fault_retries_on_another_lane_exactly_once():
+    ex = LaneExecutor(SimClock(), lanes=3, mode="replica")
+    ex.inject_fault(0)
+    calls = []
+    out = ex.dispatch(lambda: (calls.append(1) or "ok", 2.0, 1.5))
+    assert calls == [1], "retried work must execute exactly once"
+    assert out.payload == "ok" and out.lane == 1
+    assert out.retried_lanes == (0,)
+    assert ex.lanes[0].down and ex.faults == 1 and ex.retries == 1
+
+
+def test_all_lanes_down_raises_then_reprobe_revives():
+    clock = SimClock()
+    ex = LaneExecutor(clock, lanes=2, mode="replica", reprobe_after_s=5.0)
+    for lane in (0, 1):
+        ex.inject_fault(lane)
+    with pytest.raises(RuntimeError, match="no healthy lanes"):
+        ex.dispatch(lambda: ("x", 1.0, 1.0))
+    assert all(ln.down for ln in ex.lanes)
+    clock.advance(6.0)  # past the cooldown: lanes re-probe on next dispatch
+    out = ex.dispatch(lambda: ("y", 1.0, 1.0))
+    assert out.payload == "y" and ex.recoveries == 2
+    assert not any(ln.down for ln in ex.lanes)
+
+
+def test_failed_dispatch_refunds_tenant_budget(service):
+    svc, data = service
+    eng = VectorServeEngine(
+        svc.collection, cfg=EngineConfig(dispatch_mode="replica", lanes=2)
+    )
+    gov = eng.tenant_governor("default")
+    before = gov.available
+    for lane in (0, 1):
+        eng.executor.inject_fault(lane)
+    rid = eng.submit_query(data[3] + 0.01, k=5)
+    with pytest.raises(RuntimeError, match="no healthy lanes"):
+        eng.drain()
+    assert rid not in eng.responses
+    assert gov.available == pytest.approx(before), \
+        "a failed dispatch must hand its admission reservation back"
+    # the plane heals: past the cooldown the same engine serves again
+    eng.clock.advance(6.0)
+    _, _, (resp,) = _run_batch(eng, (data[3] + 0.01)[None])
+    assert resp.status == 200 and eng.executor.recoveries == 2
+
+
+def test_lane_health_mirrors_into_replica_sets(service):
+    """An engine wired with replica sets kills the faulted lane's replica
+    (reads stop routing there) and revives it through the re-probe →
+    snapshot+WAL rebuild path."""
+    svc, data = service
+    eng = VectorServeEngine(
+        svc.collection,
+        cfg=EngineConfig(dispatch_mode="replica", lanes=4,
+                         lane_reprobe_after_s=5.0),
+        replica_sets=svc.replica_sets,
+    )
+    reads0 = [rs.read_counts().copy() for rs in svc.replica_sets]
+    eng.executor.inject_fault(0)  # fires when lane 0 is selected
+    _run_batch(eng, (data[11] + 0.01)[None])
+    for rs in svc.replica_sets:
+        assert not rs.replicas[0].alive, "lane 0 down → replica 0 down"
+        assert rs.primary != 0, "killing the primary replica fails over"
+    # the retry lane's reads were attributed to its replica
+    assert any(
+        sum(rs.read_counts().values()) > sum(r0.values())
+        for rs, r0 in zip(svc.replica_sets, reads0)
+    )
+    eng.clock.advance(6.0)
+    _run_batch(eng, (data[12] + 0.01)[None])
+    for rs in svc.replica_sets:
+        assert rs.replicas[0].alive and rs.recoveries >= 1
+
+
+# ---------------------------------------------------------------------------
+# queue wait — lanes overlap work; one lane queues it
+# ---------------------------------------------------------------------------
+
+
+def test_replica_lanes_cut_queue_wait_and_tail():
+    """Same burst, same arrivals: 4 lanes drain it concurrently, 1 lane
+    serializes it — queue wait must show up in the percentiles."""
+    rng = np.random.RandomState(13)
+    n, d = 400, 16
+    g = GraphConfig(capacity=n + 200, R=12, M=8, L_build=32, L_search=32,
+                    bootstrap_sample=64, refine_sample=10**9, batch_size=64)
+    waits, p99s = {}, {}
+    for lanes in (1, 4):
+        svc = VectorCollectionService(
+            dim=d, graph=g, max_vectors_per_partition=n + 100,
+            engine_cfg=EngineConfig(dispatch_mode="replica", lanes=lanes,
+                                    max_batch=1),
+        )
+        data = clustered_data(np.random.RandomState(13), n, d)
+        svc.upsert([{"id": i} for i in range(n)], data)
+        eng = svc.engine
+        qs = data[rng.choice(n, 8, replace=False)] + 0.01
+        t0 = eng.clock.now()
+        for q in qs:  # a burst: everyone arrives at once
+            eng.submit_query(q, k=5, arrival_s=t0)
+        eng.drain()
+        snap = eng.snapshot()
+        waits[lanes] = snap["mean_wait_ms"]
+        p99s[lanes] = snap["p99_ms"]
+        assert snap["dispatch"]["lanes"] == lanes
+        rng = np.random.RandomState(13)  # identical picks for both runs
+    assert waits[1] > 0, "a serialized burst must queue"
+    assert waits[4] < waits[1] / 2
+    assert p99s[4] < p99s[1]
+
+
+# ---------------------------------------------------------------------------
+# spmd — one compile per (bucket, signature); steady state stays flat
+# ---------------------------------------------------------------------------
+
+
+def test_spmd_zero_recompiles_steady_state(service):
+    svc, data = service
+    eng = VectorServeEngine(
+        svc.collection, cfg=EngineConfig(dispatch_mode="spmd", max_batch=8)
+    )
+    rng = np.random.RandomState(31)
+
+    def burst(B):
+        qs = data[rng.choice(len(data), B, replace=False)] + 0.01
+        _run_batch(eng, qs, k=5)
+
+    burst(8)  # bucket 8: first dispatch compiles
+    after_first = spmd_jit_cache_size()
+    assert after_first >= 1
+    traj0 = len(eng.metrics.jit_cache_trajectory)
+    for _ in range(3):
+        burst(8)
+    burst(5)  # pads into the same bucket — same signature
+    traj = eng.metrics.jit_cache_trajectory
+    assert traj[-1] == traj[traj0 - 1], f"recompiled in steady state: {traj}"
+    assert spmd_jit_cache_size() == after_first
+    burst(1)  # bucket 1: ONE new signature, then flat again
+    grown = spmd_jit_cache_size()
+    assert grown == after_first + 1
+    burst(1)
+    assert spmd_jit_cache_size() == grown
+
+
+# ---------------------------------------------------------------------------
+# multi-cursor page refills through the executor
+# ---------------------------------------------------------------------------
+
+
+def test_paged_refill_lane_scheduling_parity_and_makespan(service):
+    svc, data = service
+    parts = svc.collection.partitions
+    assert len(parts) >= 3
+    q = data[44] + 0.01
+
+    def run_pages(executor):
+        pstate = start_paged_fanout(parts, q)
+        ids_all, service = [], 0.0
+        for _ in range(3):
+            ids, _, info = paged_fanout_search(parts, q, pstate, 10,
+                                               executor=executor)
+            ids_all.append(ids)
+            service += info["service_latency_ms"]
+            assert info["lane_scheduled"] == (executor is not None)
+        return np.concatenate(ids_all), service
+
+    ids_legacy, svc_legacy = run_pages(None)
+    ids_1, svc_1 = run_pages(LaneExecutor(SimClock(), lanes=1, mode="replica"))
+    ids_n, svc_n = run_pages(
+        LaneExecutor(SimClock(), lanes=len(parts), mode="replica"))
+    # the fetch sequence never depends on the executor: same pages
+    np.testing.assert_array_equal(ids_1, ids_legacy)
+    np.testing.assert_array_equal(ids_n, ids_legacy)
+    # one lane serializes the host loop; ≥P lanes pay the max fetch per
+    # round. Legacy accounting (max of per-partition sums) sits between.
+    assert svc_1 >= svc_legacy > 0
+    assert svc_n <= svc_1
+
+
+def test_query_page_uses_engine_lanes(service):
+    svc, data = service
+    from repro.serve import VectorQuery
+    lane_svc = VectorCollectionService(
+        dim=16,
+        graph=GraphConfig(capacity=220, R=12, M=8, L_build=32, L_search=32,
+                          bootstrap_sample=32, refine_sample=10**9,
+                          batch_size=40),
+        max_vectors_per_partition=200, initial_partitions=3,
+        engine_cfg=EngineConfig(dispatch_mode="replica", lanes=4),
+    )
+    lane_svc.upsert([{"id": i} for i in range(360)], data)
+    res = lane_svc.query_page(VectorQuery(vector=data[5] + 0.01), None,
+                              page_size=8)
+    assert (res.ids >= 0).sum() == 8
+    disp = lane_svc.engine.snapshot()["dispatch"]
+    assert disp["mode"] == "replica"
+    assert sum(disp["lane_dispatches"]) >= 3, \
+        "page refills must book one dispatch per partition fetch"
+    # serial engines keep the legacy single-executor accounting
+    res2 = svc.query_page(VectorQuery(vector=data[5] + 0.01), None,
+                          page_size=8)
+    np.testing.assert_array_equal(res2.ids, res.ids)

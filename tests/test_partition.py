@@ -137,3 +137,23 @@ def test_quorum_loss_raises():
         rs.kill(rid)
     with pytest.raises(RuntimeError):
         rs.insert([1], [1], np.zeros((1, 16), np.float32))
+
+
+def test_dead_replica_reprobe_revives_after_cooldown():
+    """A dead replica is not dead forever: once its re-probe cooldown
+    elapses, probe_dead() rebuilds it through the real snapshot+WAL
+    recovery path and it serves reads again."""
+    col, data = _collection(np.random.RandomState(18), n=200, max_per=400, parts=1)
+    rs = ReplicaSet(col.partitions[0], num_replicas=4, reprobe_after_s=5.0)
+    rs.insert([10_001], [77], data[:1])
+    rs.kill(2, now_s=100.0)
+    rs.kill(2, now_s=101.0)  # double-kill is a no-op (no double failover)
+    assert not rs.replicas[2].alive and rs.failovers == 0
+    assert rs.probe_dead(now_s=103.0) == []  # cooldown not elapsed
+    assert rs.probe_dead(now_s=105.0) == [2]
+    assert rs.replicas[2].alive and rs.recoveries == 1
+    assert rs.replicas[2].applied_lsn == rs.lsn  # caught up via recovery
+    before = rs.read_counts()[2]
+    for _ in range(4):
+        rs.search(data[:1], 3)
+    assert rs.read_counts()[2] > before, "revived replica serves reads"

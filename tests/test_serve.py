@@ -6,7 +6,7 @@ import pytest
 
 from repro.core import GraphConfig
 from repro.core import recall as rec
-from repro.serve import VectorCollectionService, VectorQuery
+from repro.serve import F, VectorCollectionService, VectorQuery
 
 from conftest import clustered_data
 
@@ -46,9 +46,13 @@ def test_exact_query_is_ground_truth(service):
 def test_filtered_query(service):
     svc, data = service
     q = data[10] + 0.01
-    res = svc.query(VectorQuery(vector=q, k=5, filter=lambda d: d["category"] == 3))
+    res = svc.query(VectorQuery(vector=q, k=5, filter=F.eq("category", 3)))
     for i in res.ids[res.ids >= 0]:
         assert svc.docs[int(i)]["category"] == 3
+    # opaque callables no longer ride a legacy host path — they raise
+    with pytest.raises(ValueError, match="callable"):
+        svc.query(VectorQuery(vector=q, k=5,
+                              filter=lambda d: d["category"] == 3))
 
 
 def test_sharded_tenant_query(service):
@@ -190,23 +194,24 @@ def test_rekeyed_upsert_moves_document(multi_service):
 def test_filtered_plan_aggregates_over_partitions(multi_service):
     """Regression: the filtered path reported only the LAST partition's
     plan; it must aggregate every partition actually searched, and skip
-    partitions where the predicate matches nothing. Since the predicate
-    API redesign, callable filters ride the deprecated legacy host path
-    and their plans carry the ``filtered-legacy`` marker."""
+    partitions where the predicate matches nothing. Predicates flow
+    through the batched engine path (``filtered-batched[...]`` plans)."""
     svc, data = multi_service
     res = svc.query(VectorQuery(vector=data[30] + 0.01, k=5,
-                                filter=lambda d: d["category"] == 2))
-    assert res.plan.startswith("filtered-legacy[") and "×" in res.plan
+                                filter=F.eq("category", 2)))
+    assert res.plan.startswith("filtered-batched[") and "×" in res.plan
     counts = sum(int(part.split("×")[1]) for part in
-                 res.plan[len("filtered-legacy["):-1].split(","))
+                 res.plan[len("filtered-batched["):-1].split(","))
     assert 1 <= counts <= len(svc.collection.partitions)
     for i in res.ids[res.ids >= 0]:
         assert svc.docs[int(i)]["category"] == 2
 
     nothing = svc.query(VectorQuery(vector=data[30] + 0.01, k=5,
-                                    filter=lambda d: False))
-    assert nothing.plan == "filtered-legacy[empty]"
-    assert (nothing.ids < 0).all() and nothing.ru == 0.0
+                                    filter=F.eq("category", 999)))
+    assert nothing.plan == "filtered-batched[empty]"
+    assert (nothing.ids < 0).all()
+    # a no-match query still bills its posting lookups — but no search ran
+    assert 0.0 < nothing.ru < 1.0
 
 
 def test_serve_engine_decode():
