@@ -29,6 +29,15 @@ later scale PRs (caching, replication, multi-backend) are judged against:
     partition, broadcast through the bucketed search) vs the same N
     queries dispatched one at a time (floors: ≥ 2× wall speedup,
     ``filtered-batched[...]`` plans, recall parity ≤ 0.01);
+  * ``observability`` — the request-lifecycle trace plane (ISSUE 7):
+    measured wall overhead of tracing on identical offered traffic
+    (floor: ≤ 5%), per-trace schema + stage-sum-equals-latency
+    validation for every admitted query, the aggregate stage-breakdown /
+    end-to-end-latency reconciliation, exporter round-trips, and the
+    per-dispatch-mode (serial/replica/spmd, hedges injected) trace and
+    per-tenant RU-attribution reconciliation against governor
+    settlements (plus a per-rate ``stages`` breakdown on each ``loads``
+    row);
   * ``dispatch`` — the dispatch-plane sweep (ISSUE 6): saturation QPS per
     replica-lane count at an offered rate that swamps one lane (floors:
     lanes=2 ≥ 1.5×, lanes=4 ≥ 2× the serial engine at recall Δ ≤ 0.01,
@@ -48,7 +57,6 @@ import numpy as np
 from repro.core import GraphConfig
 from repro.serve import (EngineConfig, ServeRequest, VectorCollectionService,
                          VectorQuery, VectorServeEngine, poisson_arrivals)
-from repro.serve.metrics import EngineMetrics
 from repro.serve.vector_engine import serving_jit_cache_size
 
 from . import bench_filtered
@@ -70,12 +78,42 @@ def build_service(n: int, dim: int, seed: int = 0, max_batch: int = 16):
 
 
 def warmup(eng: VectorServeEngine, data: np.ndarray, k: int = 10):
-    """Compile every bucket signature the run can hit, then reset metrics."""
+    """Compile every bucket signature the run can hit, then reset metrics
+    (aggregates, labeled registry AND flight recorder — measured runs
+    start from a clean observability epoch)."""
     for B in (1, 2, 4, 8, 16):
         for q in data[:B]:
             eng.submit_query(q, k=k)
         eng.drain()
-    eng.metrics = EngineMetrics(started_s=eng.clock.now())
+    eng.reset_metrics()
+
+
+def _drive(eng: VectorServeEngine, queries: np.ndarray,
+           arrivals: np.ndarray, k: int = 10):
+    """The arrival-driven event loop shared by every load measurement."""
+    i, n = 0, len(queries)
+    while i < n or eng.queue:
+        now = eng.clock.now()
+        # admit every arrival that has already happened (under overload the
+        # backlog is what lets micro-batches fill to max_batch)
+        while i < n and arrivals[i] <= now:
+            eng.submit_query(queries[i], k=k, arrival_s=float(arrivals[i]))
+            i += 1
+        if eng.pump():
+            continue
+        # idle: jump to the next event — an arrival or a max-wait deadline
+        events = []
+        if i < n:
+            events.append(float(arrivals[i]))
+        if eng.queue:
+            events.append(min(r.arrival_s for r in eng.queue)
+                          + eng.cfg.max_wait_s)
+        if not events:
+            break
+        eng.clock.advance(max(min(events) - now, 0.0))
+        if min(events) <= now:  # deadline already passed → force the flush
+            eng.pump(force=True)
+    eng.drain()
 
 
 def run_load(collection, data: np.ndarray, queries: np.ndarray,
@@ -106,29 +144,16 @@ def run_load(collection, data: np.ndarray, queries: np.ndarray,
                                     t0=eng.clock.now())
     else:
         arrivals = eng.clock.now() + np.cumsum(arrival_gaps)
-    i, n = 0, len(queries)
-    while i < n or eng.queue:
-        now = eng.clock.now()
-        # admit every arrival that has already happened (under overload the
-        # backlog is what lets micro-batches fill to max_batch)
-        while i < n and arrivals[i] <= now:
-            eng.submit_query(queries[i], k=10, arrival_s=float(arrivals[i]))
-            i += 1
-        if eng.pump():
-            continue
-        # idle: jump to the next event — an arrival or a max-wait deadline
-        events = []
-        if i < n:
-            events.append(float(arrivals[i]))
-        if eng.queue:
-            events.append(min(r.arrival_s for r in eng.queue) + cfg.max_wait_s)
-        if not events:
-            break
-        eng.clock.advance(max(min(events) - now, 0.0))
-        if min(events) <= now:  # deadline already passed → force the flush
-            eng.pump(force=True)
-    eng.drain()
+    _drive(eng, queries, arrivals)
     snap = eng.snapshot()
+    # per-stage latency breakdown at this offered-rate point (ISSUE 7):
+    # queue [arrival → lane start] + lane [lane start → done] tile every
+    # request, so the stage means sum to the end-to-end mean latency
+    stages = {
+        s: dict(mean_ms=row["mean_ms"], p95_ms=row["p95_ms"],
+                total_ms=row["total_ms"])
+        for s, row in snap["observability"]["stages"].items()
+    }
     return dict(
         offered_qps=rate_qps,
         qps=snap["qps"],
@@ -138,6 +163,7 @@ def run_load(collection, data: np.ndarray, queries: np.ndarray,
         mean_occupancy=snap["mean_occupancy"],
         pad_fraction=snap["pad_fraction"],
         mean_hops=snap["mean_hops"],
+        stages=stages,
         recompiles=serving_jit_cache_size() - cache0,
     )
 
@@ -391,6 +417,176 @@ def measure_pagination(dim: int = 24, parts: int = 3, page_size: int = 10,
     )
 
 
+def measure_observability(svc: VectorCollectionService, data: np.ndarray,
+                          queries: np.ndarray, rate_qps: float,
+                          rng: np.random.RandomState) -> dict:
+    """ISSUE 7 tentpole measurement: the request-lifecycle trace plane.
+
+    * ``overhead_frac`` — wall-clock cost of tracing: the identical
+      arrival-driven loop (same arrival realization, same queries) runs
+      traced-off vs traced-on, interleaved best-of-5 so a slow host phase
+      hits both sides (gate: ≤ 5%);
+    * every admitted query in the traced run must yield a schema-valid
+      trace whose root-span stage times sum to its recorded end-to-end
+      latency (``validate_trace_record`` enforces the tiling invariant);
+    * the per-stage aggregate (queue + lane) must reconcile with the
+      end-to-end latency histogram — the breakdown accounts for ALL the
+      latency, not a sampled sketch of it;
+    * exporters round-trip: the JSONL dump re-validates line by line and
+      the Prometheus text exposition carries the registry families.
+    """
+    import tempfile
+
+    from repro.serve import validate_trace_record
+
+    gaps = rng.exponential(1.0 / rate_qps, size=len(queries))
+
+    def build(trace: bool) -> VectorServeEngine:
+        cfg = EngineConfig(max_batch=16, beam_width=4,
+                           admission_control=False, trace=trace,
+                           flight_recorder=4 * len(queries))
+        eng = VectorServeEngine(svc.collection, cfg=cfg)
+        warmup(eng, data)
+        return eng
+
+    repeats = 5
+    t_off = t_on = float("inf")
+    eng_on = None
+    for _ in range(repeats):
+        e0 = build(False)
+        arr = e0.clock.now() + np.cumsum(gaps)
+        w0 = time.perf_counter()
+        _drive(e0, queries, arr)
+        t_off = min(t_off, time.perf_counter() - w0)
+
+        eng_on = build(True)
+        arr = eng_on.clock.now() + np.cumsum(gaps)
+        w0 = time.perf_counter()
+        _drive(eng_on, queries, arr)
+        t_on = min(t_on, time.perf_counter() - w0)
+    overhead = t_on / t_off - 1.0
+
+    recs = [r for r in eng_on.tracer.recorder.records()
+            if r["kind"] == "query"]
+    for rec in recs:
+        validate_trace_record(rec)  # raises on any schema/tiling breach
+    max_stage_err = max(
+        abs(sum(s["dur_ms"] for s in rec["spans"] if s["parent"] == -1)
+            - rec["latency_ms"])
+        for rec in recs
+    )
+
+    # aggregate reconciliation: Σ stage histograms == Σ end-to-end latency
+    lat_total = eng_on.metrics.latency_ms.sum
+    stage_total = sum(h.sum for _, h in eng_on.obs.series("serve_stage_ms"))
+    agg_err = abs(stage_total - lat_total) / max(lat_total, 1e-9)
+
+    with tempfile.TemporaryDirectory() as td:
+        tp = Path(td) / "traces.jsonl"
+        n_dumped = eng_on.tracer.dump_jsonl(tp)
+        lines = tp.read_text().splitlines()
+        for line in lines:
+            validate_trace_record(json.loads(line))
+        prom = eng_on.obs.to_prometheus_text()
+
+    return dict(
+        n_queries=len(queries),
+        traced_wall_s=t_on,
+        untraced_wall_s=t_off,
+        overhead_frac=overhead,
+        traces=len(recs),
+        queries_ok=int(eng_on.metrics.queries_ok),
+        schema_valid=True,  # validate_trace_record raised otherwise
+        max_stage_err_ms=max_stage_err,
+        stage_vs_latency_rel_err=agg_err,
+        jsonl_records=n_dumped,
+        jsonl_lines_valid=len(lines) == n_dumped,
+        prometheus_families=sorted(
+            {ln.split()[2] for ln in prom.splitlines()
+             if ln.startswith("# TYPE")}
+        ),
+        tracer=eng_on.tracer.stats(),
+    )
+
+
+def measure_trace_modes(dim: int = 24, parts: int = 3, n: int = 420,
+                        n_queries: int = 24, seed: int = 23) -> dict:
+    """Acceptance sweep: every admitted query in EVERY dispatch mode
+    (serial / replica / spmd) produces a trace whose child-span stage
+    times sum to its recorded end-to-end latency, with per-tenant RU
+    attribution exactly reconciling with governor settlements. The
+    replica run injects stragglers + hedging so hedge/retry spans and
+    the one-latency-sample-per-request guarantee are exercised on the
+    anomalous path, not just the happy path."""
+    from repro.serve import validate_trace_record
+
+    rng = np.random.RandomState(seed)
+    g = GraphConfig(capacity=240, R=16, M=8, L_build=32, L_search=32,
+                    bootstrap_sample=48, refine_sample=10**9, batch_size=64)
+    svc = VectorCollectionService(dim=dim, graph=g,
+                                  max_vectors_per_partition=200,
+                                  initial_partitions=parts)
+    data = clustered(rng, n, dim)
+    svc.upsert([{"id": i} for i in range(n)], data,
+               partition_keys=[f"pk{i}" for i in range(n)])
+    queries = data[rng.choice(n, n_queries, replace=False)] + 0.01
+
+    rows = {}
+    for mode in ("serial", "replica", "spmd"):
+        hedged = mode == "replica"
+        cfg = EngineConfig(
+            dispatch_mode=mode, lanes=4,
+            admission_control=True, tenant_ru_s=10**9,  # attribute, not limit
+            flight_recorder=4 * n_queries,
+            straggler_p=0.35 if hedged else 0.0,
+            hedge_at_ms=0.5 if hedged else None,
+            dispatch_seed=7,
+        )
+        eng = VectorServeEngine(svc.collection, cfg=cfg)
+        rids = [eng.submit_query(q, k=10, tenant=f"t{i % 2}")
+                for i, q in enumerate(queries)]
+        eng.drain()
+        resps = [eng.pop_response(r) for r in rids]
+        assert all(r is not None and r.status == 200 for r in resps)
+
+        recs = [r for r in eng.tracer.recorder.records()
+                if r["kind"] == "query"]
+        for rec in recs:
+            validate_trace_record(rec)
+        max_err = max(
+            abs(sum(s["dur_ms"] for s in rec["spans"] if s["parent"] == -1)
+                - rec["latency_ms"])
+            for rec in recs
+        )
+        # cost attribution: the labeled registry's per-tenant RU (query +
+        # page + hedge surcharge) must equal what that tenant's governor
+        # actually settled — reservation, reconciliation and EMA included
+        ru_err = 0.0
+        for t, gov in eng.tenants.items():
+            attributed = sum(
+                eng.obs.total("serve_ru_total", tenant=str(t), op=op)
+                for op in ("query", "page", "hedge")
+            )
+            ru_err = max(ru_err,
+                         abs(attributed - gov.consumed)
+                         / max(abs(gov.consumed), 1e-9))
+        m = eng.metrics
+        rows[mode] = dict(
+            admitted=n_queries,
+            traces=len(recs),
+            latency_samples=int(m.latency_ms.count),
+            hedges=int(m.hedges),
+            max_stage_err_ms=max_err,
+            ru_attribution_rel_err=ru_err,
+            reconciled=bool(
+                len(recs) == n_queries
+                and m.latency_ms.count == n_queries
+                and ru_err <= 1e-9
+            ),
+        )
+    return dict(n_queries=n_queries, partitions=parts, modes=rows)
+
+
 def run(n: int = 3000, dim: int = 32, n_queries: int = 384,
         rates=(200.0, 800.0, 2500.0), seed: int = 0) -> dict:
     # n_queries is deliberately ~24 full micro-batches: short overload runs
@@ -419,6 +615,10 @@ def run(n: int = 3000, dim: int = 32, n_queries: int = 384,
     filtered = bench_filtered.run_batched(
         n=max(n // 2, 1200), dim=dim, n_queries=max(n_queries // 8, 32)
     )
+    # ISSUE 7: trace overhead + per-trace/aggregate reconciliation at the
+    # top sweep rate, and the per-dispatch-mode acceptance sweep
+    obs = measure_observability(svc, data, queries, rates[-1], rng)
+    obs["modes"] = measure_trace_modes()
 
     out = dict(
         config=dict(n=n, dim=dim, n_queries=n_queries, rates=list(rates),
@@ -430,6 +630,7 @@ def run(n: int = 3000, dim: int = 32, n_queries: int = 384,
         mixed_ingest=mixed,
         pagination=paged,
         filtered=filtered,
+        observability=obs,
     )
     return out
 
@@ -494,6 +695,23 @@ def main(smoke: bool = False):
           f"({ft['unbatched_qps_wall']:.1f} → {ft['batched_qps_wall']:.1f} q/s), "
           f"plan {ft['plan_batched']}, recall Δ={ft['recall_delta']:.3f}, "
           f"occupancy {ft['mean_batch_size']:.1f}")
+    ob = out["observability"]
+    print(f"  observability: trace overhead {100 * ob['overhead_frac']:+.1f}% "
+          f"wall, {ob['traces']}/{ob['queries_ok']} traces retained+valid, "
+          f"max stage err {ob['max_stage_err_ms']:.2e}ms, "
+          f"stage/latency rel err {ob['stage_vs_latency_rel_err']:.2e}")
+    for row in out["loads"]:
+        shares = " ".join(
+            f"{s}={st['mean_ms']:.2f}ms" for s, st in row["stages"].items())
+        print(f"  stage breakdown @offered={row['offered_qps']:.0f}/s: "
+              f"{shares} (e2e mean "
+              f"{sum(st['mean_ms'] for st in row['stages'].values()):.2f}ms)")
+    for m, r in ob["modes"]["modes"].items():
+        print(f"  trace reconciliation {m}: {r['traces']}/{r['admitted']} "
+              f"traces, {r['latency_samples']} latency samples, "
+              f"hedges={r['hedges']}, stage err {r['max_stage_err_ms']:.2e}ms, "
+              f"RU attribution err {r['ru_attribution_rel_err']:.2e}, "
+              f"reconciled={r['reconciled']}")
 
     # acceptance floors (ISSUE 2 + ISSUE 3): the batch-16 speedup and the
     # zero-recompile contract gate at BOTH scales (scripts/check.sh --smoke
@@ -551,6 +769,22 @@ def main(smoke: bool = False):
         assert r["recompiles_steady"] == 0, \
             f"{m} recompiled in steady state"
     assert par["modes"]["spmd"]["plan"] == "graph-spmd"
+    # ISSUE 7: the trace plane must be effectively free when off vs on —
+    # ≤ 5% wall overhead on identical offered traffic — and every admitted
+    # query must produce a schema-valid trace whose stage times sum to its
+    # end-to-end latency, in every dispatch mode, with per-tenant RU
+    # attribution exactly matching governor settlements
+    assert ob["overhead_frac"] <= 0.05, \
+        f"trace overhead {100 * ob['overhead_frac']:.1f}% > 5%"
+    assert ob["traces"] == ob["queries_ok"], \
+        f"retained {ob['traces']} traces for {ob['queries_ok']} queries"
+    assert ob["schema_valid"] and ob["jsonl_lines_valid"]
+    assert ob["stage_vs_latency_rel_err"] <= 1e-6, \
+        f"stage breakdown diverged from e2e latency: {ob}"
+    for m, r in ob["modes"]["modes"].items():
+        assert r["reconciled"], f"{m} trace reconciliation failed: {r}"
+    assert ob["modes"]["modes"]["replica"]["hedges"] > 0, \
+        "replica reconciliation run must exercise the hedge path"
     return out
 
 

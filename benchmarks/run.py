@@ -36,7 +36,13 @@ def main() -> None:
                       f"p99@{out['loads'][-1]['offered_qps']:.0f}qps="
                       f"{out['loads'][-1]['p99_ms']:.1f}ms;"
                       f"page_ru_min={out['pagination']['ru_min_page']:.1f};"
-                      f"scaling_gain={out['dispatch']['scaling_gain_lanes4']:.2f}x")),
+                      f"scaling_gain={out['dispatch']['scaling_gain_lanes4']:.2f}x;"
+                      f"trace_ovh={100 * out['observability']['overhead_frac']:.1f}%;"
+                      f"stage_breakdown="
+                      + "|".join(
+                          f"{s}:{st['mean_ms']:.2f}ms"
+                          for s, st in sorted(
+                              out["loads"][-1]["stages"].items())))),
         ("fig6_query_vs_L", bench_query.main,
          lambda out: (f"recall@L100={out[0][-1]['recall']:.3f};"
                       f"p50={out[0][-1]['p50_ms']:.2f}ms;"

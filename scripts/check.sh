@@ -95,4 +95,71 @@ if [[ "$SMOKE" == 1 ]]; then
   python -m benchmarks.bench_serve --smoke
   python -m benchmarks.bench_query --smoke
   python -m benchmarks.bench_filtered --smoke
+
+  echo "== observability gate: trace overhead + exported schema =="
+  python - <<'EOF'
+# Re-gate the smoke run's observability section from the artifact (the
+# bench asserts these too — this keeps the gate honest even if the bench
+# file's asserts are edited) and re-validate an actual JSONL trace export.
+import json
+import sys
+import tempfile
+from pathlib import Path
+
+out = json.loads(Path("BENCH_serve.smoke.json").read_text())
+ob = out["observability"]
+fails = []
+if ob["overhead_frac"] > 0.05:
+    fails.append(f"trace overhead {100 * ob['overhead_frac']:.1f}% > 5%")
+if ob["traces"] != ob["queries_ok"]:
+    fails.append(f"{ob['traces']} traces for {ob['queries_ok']} queries")
+if not (ob["schema_valid"] and ob["jsonl_lines_valid"]):
+    fails.append("trace schema validation failed")
+if ob["stage_vs_latency_rel_err"] > 1e-6:
+    fails.append("stage breakdown does not reconcile with e2e latency")
+for mode, row in ob["modes"]["modes"].items():
+    if not row["reconciled"]:
+        fails.append(f"dispatch mode {mode} failed trace reconciliation")
+
+# live export check: a tiny traced run dumped to JSONL must re-validate
+# line by line through the schema contract
+import numpy as np
+from repro.core import GraphConfig
+from repro.serve import (EngineConfig, VectorCollectionService,
+                         validate_trace_record)
+
+rng = np.random.RandomState(0)
+svc = VectorCollectionService(
+    dim=16,
+    graph=GraphConfig(capacity=300, R=16, M=8, L_build=32, L_search=32,
+                      bootstrap_sample=48, refine_sample=10**9),
+    max_vectors_per_partition=300,
+    engine_cfg=EngineConfig(admission_control=False),
+)
+vecs = rng.randn(128, 16).astype(np.float32)
+svc.upsert([{"id": i} for i in range(128)], vecs)
+for i in range(20):
+    svc.engine.submit_query(vecs[i] + 0.01, k=5)
+svc.engine.drain()
+with tempfile.TemporaryDirectory() as td:
+    p = Path(td) / "traces.jsonl"
+    n = svc.engine.tracer.dump_jsonl(p)
+    lines = p.read_text().splitlines()
+    if len(lines) != n or n < 20:
+        fails.append(f"JSONL export wrote {len(lines)} lines for {n} records")
+    for line in lines:
+        try:
+            validate_trace_record(json.loads(line))
+        except ValueError as e:
+            fails.append(f"exported trace line invalid: {e}")
+            break
+
+if fails:
+    for f in fails:
+        print(f"OBSERVABILITY GATE FAIL: {f}")
+    sys.exit(1)
+print(f"ok: trace overhead {100 * ob['overhead_frac']:+.1f}% (≤ +5%), "
+      f"{ob['traces']} traces schema-valid, stage/latency rel err "
+      f"{ob['stage_vs_latency_rel_err']:.1e}, all dispatch modes reconciled")
+EOF
 fi

@@ -34,6 +34,12 @@ def main(argv=None):
                          "(shard_map partition fan-out)")
     ap.add_argument("--lanes", type=int, default=4,
                     help="replica lanes for --dispatch-mode=replica")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="dump retained request traces as JSON lines "
+                         "(flight recorder + anomaly ring)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="dump the labeled metrics registry in Prometheus "
+                         "text exposition format")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -68,6 +74,14 @@ def main(argv=None):
     tokens = sum(len(v) for v in out.values())
     print(f"served {len(out)} requests, {tokens} tokens in {dt:.1f}s "
           f"({tokens/dt:.1f} tok/s on CPU), search RU total {total_ru:.0f}")
+
+    if args.trace_out:
+        n = svc.engine.tracer.dump_jsonl(args.trace_out)
+        print(f"wrote {n} trace records to {args.trace_out}")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            f.write(svc.engine.obs.to_prometheus_text())
+        print(f"wrote metrics exposition to {args.metrics_out}")
 
 
 if __name__ == "__main__":

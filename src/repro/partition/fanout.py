@@ -149,6 +149,7 @@ def batched_fanout_search(
         )
     ids, dists = merge_topk(ids_l, dists_l, k)
     info = dict(
+        partition_ids=[int(p.pid) for p in partitions],
         ru_per_partition=rus,
         ru_total=float(np.sum(rus)),
         stats_per_partition=stats_l,
@@ -203,6 +204,7 @@ def batched_filtered_fanout_search(
         kw["beam_width"] = beam_width
     B, k = len(queries), int(k)
     ids_l, dists_l, rus, lat_ms, stats_l = [], [], [], [], []
+    pids: list[int] = []
     plans: dict[str, int] = {}
     compile_ru = 0.0
     for p in partitions:
@@ -222,6 +224,7 @@ def batched_filtered_fanout_search(
         dists_l.append(dists)
         rus.append(ru)
         stats_l.append(stats)
+        pids.append(int(p.pid))
         plans[stats.plan] = plans.get(stats.plan, 0) + 1
         lat_ms.append(
             p.providers.meter.latency_ms(counters_for_latency(stats))
@@ -236,6 +239,7 @@ def batched_filtered_fanout_search(
             f"{name}×{count}" for name, count in sorted(plans.items())
         ) + "]"
     info = dict(
+        partition_ids=pids,
         ru_per_partition=rus,
         ru_total=(float(np.sum(rus)) if rus else 0.0) + compile_ru,
         stats_per_partition=stats_l,
@@ -243,6 +247,7 @@ def batched_filtered_fanout_search(
         service_latency_ms=float(np.max(lat_ms)) if lat_ms else 0.0,
         plan=plan,
         partitions_searched=len(ids_l),
+        compile_ru=compile_ru,
     )
     return ids, dists, info
 
@@ -400,9 +405,13 @@ def paged_fanout_search(
     lat_sums = [0.0] * n
     fetches = 0
     exec_ms = 0.0
+    rounds = 0
+    # per-fetch log (round, pid, ru, lat_ms) — the trace plane turns each
+    # entry into one child span of the page's lane span
+    fetch_log: list[dict] = []
 
     def _refill_rounds():
-        nonlocal fetches, exec_ms
+        nonlocal fetches, exec_ms, rounds
         while True:
             round_lats = []
             for i, (p, cur) in enumerate(zip(partitions, pstate.cursors)):
@@ -416,9 +425,12 @@ def paged_fanout_search(
                 rus[i] += ru
                 lat_sums[i] += lat
                 round_lats.append(lat)
+                fetch_log.append(dict(round=rounds, pid=int(p.pid),
+                                      ru=float(ru), lat_ms=float(lat)))
                 fetches += 1
             if not round_lats:
                 return
+            rounds += 1
             if executor is not None:
                 # schedule_round returns the lane horizon relative to the
                 # (unmoving) clock; successive rounds stack on the same
@@ -451,9 +463,11 @@ def paged_fanout_search(
         partitions[0].providers.meter.cfg.ru_per_page_request if n else 0.0
     )
     info = dict(
+        partition_ids=[int(p.pid) for p in partitions],
         ru_per_partition=rus,
         request_ru=request_ru,
         ru_total=float(np.sum(rus)) + request_ru,
+        fetch_log=fetch_log,
         server_latencies_ms=lat_sums,
         service_latency_ms=(exec_ms if executor is not None
                             else float(np.max(lat_sums)) if lat_sums else 0.0),
@@ -759,6 +773,7 @@ class SpmdFanout:
 
         ids, dists = merge_topk(ids_by, d_by, k)
         info = dict(
+            partition_ids=[int(p.pid) for p in parts],
             ru_per_partition=rus,
             ru_total=float(np.sum(rus)),
             stats_per_partition=stats_by,

@@ -2,8 +2,12 @@
 from .continuation import (ContinuationError, decode_continuation,
                            encode_continuation)
 from .engine import ServeEngine
-from .metrics import EngineMetrics, SimClock, poisson_arrivals
+from .metrics import (EngineMetrics, ExactHistogram, Histogram, SimClock,
+                      poisson_arrivals)
+from .obs import MetricsRegistry
 from .predicate import F, Predicate, from_obj, property_items
+from .trace import (FlightRecorder, Span, Trace, Tracer,
+                    validate_trace_record)
 from .vector_engine import (EngineConfig, ServeRequest, ServeResponse,
                             Throttled, VectorServeEngine)
 from .vector_service import VectorCollectionService, VectorQuery
@@ -12,6 +16,8 @@ __all__ = [
     "VectorCollectionService", "VectorQuery", "ServeEngine",
     "VectorServeEngine", "EngineConfig", "ServeRequest", "ServeResponse",
     "Throttled", "EngineMetrics", "SimClock", "poisson_arrivals",
+    "Histogram", "ExactHistogram", "MetricsRegistry",
+    "Span", "Trace", "Tracer", "FlightRecorder", "validate_trace_record",
     "ContinuationError", "encode_continuation", "decode_continuation",
     "F", "Predicate", "from_obj", "property_items",
 ]

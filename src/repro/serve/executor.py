@@ -67,6 +67,11 @@ class DispatchOutcome:
     hedge_lane: int = -1
     hedge_won: bool = False
     retried_lanes: tuple = ()
+    # trace-plane detail: the hedge duplicate's own lane interval, and
+    # whether the primary's service time was straggler-inflated
+    hedge_start_s: float = 0.0
+    hedge_end_s: float = 0.0
+    straggled: bool = False
 
 
 class LaneExecutor:
@@ -209,6 +214,7 @@ class LaneExecutor:
         hedged = hedge_won = False
         hedge_ru = 0.0
         hedge_lane = -1
+        hedge_start = hedge_end = 0.0
         if (self.mode == "replica" and self.hedge_at_ms is not None
                 and eff_ms > self.hedge_at_ms):
             ln2 = self._pick(now, exclude=(ln.lane_id,))
@@ -221,6 +227,7 @@ class LaneExecutor:
                 start2 = max(start + self.hedge_at_ms / 1000.0,
                              ln2.busy_until_s, now)
                 end2 = self._book(ln2, start2, self._jitter_ms(service_ms) / 1000.0)
+                hedge_start, hedge_end = start2, end2
                 if end2 < end:  # earliest finisher answers the client
                     hedge_won = True
                     self.hedges_won += 1
@@ -230,7 +237,8 @@ class LaneExecutor:
             self.clock.advance(end - now)
         return DispatchOutcome(payload, ln.lane_id, start, end, ru,
                                hedged, hedge_ru, hedge_lane, hedge_won,
-                               retried)
+                               retried, hedge_start, hedge_end,
+                               eff_ms > service_ms)
 
     def schedule_round(self, durations_ms: Sequence[float]) -> float:
         """Book one multi-cursor round — each duration on the earliest-

@@ -10,6 +10,7 @@ because compile stalls are the one latency source the model cannot see.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional
 
 import numpy as np
@@ -32,7 +33,89 @@ class SimClock:
 
 
 class Histogram:
-    """Exact sample store (offline scale) with percentile readout."""
+    """Bounded streaming histogram: O(1) memory regardless of samples.
+
+    Replaces the old unbounded exact sample list. Values land in
+    geometric bins (ratio ``GROWTH`` per bin starting at ``LO``), so the
+    percentile readout — the geometric midpoint of the target bin,
+    clamped to the exact observed [min, max] — carries ≤ √GROWTH−1
+    (≈3.4%) relative error while ``count``/``sum``/``mean``/``min``/
+    ``max`` stay exact. Percentiles are monotone in p by construction
+    (cumulative scan over ordered bins). Parity against the retained
+    ``ExactHistogram`` is tested on seeded workloads.
+    """
+
+    LO = 1e-3  # lowest resolved value; below lands in the underflow bin
+    GROWTH = 1.07
+    NBINS = 420  # covers LO … LO·G^NBINS ≈ 2e9; beyond is the overflow bin
+
+    __slots__ = ("_counts", "_count", "_sum", "_min", "_max")
+
+    def __init__(self):
+        # [underflow, NBINS geometric bins, overflow]
+        self._counts = np.zeros(self.NBINS + 2, dtype=np.int64)
+        self._count = 0
+        self._sum = 0.0
+        self._min = math.inf
+        self._max = -math.inf
+
+    def observe(self, v: float):
+        v = float(v)
+        self._count += 1
+        self._sum += v
+        if v < self._min:
+            self._min = v
+        if v > self._max:
+            self._max = v
+        if v <= self.LO:
+            idx = 0
+        else:
+            idx = min(1 + int(math.log(v / self.LO) / _LOG_GROWTH),
+                      self.NBINS + 1)
+        self._counts[idx] += 1
+
+    @property
+    def count(self) -> int:
+        return self._count
+
+    @property
+    def sum(self) -> float:
+        return self._sum
+
+    @property
+    def min(self) -> float:
+        return self._min if self._count else 0.0
+
+    @property
+    def max(self) -> float:
+        return self._max if self._count else 0.0
+
+    def mean(self) -> float:
+        return self._sum / self._count if self._count else 0.0
+
+    def percentile(self, p: float) -> float:
+        if not self._count:
+            return 0.0
+        target = min(max(1, int(math.ceil(p / 100.0 * self._count))),
+                     self._count)
+        cum = np.cumsum(self._counts)
+        idx = int(np.searchsorted(cum, target))
+        if idx == 0:
+            val = self._min  # underflow bin: everything ≤ LO
+        elif idx == self.NBINS + 1:
+            val = self._max  # overflow bin
+        else:
+            val = self.LO * self.GROWTH ** (idx - 0.5)  # geometric midpoint
+        return float(min(max(val, self._min), self._max))
+
+
+_LOG_GROWTH = math.log(Histogram.GROWTH)
+
+
+class ExactHistogram:
+    """Exact sample store — the reference implementation the streaming
+    ``Histogram`` is parity-tested against. Unbounded memory; use only
+    where the sample count is small and exactness matters."""
 
     def __init__(self):
         self._samples: list[float] = []
@@ -43,6 +126,10 @@ class Histogram:
     @property
     def count(self) -> int:
         return len(self._samples)
+
+    @property
+    def sum(self) -> float:
+        return float(np.sum(self._samples)) if self._samples else 0.0
 
     def mean(self) -> float:
         return float(np.mean(self._samples)) if self._samples else 0.0
@@ -63,6 +150,11 @@ class EngineMetrics:
     lanes_padded: int = 0
     ingest_ops: int = 0
     ingest_batches: int = 0
+    # RU attribution is disjoint: ru_query_total is the *work* RU of
+    # query/page dispatches (hedge duplicates excluded), hedge_ru_total
+    # is the hedge surcharge, ru_ingest_total the write path. The three
+    # sum to every RU settled against tenant governors (conservation is
+    # asserted in tests/test_observability.py).
     ru_query_total: float = 0.0
     ru_ingest_total: float = 0.0
     # per-query sequential search rounds (beam-width telemetry): hop
@@ -116,7 +208,7 @@ class EngineMetrics:
             pages_served=self.pages_served,
             batches=self.batches,
             qps=self.queries_ok / elapsed,
-            ru_per_s=self.ru_query_total / elapsed,
+            ru_per_s=(self.ru_query_total + self.hedge_ru_total) / elapsed,
             ru_query_total=self.ru_query_total,
             ru_ingest_total=self.ru_ingest_total,
             ingest_ops=self.ingest_ops,

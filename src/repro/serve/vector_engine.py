@@ -54,7 +54,9 @@ from ..partition.fanout import (SpmdFanout, batched_fanout_search,
 from ..store.ru import OpCounters, ResourceGovernor
 from .executor import LaneExecutor
 from .metrics import EngineMetrics, SimClock
+from .obs import MetricsRegistry
 from .predicate import Predicate
+from .trace import Tracer
 
 
 def serving_jit_cache_size() -> int:
@@ -105,6 +107,10 @@ class EngineConfig:
     straggler_factor: float = 4.0  # service-time inflation when straggling
     lane_reprobe_after_s: float = 5.0  # down-lane re-probe cooldown
     dispatch_seed: int = 0  # lane-plane RNG seed (straggler draws)
+    # ---- observability (serve.trace / serve.obs) ----
+    trace: bool = True  # per-request lifecycle traces; off = zero overhead
+    flight_recorder: int = 256  # trace records retained (ring + anomaly ring)
+    trace_slo_ms: Optional[float] = 50.0  # SLO-violating traces always captured
 
 
 @dataclasses.dataclass
@@ -126,6 +132,7 @@ class ServeRequest:
     # overload is charged to latency even when the engine is running behind.
     arrival_s: float = -1.0
     reserved_ru: float = 0.0  # admission reservation, reconciled at dispatch
+    admit_s: float = -1.0  # when the admission decision was made (trace plane)
 
 
 @dataclasses.dataclass
@@ -186,12 +193,27 @@ class VectorServeEngine:
         self._spmd_mesh = spmd_mesh
         self._spmd_fanout: Optional[SpmdFanout] = None
         self.queue: list[ServeRequest] = []
-        self._ingest_q: deque[tuple[str, Callable[[], float], int]] = deque()
+        self._ingest_q: deque[tuple[str, Callable[[], float], int, Any]] = deque()
         self.responses: dict[int, ServeResponse] = {}
         self.tenants: dict[Any, ResourceGovernor] = {}
         self._ru_ema: dict[Any, float] = {}
         self._next_rid = 0
         self.metrics = EngineMetrics(started_s=self.clock.now())
+        # observability plane: always-on labeled registry (cheap), plus the
+        # lifecycle tracer (zero-cost when cfg.trace is off — begin()
+        # returns None and every emission site guards on it)
+        self.obs = MetricsRegistry()
+        self.tracer = Tracer(self.clock, enabled=cfg.trace,
+                             capacity=cfg.flight_recorder,
+                             slo_ms=cfg.trace_slo_ms)
+
+    def reset_metrics(self):
+        """Metrics epoch boundary (benchmark warmup): fresh aggregates,
+        fresh labeled registry, fresh flight recorder. Tenant governors
+        keep their budgets — only the telemetry resets."""
+        self.metrics = EngineMetrics(started_s=self.clock.now())
+        self.obs = MetricsRegistry()
+        self.tracer.reset()
 
     # ------------------------------------------------------------------
     # admission control
@@ -244,8 +266,11 @@ class VectorServeEngine:
         if rejected is not None:
             resp = dataclasses.replace(rejected, rid=req.rid)
             self.responses[req.rid] = resp
+            self._note_throttle("query", req.rid, req.tenant,
+                                resp.retry_after_s)
             return resp
         req.reserved_ru = reserved
+        req.admit_s = self.clock.now()
         if req.arrival_s < 0:
             req.arrival_s = self.clock.now()
         self.queue.append(req)
@@ -264,11 +289,13 @@ class VectorServeEngine:
                                  predicate=predicate))
         return rid
 
-    def submit_ingest(self, kind: str, apply_fn: Callable[[], float], n_ops: int):
+    def submit_ingest(self, kind: str, apply_fn: Callable[[], float],
+                      n_ops: int, tenant: Any = "default"):
         """Enqueue one pre-chunked ingest thunk (returns its RU charge).
         The service layer slices upserts/deletes into ``ingest_chunk``-sized
-        thunks; the engine alternates them with query batches."""
-        self._ingest_q.append((kind, apply_fn, n_ops))
+        thunks; the engine alternates them with query batches. ``tenant``
+        attributes the write RU in the observability registry."""
+        self._ingest_q.append((kind, apply_fn, n_ops, tenant))
 
     # ------------------------------------------------------------------
     # scheduling
@@ -372,9 +399,9 @@ class VectorServeEngine:
             # time is spent, never what runs
             partitions = self._resolve(shard_key)
             if exact:
-                ids, dists, ru_total, service_ms, plan = self._exact_scan(
-                    partitions, queries, k, predicate=predicate
-                )
+                ids, dists, ru_total, service_ms, plan, pspans = \
+                    self._exact_scan(partitions, queries, k,
+                                     predicate=predicate)
             else:
                 if predicate is not None:
                     ids, dists, info = batched_filtered_fanout_search(
@@ -400,13 +427,14 @@ class VectorServeEngine:
                     plan = "graph"
                 ru_total = info["ru_total"]
                 service_ms = info["service_latency_ms"]
+                pspans = self._partition_spans(info)
                 pstats = info["stats_per_partition"]
                 if pstats:
                     self.metrics.note_hops(
                         float(np.mean([s.hops for s in pstats])), len(batch)
                     )
             service_ms += self.cfg.dispatch_overhead_ms
-            return (ids, dists, plan), service_ms, ru_total
+            return (ids, dists, plan, pspans), service_ms, ru_total
 
         try:
             out = self.executor.dispatch(run)
@@ -417,7 +445,8 @@ class VectorServeEngine:
                 self.tenant_governor(r.tenant).refund(r.reserved_ru)
             raise
 
-        ids, dists, plan = out.payload
+        ids, dists, plan, pspans = out.payload
+        ru_work = out.ru  # the batch's search work, hedge surcharge apart
         ru_total = out.ru + out.hedge_ru  # hedged duplicates bill in full
         service_ms = (out.end_s - out.start_s) * 1000.0
         if out.hedged:
@@ -425,15 +454,22 @@ class VectorServeEngine:
 
         B = len(batch)
         bucket = smod.next_bucket(B, self.cfg.batch_buckets)
-        self.metrics.note_batch(B, bucket, service_ms, ru_total,
+        self.metrics.note_batch(B, bucket, service_ms, ru_work,
                                 serving_jit_cache_size())
-        ru_q = ru_total / B
+        ru_q = ru_total / B  # what the client is billed (hedge included)
+        work_q = ru_work / B
+        hedge_q = out.hedge_ru / B
         for i, r in enumerate(batch):
             # start_s includes lane queue wait: under replica dispatch a
             # batch that finds every lane busy pays that wait in its
             # latency percentiles, exactly like a real executor pool
             wait_ms = (out.start_s - r.arrival_s) * 1000.0
             lat_ms = (out.end_s - r.arrival_s) * 1000.0
+            assert r.rid not in self.responses, (
+                f"rid {r.rid} already answered: one admitted request must "
+                f"produce exactly one response/latency sample (hedge and "
+                f"retry duplicates are lane-plane internals)"
+            )
             self.responses[r.rid] = ServeResponse(
                 rid=r.rid, status=200, ids=ids[i], dists=dists[i], ru=ru_q,
                 plan=plan, latency_ms=lat_ms, wait_ms=wait_ms, batch_size=B,
@@ -442,6 +478,100 @@ class VectorServeEngine:
             self.metrics.latency_ms.observe(lat_ms)
             self.metrics.wait_ms.observe(wait_ms)
             self._settle(r.tenant, ru_q, r.reserved_ru)
+            ts = str(r.tenant)
+            self.obs.inc("serve_requests_total", tenant=ts, kind="query",
+                         status="200")
+            self.obs.inc("serve_ru_total", work_q, tenant=ts, op="query")
+            if out.hedge_ru:
+                self.obs.inc("serve_ru_total", hedge_q, tenant=ts, op="hedge")
+            self.obs.observe("serve_latency_ms", lat_ms, tenant=ts)
+            self.obs.observe("serve_stage_ms", wait_ms, stage="queue")
+            self.obs.observe("serve_stage_ms", lat_ms - wait_ms, stage="lane")
+            self._emit_trace("query", r.rid, r.tenant, r.arrival_s,
+                             r.admit_s, r.reserved_ru, out, plan, B, bucket,
+                             ru_q, lat_ms, pspans=pspans)
+
+    # ------------------------------------------------------------------
+    # trace plane
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _partition_spans(info: dict) -> list:
+        """(latency_ms, attrs) per searched partition from a fan-out info
+        dict — the RU plus the hop/expansion/cmps counters the RU/latency
+        split is computed from (store.ru.counters_for_ru /
+        counters_for_latency)."""
+        pids = info.get("partition_ids", ())
+        stats = info.get("stats_per_partition") or [None] * len(pids)
+        out = []
+        for pid, ru_i, lat_i, st in zip(pids, info["ru_per_partition"],
+                                        info["server_latencies_ms"], stats):
+            attrs = dict(pid=int(pid), ru=float(ru_i))
+            if st is not None:
+                attrs.update(hops=float(st.hops),
+                             expansions=float(st.expansions),
+                             cmps=float(st.cmps), plan=st.plan)
+            out.append((float(lat_i), attrs))
+        return out
+
+    def _note_throttle(self, kind: str, rid: int, tenant: Any,
+                       retry_after_s: float):
+        """Registry + trace bookkeeping for a 429 rejection."""
+        ts = str(tenant)
+        self.obs.inc("serve_requests_total", tenant=ts, kind=kind,
+                     status="429")
+        self.obs.inc("serve_throttled_total", tenant=ts)
+        tr = self.tracer.begin(kind, tenant, rid)
+        if tr is None:
+            return
+        now = self.clock.now()
+        tr.span("admission", "admission", now, now, throttled=True,
+                retry_after_s=retry_after_s)
+        self.tracer.finish(tr, status=429, ru=0.0, latency_ms=0.0,
+                           t0_s=now, t1_s=now)
+
+    def _emit_trace(self, kind: str, rid: int, tenant: Any, arrival_s: float,
+                    admit_s: float, reserved_ru: float, out, plan: str,
+                    batch_size: int, bucket: int, ru: float, lat_ms: float,
+                    pspans: Sequence = (), extra_spans: Sequence = ()):
+        """Record one served request's lifecycle trace from its dispatch
+        outcome. The root spans — queue [arrival → lane start] and lane
+        [lane start → completion] — tile the request interval, so their
+        summed duration equals the recorded latency (the reconciliation
+        invariant ``trace.validate_trace_record`` enforces). admission and
+        batch_form are point events on the root; partition fan-out, the
+        hedge duplicate, fault retries and the merge hang off the lane
+        span as its parallel decomposition."""
+        tr = self.tracer.begin(kind, tenant, rid)
+        if tr is None:
+            return
+        start, end = out.start_s, out.end_s
+        q1 = min(max(start, arrival_s), end)  # tiling-safe lane boundary
+        tr.span("admission", "admission", admit_s, admit_s,
+                reserved_ru=reserved_ru)
+        tr.span("queue", "queue", arrival_s, q1)
+        tr.span("batch_form", "batch_form", q1, q1, batch_size=batch_size,
+                bucket=bucket, plan=plan)
+        lane = tr.span("lane", "lane", q1, end, lane=out.lane,
+                       hedged=out.hedged, straggled=out.straggled,
+                       retried_lanes=list(out.retried_lanes), ru=ru)
+        for lat_i, attrs in pspans:
+            tr.span(f"partition[p{attrs['pid']}]", "partition",
+                    start, start + lat_i / 1000.0, parent=lane, **attrs)
+        for sp in extra_spans:
+            tr.span(sp["name"], sp["stage"], start,
+                    start + sp["dur_ms"] / 1000.0, parent=lane,
+                    **sp.get("attrs", {}))
+        for lid in out.retried_lanes:
+            tr.span(f"retry[lane{lid}]", "retry", start, start, parent=lane,
+                    lane=lid)
+        if out.hedged:
+            tr.span("hedge", "hedge", out.hedge_start_s, out.hedge_end_s,
+                    parent=lane, lane=out.hedge_lane, won=out.hedge_won,
+                    ru=out.hedge_ru)
+        ov = min(self.cfg.dispatch_overhead_ms / 1000.0, end - start)
+        tr.span("merge", "merge", end - max(ov, 0.0), end, parent=lane)
+        self.tracer.finish(tr, status=200, ru=ru, latency_ms=lat_ms,
+                           t0_s=arrival_s, t1_s=end)
 
     def _spmd(self) -> SpmdFanout:
         if self._spmd_fanout is None:
@@ -464,23 +594,26 @@ class VectorServeEngine:
         plan = "exact" if predicate is None else "exact-filtered"
         if not partitions:  # empty tenant collection: nothing to scan
             return (np.full((B, k), -1, np.int64), np.full((B, k), np.inf),
-                    0.0, 0.0, plan)
+                    0.0, 0.0, plan, [])
         padded = smod.pad_batch_np(
             queries, smod.next_bucket(B, self.cfg.batch_buckets)
         )
         ids_l, d_l, ru, service_ms = [], [], 0.0, 0.0
+        pspans: list = []  # (latency_ms, attrs) per scanned partition
         for p in partitions:
             pv = p.providers
             scan_mask = pv.live
             n_scan = p.num_docs
+            ru_p = 0.0
             if predicate is not None:
                 if p.num_docs == 0:
                     continue
                 mask, _words, nreads = compile_partition_filter(p, predicate)
                 # bill the compile's posting lookups even when the
                 # partition is then skipped as a no-match
-                ru += nreads * pv.meter.cfg.ru_per_prop_read
+                ru_p += nreads * pv.meter.cfg.ru_per_prop_read
                 if mask is None:
+                    ru += ru_p
                     continue
                 scan_mask = mask & pv.live
                 n_scan = int(scan_mask.sum())
@@ -493,17 +626,19 @@ class VectorServeEngine:
             # every lane scans the (filtered) subset: full scan at
             # quantized-ish cost, PER QUERY (RU must not deflate with
             # batch size)
-            ru += 0.5 * n_scan * 0.0125 * B
+            ru_p += 0.5 * n_scan * 0.0125 * B
+            ru += ru_p
             # partitions scan in parallel — client latency tracks the worst
             # partition (§4.3), same model as the graph path
-            service_ms = max(service_ms, pv.meter.latency_ms(
-                OpCounters(quant_reads=n_scan)
-            ))
+            lat_p = pv.meter.latency_ms(OpCounters(quant_reads=n_scan))
+            service_ms = max(service_ms, lat_p)
+            pspans.append((lat_p, dict(pid=int(p.pid), ru=ru_p,
+                                       n_scan=n_scan, plan=plan)))
         if not ids_l:  # predicate matched nothing anywhere
             return (np.full((B, k), -1, np.int64), np.full((B, k), np.inf),
-                    ru, service_ms, plan)
+                    ru, service_ms, plan, pspans)
         ids, dists = merge_topk(ids_l, d_l, k)
-        return ids, dists, ru, service_ms, plan
+        return ids, dists, ru, service_ms, plan, pspans
 
     # ------------------------------------------------------------------
     # host-path execution (filtered plans need the document store; the
@@ -518,9 +653,14 @@ class VectorServeEngine:
         settlement + EMA, and metrics. ``fn`` returns (ids, dists, ru,
         service_ms) or (ids, dists, ru, service_ms, plan) — the 5-tuple
         form lets the body report the plan it actually executed (e.g. the
-        per-partition aggregate of a filtered query)."""
+        per-partition aggregate of a filtered query). A 6th element may
+        carry trace child spans — dicts of (name, stage, dur_ms, attrs) —
+        which land under the request's lane span (e.g. a page's
+        per-partition fetch rounds from ``paged_fanout_search``)."""
+        kind = "page" if is_page else "query"
         rejected, reserved = self._admit(tenant)
         if rejected is not None:
+            self._note_throttle(kind, -1, tenant, rejected.retry_after_s)
             raise Throttled(tenant, rejected.retry_after_s)
         submit_s = self.clock.now()
 
@@ -528,7 +668,8 @@ class VectorServeEngine:
             out = fn()
             ids, dists, ru, service_ms = out[:4]
             body_plan = out[4] if len(out) > 4 else plan
-            return ((ids, dists, body_plan),
+            extra_spans = out[5] if len(out) > 5 else ()
+            return ((ids, dists, body_plan, extra_spans),
                     service_ms + self.cfg.dispatch_overhead_ms, ru)
 
         # page bodies schedule their own multi-cursor refill rounds on the
@@ -539,7 +680,8 @@ class VectorServeEngine:
             # e.g. a user filter predicate raising: refund the reservation
             self.tenant_governor(tenant).refund(reserved)
             raise
-        ids, dists, plan_out = out.payload
+        ids, dists, plan_out, extra_spans = out.payload
+        ru_work = out.ru
         ru = out.ru + out.hedge_ru
         if out.hedged:
             self.metrics.note_hedge(out.hedge_won, out.hedge_ru)
@@ -552,7 +694,21 @@ class VectorServeEngine:
             self.metrics.pages_served += 1
         self.metrics.latency_ms.observe(lat_ms)
         self.metrics.wait_ms.observe(wait_ms)
-        self.metrics.note_batch(1, 1, service_ms, ru, serving_jit_cache_size())
+        self.metrics.note_batch(1, 1, service_ms, ru_work,
+                                serving_jit_cache_size())
+        ts = str(tenant)
+        self.obs.inc("serve_requests_total", tenant=ts, kind=kind,
+                     status="200")
+        self.obs.inc("serve_ru_total", ru_work, tenant=ts, op=kind)
+        if out.hedge_ru:
+            self.obs.inc("serve_ru_total", out.hedge_ru, tenant=ts,
+                         op="hedge")
+        self.obs.observe("serve_latency_ms", lat_ms, tenant=ts)
+        self.obs.observe("serve_stage_ms", wait_ms, stage="queue")
+        self.obs.observe("serve_stage_ms", lat_ms - wait_ms, stage="lane")
+        self._emit_trace(kind, -1, tenant, submit_s, submit_s, reserved,
+                         out, plan_out, 1, 1, ru, lat_ms,
+                         extra_spans=extra_spans)
         return ServeResponse(rid=-1, status=200, ids=ids, dists=dists, ru=ru,
                              plan=plan_out, latency_ms=lat_ms, wait_ms=wait_ms,
                              batch_size=1)
@@ -564,12 +720,24 @@ class VectorServeEngine:
         for _ in range(n_chunks):
             if not self._ingest_q:
                 return
-            kind, apply_fn, n_ops = self._ingest_q.popleft()
+            kind, apply_fn, n_ops, tenant = self._ingest_q.popleft()
+            t0 = self.clock.now()
             ru = float(apply_fn())
-            self.clock.advance(ru * self.cfg.ingest_ms_per_ru / 1000.0)
+            t1 = self.clock.advance(ru * self.cfg.ingest_ms_per_ru / 1000.0)
             self.metrics.ingest_ops += n_ops
             self.metrics.ingest_batches += 1
             self.metrics.ru_ingest_total += ru
+            ts = str(tenant)
+            self.obs.inc("serve_requests_total", tenant=ts, kind="ingest",
+                         status="200")
+            self.obs.inc("serve_ru_total", ru, tenant=ts, op="ingest")
+            tr = self.tracer.begin("ingest", tenant, -1)
+            if tr is not None:
+                tr.span(f"ingest[{kind}]", "ingest", t0, t1, op=kind,
+                        n_ops=n_ops, ru=ru)
+                self.tracer.finish(tr, status=200, ru=ru,
+                                   latency_ms=(t1 - t0) * 1000.0,
+                                   t0_s=t0, t1_s=t1)
 
     def flush_ingest(self):
         """Apply every queued ingest mini-batch now (synchronous ingest)."""
@@ -577,7 +745,7 @@ class VectorServeEngine:
 
     @property
     def ingest_backlog(self) -> int:
-        return sum(n for _, _, n in self._ingest_q)
+        return sum(n for _, _, n, _ in self._ingest_q)
 
     def next_rid(self) -> int:
         rid = self._next_rid
@@ -592,7 +760,41 @@ class VectorServeEngine:
         snap["dispatch"] = self.executor.snapshot()
         snap["tenants"] = {
             t: dict(available_ru=g.available, consumed_ru=g.consumed,
-                    throttle_events=g.throttle_events)
+                    throttle_events=g.throttle_events,
+                    settlements=g.settlements, refunded_ru=g.refunded)
             for t, g in self.tenants.items()
         }
+        snap["observability"] = self.observability_summary()
         return snap
+
+    def observability_summary(self) -> dict:
+        """The cost-attribution read-out: per-stage latency decomposition,
+        per-tenant RU/QPS/throttle/p95 breakdown, tracer health."""
+        elapsed = max(self.clock.now() - self.metrics.started_s, 1e-9)
+        stages = {}
+        for labels, h in self.obs.series("serve_stage_ms"):
+            stages[labels["stage"]] = dict(
+                count=h.count, total_ms=h.sum, mean_ms=h.mean(),
+                p95_ms=h.percentile(95))
+        per_tenant = {}
+        for t in self.obs.label_values("serve_requests_total", "tenant"):
+            lat = self.obs.histogram("serve_latency_ms", tenant=t)
+            served = self.obs.total("serve_requests_total", tenant=t,
+                                    status="200")
+            per_tenant[t] = dict(
+                requests=served,
+                qps=served / elapsed,
+                throttled=self.obs.counter_value("serve_throttled_total",
+                                                 tenant=t),
+                ru_query=self.obs.counter_value("serve_ru_total", tenant=t,
+                                                op="query"),
+                ru_page=self.obs.counter_value("serve_ru_total", tenant=t,
+                                               op="page"),
+                ru_hedge=self.obs.counter_value("serve_ru_total", tenant=t,
+                                                op="hedge"),
+                ru_ingest=self.obs.counter_value("serve_ru_total", tenant=t,
+                                                 op="ingest"),
+                p95_ms=lat.percentile(95) if lat is not None else 0.0,
+            )
+        return dict(stages=stages, per_tenant=per_tenant,
+                    tracer=self.tracer.stats())

@@ -109,17 +109,21 @@ class VectorCollectionService:
     # ingest (through the engine's interleaved mini-batch queue)
     # ------------------------------------------------------------------
     def upsert(self, documents: Sequence[dict], vectors: np.ndarray,
-               partition_keys: Optional[Sequence] = None) -> float:
+               partition_keys: Optional[Sequence] = None,
+               tenant: Any = "default") -> float:
         """Insert documents (dicts with 'id') + their embedding vectors.
         Synchronous: enqueues chunked ingest work on the engine and drains
         it before returning (use ``upsert_async`` to leave it interleaving
-        with query traffic)."""
-        total = self.upsert_async(documents, vectors, partition_keys)
+        with query traffic). ``tenant`` attributes the write RU in the
+        engine's per-tenant cost registry."""
+        total = self.upsert_async(documents, vectors, partition_keys,
+                                  tenant=tenant)
         self.engine.flush_ingest()
         return total.value
 
     def upsert_async(self, documents: Sequence[dict], vectors: np.ndarray,
-                     partition_keys: Optional[Sequence] = None) -> "_RUTally":
+                     partition_keys: Optional[Sequence] = None,
+                     tenant: Any = "default") -> "_RUTally":
         vectors = np.asarray(vectors, np.float32)
         ids = [int(d["id"]) for d in documents]
         pks = list(partition_keys) if partition_keys is not None else ids
@@ -133,7 +137,7 @@ class VectorCollectionService:
                 "upsert",
                 lambda d=docs_c, i=ids_c, p=pks_c, v=vecs_c:
                     tally.add(self._apply_upsert(d, i, p, v)),
-                len(docs_c),
+                len(docs_c), tenant=tenant,
             )
         return tally
 
@@ -168,12 +172,13 @@ class VectorCollectionService:
                 )
         return ru
 
-    def delete(self, doc_ids: Sequence[int]) -> float:
-        total = self.delete_async(doc_ids)
+    def delete(self, doc_ids: Sequence[int], tenant: Any = "default") -> float:
+        total = self.delete_async(doc_ids, tenant=tenant)
         self.engine.flush_ingest()
         return total.value
 
-    def delete_async(self, doc_ids: Sequence[int]) -> "_RUTally":
+    def delete_async(self, doc_ids: Sequence[int],
+                     tenant: Any = "default") -> "_RUTally":
         tally = _RUTally()
         chunk = self.engine.cfg.ingest_chunk
         doc_ids = list(doc_ids)
@@ -181,7 +186,7 @@ class VectorCollectionService:
             ids_c = doc_ids[lo:lo + chunk]
             self.engine.submit_ingest(
                 "delete", lambda i=ids_c: tally.add(self._apply_delete(i)),
-                len(ids_c),
+                len(ids_c), tenant=tenant,
             )
         return tally
 
@@ -354,9 +359,18 @@ class VectorCollectionService:
                 target, qv, pstate, page_size, beam_width=W,
                 slot_filters=slot_filters, executor=lane_exec,
             )
+            # per-fetch child spans for the trace plane: one span per
+            # partition page-fetch, labelled by refill round
+            fetch_spans = [
+                dict(name=f"page.fetch[p{e['pid']}]", stage="partition",
+                     dur_ms=e["lat_ms"],
+                     attrs=dict(pid=e["pid"], round=e["round"], ru=e["ru"]))
+                for e in info["fetch_log"]
+            ]
             return (ids, dists, info["ru_total"] + compile_ru,
                     info["service_latency_ms"],
-                    "paginated" if pred is None else "paginated-filtered")
+                    "paginated" if pred is None else "paginated-filtered",
+                    fetch_spans)
 
         resp = self.engine.execute_host(q.tenant, "paginated", body,
                                         is_page=True)

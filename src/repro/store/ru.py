@@ -178,6 +178,11 @@ class ResourceGovernor:
         self.available = provisioned_ru_s
         self.throttle_events = 0
         self.consumed = 0.0
+        # settlement telemetry (cost-attribution reconciliation): every
+        # settle/refund event counts, and refunded RU is tracked so
+        # `consumed` can be audited against the serving registry
+        self.settlements = 0
+        self.refunded = 0.0
 
     def request(self, ru: float) -> float:
         """Consume `ru`; returns seconds of throttle delay incurred."""
@@ -228,9 +233,11 @@ class ResourceGovernor:
             self.refill_to(now_s)
         self.available -= ru
         self.consumed += ru
+        self.settlements += 1
 
     def refund(self, ru: float, now_s: Optional[float] = None):
         """Hand back an unused admission reservation (failed dispatches,
         throttled page chains): the budget returns and the reservation no
         longer counts as consumption."""
+        self.refunded += ru
         self.settle(-ru, now_s=now_s)

@@ -1,7 +1,19 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — tests run on the host's real
 device(s); only launch/dryrun.py fakes 512 devices."""
+import jax
 import numpy as np
 import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_per_module():
+    """Drop compiled executables between test modules. The suite compiles
+    hundreds of distinct jit signatures (shape buckets × L × W × meshes);
+    keeping them all live in one process eventually segfaults XLA's CPU
+    backend_compile partway through the run. Module scope keeps the live
+    set bounded without perturbing within-module recompile==0 assertions."""
+    yield
+    jax.clear_caches()
 
 
 @pytest.fixture(scope="session")
