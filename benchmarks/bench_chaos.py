@@ -1,0 +1,403 @@
+"""Chaos harness (ISSUE 8): a seeded fault schedule against steady traffic.
+
+The fault-tolerance plane's acceptance measurement: one arrival-driven
+run replays the SAME offered traffic twice — once fault-free (the
+baseline), once under a deterministic chaos schedule — and the system
+must hold its availability, recall, and accounting contracts while
+replicas die and recover, lanes fault mid-dispatch, replica rebuilds
+replay the real snapshot+WAL codec path, and a deadline-pressure wave
+forces queue abandonment:
+
+  * **availability ≥ 99%** — 200s over every admitted request (429s are
+    governance, not faults, and are excluded; the run must produce none);
+  * **recall Δ ≤ 0.01 on complete responses** — a response that claims
+    ``complete=True`` under chaos must match the fault-free answer
+    quality (degraded responses are exempt: they honestly carry
+    ``complete=False`` and a ``+degraded[pids]`` plan marker);
+  * **RU conservation, exactly** — per-tenant attributed RU (query +
+    page + hedge) equals governor settlements to 1e-9 relative error,
+    408 refunds included;
+  * **bounded p95** — chaos p95 within 5× the fault-free p95 on
+    identical traffic;
+  * **every 408 reconciles** — the response's recorded wait covers its
+    deadline budget, and every trace (200 and 408 alike) passes
+    root-span tiling validation;
+  * **crash-consistent recovery** — every in-run replica rebuild AND
+    every armed-crash cycle (upsert/delete interrupted at a named
+    barrier on a scratch partition pair) restores bit-for-bit parity
+    via ``recovery_invariants``.
+
+Standalone ``python -m benchmarks.bench_chaos [--smoke]`` merges the
+``chaos`` section into an existing ``BENCH_serve.json`` (or writes a
+fresh file holding only that section); ``bench_serve.run()`` embeds it
+directly.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import GraphConfig
+from repro.core import recall as rec
+from repro.partition import CollectionConfig
+from repro.partition.partitioner import PhysicalPartition, hash_key
+from repro.serve import (EngineConfig, VectorCollectionService,
+                         VectorServeEngine, validate_trace_record)
+from repro.store.faults import CrashError, FaultPlan, recovery_invariants
+from repro.store.provider import StoreProviderSet
+
+from .bench_serve import warmup
+from .common import clustered
+
+CRASH_BARRIERS = ("upsert:begin", "upsert:pre_commit",
+                  "delete:post_props", "delete:pre_commit")
+
+
+def _build(n: int, dim: int, parts: int, replicas: int, seed: int):
+    rng = np.random.RandomState(seed)
+    g = GraphConfig(capacity=2 * (n // parts) + 256, R=16, M=8, L_build=32,
+                    L_search=32, bootstrap_sample=48, refine_sample=10**9,
+                    batch_size=64)
+    svc = VectorCollectionService(
+        dim=dim, graph=g, max_vectors_per_partition=2 * (n // parts),
+        initial_partitions=parts, replicas=replicas,
+    )
+    data = clustered(rng, n, dim)
+    svc.upsert([{"id": i} for i in range(n)], data,
+               partition_keys=[f"pk{i}" for i in range(n)])
+    for rs in svc.replica_sets:
+        rs.reprobe_after_s = 0.05  # sim-time cooldown: deaths are transient
+    return svc, data, rng
+
+
+def _engine(svc, flight: int, lanes: int) -> VectorServeEngine:
+    # admission ON with an unreachable budget: every RU flows through the
+    # governors (reservation → settle/refund) so conservation is testable,
+    # but no request 429s — the run measures faults, not throttling.
+    # Replica dispatch + stragglers + hedging put the accounting under the
+    # most adversarial load the engine has.
+    cfg = EngineConfig(max_batch=8, dispatch_mode="replica", lanes=lanes,
+                      admission_control=True, tenant_ru_s=10**9,
+                      straggler_p=0.2, hedge_at_ms=0.5, dispatch_seed=7,
+                      lane_reprobe_after_s=0.05, flight_recorder=flight)
+    return VectorServeEngine(svc.collection, cfg=cfg,
+                             replica_sets=svc.replica_sets)
+
+
+# ---------------------------------------------------------------------------
+# the chaos schedule
+# ---------------------------------------------------------------------------
+
+
+def _schedule(rng: np.random.RandomState, t0: float, t1: float,
+              n_kills: int, n_blackouts: int, n_rebuilds: int,
+              n_lane_faults: int) -> list[tuple[float, str]]:
+    """Seeded (time, kind) fault events over the traffic window. Lane
+    faults are spaced at least two re-probe cooldowns apart so a burst
+    cannot take a whole replica set below quorum through the lane plane."""
+    span = t1 - t0
+    ev = [(t0 + span * rng.uniform(0.05, 0.9), "kill")
+          for _ in range(n_kills)]
+    ev += [(t0 + span * (0.2 + 0.5 * i / max(n_blackouts, 1)), "blackout")
+           for i in range(n_blackouts)]
+    ev += [(t0 + span * rng.uniform(0.1, 0.85), "rebuild")
+           for _ in range(n_rebuilds)]
+    lane_ts = t0 + span * np.sort(rng.uniform(0.05, 0.9, size=n_lane_faults))
+    lane_ts = np.maximum.accumulate(lane_ts + 0.12 * np.arange(n_lane_faults))
+    ev += [(float(t), "lane_fault") for t in lane_ts]
+    return sorted(ev, key=lambda e: e[0])
+
+
+def _fire(event: tuple[float, str], svc, eng, rng, now: float,
+          stats: dict):
+    """Apply one chaos event to the live system."""
+    kind = event[1]
+    sets = svc.replica_sets
+    if kind == "kill":
+        rs = sets[rng.randint(len(sets))]
+        alive = rs.healthy()
+        if len(alive) > 1:  # a kill is a fault, not an extinction event
+            rs.kill(alive[rng.randint(len(alive))].rid, now_s=now)
+            stats["kills"] += 1
+    elif kind == "blackout":
+        # total partition loss for one re-probe window: every replica of
+        # one set down at once — queries touching it must degrade, not fail
+        rs = sets[rng.randint(len(sets))]
+        for r in rs.replicas:
+            r.alive = False
+            r.down_since_s = now
+        stats["blackouts"] += 1
+    elif kind == "rebuild":
+        # crash-recover cycle through the REAL durable path: kill a
+        # replica, capture snapshot+WAL, rebuild from the bytes, and
+        # demand bit-for-bit parity with the live provider set
+        rs = sets[rng.randint(len(sets))]
+        alive = rs.healthy()
+        if len(alive) > 1:
+            rid = alive[rng.randint(len(alive))].rid
+            rs.kill(rid, now_s=now)
+            fresh = rs.rebuild(rid, rs.capture())
+            recovery_invariants(fresh, rs.partition.providers)
+            stats["rebuild_cycles"] += 1
+    elif kind == "lane_fault":
+        # armed executor fault: fires on lane selection mid-dispatch; the
+        # retry machine reroutes and the lane-health callbacks kill the
+        # matching replica in every set (revived by the next re-probe)
+        lanes = eng.executor.healthy_lanes()
+        if len(lanes) > 1:
+            eng.executor.inject_fault(lanes[rng.randint(len(lanes))].lane_id)
+            stats["lane_faults"] += 1
+
+
+def _run_traffic(eng, svc, queries, arrivals, deadlines=None,
+                 schedule=(), rng=None, stats=None):
+    """The arrival-driven event loop, with chaos events interleaved at
+    their scheduled simulated times. Returns the per-query responses."""
+    schedule = list(schedule)
+    si, i, n = 0, 0, len(queries)
+    rids = []
+    while i < n or eng.queue:
+        now = eng.clock.now()
+        while si < len(schedule) and schedule[si][0] <= now:
+            _fire(schedule[si], svc, eng, rng, now, stats)
+            si += 1
+        if schedule:
+            for rs in svc.replica_sets:
+                rs.probe_dead(now)
+        while i < n and arrivals[i] <= now:
+            dl = None if deadlines is None else deadlines[i]
+            rids.append(eng.submit_query(
+                queries[i], k=10, tenant=f"t{i % 2}",
+                arrival_s=float(arrivals[i]), deadline_ms=dl))
+            i += 1
+        if eng.pump():
+            continue
+        events = []
+        if i < n:
+            events.append(float(arrivals[i]))
+        if eng.queue:
+            events.append(min(r.arrival_s for r in eng.queue)
+                          + eng.cfg.max_wait_s)
+        if si < len(schedule):
+            events.append(float(schedule[si][0]))
+        if not events:
+            break
+        eng.clock.advance(max(min(events) - now, 0.0))
+        if min(events) <= now:
+            eng.pump(force=True)
+    eng.drain()
+    return [eng.pop_response(r) for r in rids]
+
+
+# ---------------------------------------------------------------------------
+# armed-crash recovery cycles (scratch partition pairs)
+# ---------------------------------------------------------------------------
+
+
+def _crash_cycles(seed: int, barriers=CRASH_BARRIERS) -> dict:
+    """Interrupt an upsert/delete at each named barrier on a scratch
+    partition and recover from the durable bytes: the recovered provider
+    must equal a twin that never attempted the op — arrays AND terms."""
+    dim, n0 = 8, 20
+    g = GraphConfig(capacity=96, R=8, M=4, L_build=16, L_search=24,
+                    bootstrap_sample=16, refine_sample=10**9, batch_size=8)
+    cc = CollectionConfig(dim=dim, graph=g, max_vectors_per_partition=80)
+    parity = 0
+    for bi, barrier in enumerate(barriers):
+        rng = np.random.RandomState(seed + bi)
+        subject, twin = (PhysicalPartition(cc, 0, 1 << 32, 0)
+                         for _ in range(2))
+        data = rng.randn(n0, dim).astype(np.float32)
+        ids = list(range(n0))
+        props = [(("cat", i % 3),) for i in ids]
+        for p in (subject, twin):
+            p.insert(ids, [hash_key(i) for i in ids], data, props=props)
+        snap = subject.providers.snapshot_bytes()
+        FaultPlan(seed=seed + bi).arm(barrier).attach(subject.providers)
+        try:
+            if barrier.startswith("upsert"):
+                v = rng.randn(1, dim).astype(np.float32)
+                subject.insert([n0], [hash_key(n0)], v,
+                               props=[(("cat", 0),)])
+            else:
+                subject.delete([3])
+            raise AssertionError(f"armed barrier {barrier} did not fire")
+        except CrashError:
+            pass
+        fresh = StoreProviderSet(
+            subject.providers.neighbors.shape[0],
+            subject.providers.neighbors.shape[1],
+            subject.providers.codes.shape[1],
+            subject.providers.vectors.shape[1],
+        )
+        fresh.recover(snap, subject.providers.wal_bytes())
+        recovery_invariants(fresh, twin.providers)
+        parity += 1
+    return dict(cycles=len(barriers), parity_ok=parity,
+                barriers=list(barriers))
+
+
+# ---------------------------------------------------------------------------
+# the measurement
+# ---------------------------------------------------------------------------
+
+
+def run_chaos(n: int = 2000, dim: int = 32, parts: int = 3, replicas: int = 3,
+              n_queries: int = 400, rate_qps: float = 400.0, seed: int = 29,
+              n_tight_deadlines: int = 3) -> dict:
+    svc, data, rng = _build(n, dim, parts, replicas, seed)
+    queries = data[rng.choice(n, n_queries, replace=False)] + 0.01
+    gt = rec.ground_truth(queries, data, np.ones(n, bool), 10)
+    gaps = rng.exponential(1.0 / rate_qps, size=n_queries)
+
+    # fault-free baseline on the identical arrival realization
+    eng0 = _engine(svc, flight=4 * n_queries, lanes=replicas)
+    warmup(eng0, data)
+    base = _run_traffic(eng0, svc, queries,
+                        eng0.clock.now() + np.cumsum(gaps))
+    assert all(r is not None and r.status == 200 and r.complete
+               for r in base), "baseline run must be fault-free"
+    base_ids = np.stack([r.ids for r in base])
+    base_recall = rec.recall_at_k(base_ids, gt, 10)
+    base_p95 = eng0.metrics.latency_ms.percentile(95)
+
+    # chaos run: same traffic + seeded fault schedule + a deadline wave
+    # (a handful of sub-queue-wait budgets mid-stream MUST be abandoned)
+    eng = _engine(svc, flight=4 * n_queries, lanes=replicas)
+    warmup(eng, data)
+    # governors survive the warmup metrics reset; conservation is checked
+    # against what THIS epoch settles, so baseline the consumed totals
+    consumed0 = {t: g.consumed for t, g in eng.tenants.items()}
+    arrivals = eng.clock.now() + np.cumsum(gaps)
+    deadlines = [None] * n_queries
+    wave0 = n_queries // 2
+    for j in range(n_tight_deadlines):
+        deadlines[wave0 + 2 * j] = 0.0  # expired on arrival: certain 408
+        deadlines[wave0 + 2 * j + 1] = 50.0  # generous: must still serve
+    stats = dict(kills=0, blackouts=0, rebuild_cycles=0, lane_faults=0)
+    sched = _schedule(rng, float(arrivals[0]), float(arrivals[-1]),
+                      n_kills=4, n_blackouts=2,
+                      n_rebuilds=max(2, parts - 1), n_lane_faults=3)
+    resps = _run_traffic(eng, svc, queries, arrivals, deadlines=deadlines,
+                         schedule=sched, rng=rng, stats=stats)
+    assert all(r is not None for r in resps)
+
+    ok = [r for r in resps if r.status == 200]
+    aborted = [r for r in resps if r.status == 408]
+    assert not any(r.status == 429 for r in resps), \
+        "chaos run must not throttle (unreachable budget)"
+    availability = len(ok) / max(len(resps), 1)
+    complete = [(i, r) for i, r in enumerate(resps)
+                if r.status == 200 and r.complete]
+    degraded = [r for r in ok if not r.complete]
+    crecall = rec.recall_at_k(
+        np.stack([r.ids for _, r in complete]),
+        gt[[i for i, _ in complete]], 10)
+    p95 = eng.metrics.latency_ms.percentile(95)
+
+    # every 408 reconciles: the wait the response records covers the
+    # budget it was given, and its trace passes root-span tiling
+    for i, r in enumerate(resps):
+        if r.status == 408:
+            assert deadlines[i] is not None and r.wait_ms >= deadlines[i], \
+                f"408 rid={r.rid} waited {r.wait_ms}ms < {deadlines[i]}ms"
+    recs = [t for t in eng.tracer.recorder.records() if t["kind"] == "query"]
+    for t in recs:
+        validate_trace_record(t)
+    anomalies = [t for t in recs if t["anomalies"]]
+
+    # RU conservation under faults, refunds included: attributed == settled
+    ru_err = 0.0
+    for t, gov in eng.tenants.items():
+        attributed = sum(
+            eng.obs.total("serve_ru_total", tenant=str(t), op=op)
+            for op in ("query", "page", "hedge"))
+        settled = gov.consumed - consumed0.get(t, 0.0)
+        ru_err = max(ru_err, abs(attributed - settled)
+                     / max(abs(settled), 1e-9))
+
+    crash = _crash_cycles(seed)
+    m = eng.metrics
+    out = dict(
+        config=dict(n=n, dim=dim, parts=parts, replicas=replicas,
+                    n_queries=n_queries, rate_qps=rate_qps, seed=seed),
+        schedule=stats,
+        availability=availability,
+        served=len(ok), deadline_abandoned=len(aborted),
+        degraded=len(degraded),
+        recall_baseline=base_recall, recall_chaos_complete=crecall,
+        recall_delta=abs(base_recall - crecall),
+        p95_baseline_ms=base_p95, p95_chaos_ms=p95,
+        p95_ratio=p95 / max(base_p95, 1e-9),
+        ru_conservation_rel_err=ru_err,
+        hedges=int(m.hedges),
+        replica_recoveries=int(sum(rs.recoveries for rs in svc.replica_sets)),
+        replica_failovers=int(sum(rs.failovers for rs in svc.replica_sets)),
+        lane_faults_fired=int(eng.executor.snapshot()["faults"]),
+        traces=len(recs), anomaly_traces=len(anomalies),
+        crash_recovery=crash,
+    )
+
+    # acceptance floors (ISSUE 8)
+    assert stats["kills"] >= 1 and stats["blackouts"] >= 1 \
+        and stats["rebuild_cycles"] >= 1 and stats["lane_faults"] >= 1, \
+        f"chaos schedule failed to fire every fault family: {stats}"
+    assert len(aborted) >= 1, "deadline wave produced no 408s"
+    assert len(degraded) >= 1, "blackouts produced no degraded responses"
+    assert availability >= 0.99, \
+        f"availability {availability:.4f} < 0.99 under chaos"
+    assert out["recall_delta"] <= 0.01, \
+        f"complete-response recall drifted {out['recall_delta']:.3f} > 0.01"
+    assert ru_err <= 1e-9, \
+        f"RU conservation broke under faults: rel err {ru_err:.2e}"
+    assert out["p95_ratio"] <= 5.0, \
+        f"chaos p95 {p95:.2f}ms > 5x baseline {base_p95:.2f}ms"
+    assert out["replica_recoveries"] >= stats["kills"], \
+        "killed replicas did not come back through the rebuild path"
+    assert crash["parity_ok"] == crash["cycles"]
+    assert len(recs) == len(resps), \
+        f"retained {len(recs)} traces for {len(resps)} requests"
+    assert len(anomalies) >= len(aborted) + len(degraded), \
+        "408/degraded requests must surface as anomaly traces"
+    return out
+
+
+def run(smoke: bool = False) -> dict:
+    if smoke:
+        return run_chaos(n=600, dim=32, parts=3, replicas=3, n_queries=160,
+                         rate_qps=400.0, n_tight_deadlines=1)
+    return run_chaos()
+
+
+def main(smoke: bool = False):
+    out = run(smoke=smoke)
+    name = "BENCH_serve.smoke.json" if smoke else "BENCH_serve.json"
+    path = Path(__file__).resolve().parent.parent / name
+    doc = json.loads(path.read_text()) if path.exists() else {}
+    doc["chaos"] = out
+    path.write_text(json.dumps(doc, indent=2))
+    print(f"bench_chaos → {path} (chaos section)")
+    st = out["schedule"]
+    print(f"  schedule: kills={st['kills']} blackouts={st['blackouts']} "
+          f"rebuilds={st['rebuild_cycles']} lane_faults={st['lane_faults']}")
+    print(f"  availability={out['availability']:.4f} "
+          f"(served={out['served']}, 408s={out['deadline_abandoned']}, "
+          f"degraded={out['degraded']})")
+    print(f"  recall: baseline {out['recall_baseline']:.3f} → chaos(complete) "
+          f"{out['recall_chaos_complete']:.3f} (Δ={out['recall_delta']:.3f})")
+    print(f"  p95: {out['p95_baseline_ms']:.2f}ms → {out['p95_chaos_ms']:.2f}ms "
+          f"({out['p95_ratio']:.2f}x), hedges={out['hedges']}")
+    print(f"  RU conservation rel err {out['ru_conservation_rel_err']:.2e}; "
+          f"recoveries={out['replica_recoveries']} "
+          f"failovers={out['replica_failovers']} "
+          f"lane_faults_fired={out['lane_faults_fired']}")
+    print(f"  crash recovery: {out['crash_recovery']['parity_ok']}"
+          f"/{out['crash_recovery']['cycles']} barrier cycles bit-identical")
+    return out
+
+
+if __name__ == "__main__":
+    main(smoke="--smoke" in sys.argv[1:])

@@ -588,7 +588,8 @@ def measure_trace_modes(dim: int = 24, parts: int = 3, n: int = 420,
 
 
 def run(n: int = 3000, dim: int = 32, n_queries: int = 384,
-        rates=(200.0, 800.0, 2500.0), seed: int = 0) -> dict:
+        rates=(200.0, 800.0, 2500.0), seed: int = 0,
+        smoke: bool = False) -> dict:
     # n_queries is deliberately ~24 full micro-batches: short overload runs
     # are startup-diluted (arrival ramp + max_wait stalls on underfilled
     # batches are a fixed cost), which understates the saturation QPS every
@@ -619,6 +620,10 @@ def run(n: int = 3000, dim: int = 32, n_queries: int = 384,
     # top sweep rate, and the per-dispatch-mode acceptance sweep
     obs = measure_observability(svc, data, queries, rates[-1], rng)
     obs["modes"] = measure_trace_modes()
+    # ISSUE 8: the chaos harness — seeded fault schedule against steady
+    # traffic, self-asserting its availability/recall/RU-conservation floors
+    from . import bench_chaos
+    chaos = bench_chaos.run(smoke=smoke)
 
     out = dict(
         config=dict(n=n, dim=dim, n_queries=n_queries, rates=list(rates),
@@ -631,6 +636,7 @@ def run(n: int = 3000, dim: int = 32, n_queries: int = 384,
         pagination=paged,
         filtered=filtered,
         observability=obs,
+        chaos=chaos,
     )
     return out
 
@@ -639,7 +645,8 @@ def main(smoke: bool = False):
     if smoke:
         # n_queries a few multiples of max_batch: the speedup measurement
         # needs full micro-batches to amortize per-dispatch host overhead
-        out = run(n=600, dim=32, n_queries=48, rates=(200.0, 1500.0))
+        out = run(n=600, dim=32, n_queries=48, rates=(200.0, 1500.0),
+                  smoke=True)
     else:
         out = run()
 
@@ -712,6 +719,13 @@ def main(smoke: bool = False):
               f"hedges={r['hedges']}, stage err {r['max_stage_err_ms']:.2e}ms, "
               f"RU attribution err {r['ru_attribution_rel_err']:.2e}, "
               f"reconciled={r['reconciled']}")
+    ch = out["chaos"]
+    print(f"  chaos: availability={ch['availability']:.4f} "
+          f"(408s={ch['deadline_abandoned']}, degraded={ch['degraded']}), "
+          f"recall Δ={ch['recall_delta']:.3f}, "
+          f"RU err {ch['ru_conservation_rel_err']:.2e}, "
+          f"recoveries={ch['replica_recoveries']}, crash cycles "
+          f"{ch['crash_recovery']['parity_ok']}/{ch['crash_recovery']['cycles']}")
 
     # acceptance floors (ISSUE 2 + ISSUE 3): the batch-16 speedup and the
     # zero-recompile contract gate at BOTH scales (scripts/check.sh --smoke

@@ -38,15 +38,17 @@ if failures:
 count = sum(1 for _ in pkgutil.walk_packages(repro.__path__, prefix="repro."))
 print(f"ok: {count} modules import cleanly")
 
-# Continuation tokens are client-supplied bytes: the serving layer must
-# never deserialize them with pickle (arbitrary code execution). AST-walk
-# every module under src/repro/serve and reject pickle-family imports.
+# Pickle is banned repo-wide: continuation tokens are client-supplied
+# bytes (serve/), and snapshots/WAL are durable state that must survive
+# version skew and never execute on load (store/ uses the versioned,
+# CRC'd repro.store.codec instead). AST-walk every module under
+# src/repro and reject pickle-family imports.
 import ast
 from pathlib import Path
 
 BANNED = {"pickle", "cPickle", "dill", "shelve"}
 hits = []
-for path in sorted(Path("src/repro/serve").rglob("*.py")):
+for path in sorted(Path("src/repro").rglob("*.py")):
     tree = ast.parse(path.read_text(), filename=str(path))
     for node in ast.walk(tree):
         names = []
@@ -58,11 +60,12 @@ for path in sorted(Path("src/repro/serve").rglob("*.py")):
             if n in BANNED:
                 hits.append(f"{path}:{node.lineno}: imports {n}")
 if hits:
-    print("PICKLE LINT FAIL (serve/ deserializes client bytes):")
+    print("PICKLE LINT FAIL (client bytes and durable state must not "
+          "round-trip through pickle):")
     for h in hits:
         print(" ", h)
     sys.exit(1)
-print("ok: no pickle-family imports under src/repro/serve")
+print("ok: no pickle-family imports under src/repro")
 
 # Opaque callable filters are retired: they can't batch, can't cache,
 # and (historically) rebuilt an O(capacity) bitmap by scanning the doc
@@ -95,6 +98,9 @@ if [[ "$SMOKE" == 1 ]]; then
   python -m benchmarks.bench_serve --smoke
   python -m benchmarks.bench_query --smoke
   python -m benchmarks.bench_filtered --smoke
+
+  echo "== chaos gate: fault schedule vs availability/recall/RU floors =="
+  python -m benchmarks.bench_chaos --smoke
 
   echo "== observability gate: trace overhead + exported schema =="
   python - <<'EOF'

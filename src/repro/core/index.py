@@ -362,6 +362,7 @@ class DiskANNIndex:
             self.pv.set_live(self.ctx, np.asarray([slot]), False)
             if policy == "inplace" and self._graph_built:
                 neighbors, _, _, live, _ = self.pv.materialize(self.ctx)
+                old_nb = np.array(neighbors)  # copy: kernel donates its input
                 decoded = jnp.asarray(self._decoded(np.arange(self.count)))
                 pad = jnp.zeros((cfg.capacity - self.count, self.dim), jnp.float32)
                 new_nb = dmod.inplace_delete(
@@ -370,8 +371,7 @@ class DiskANNIndex:
                     R=cfg.R, R_slack=cfg.R_slack, alpha=cfg.alpha,
                     c_replace=cfg.c_replace, metric=cfg.metric,
                 )
-                self.pv.neighbors[:] = np.asarray(new_nb)
-                self.pv._dirty()
+                self._write_neighbor_diff(old_nb, np.asarray(new_nb))
             if slot == self.medoid and self.num_live:
                 self.medoid = int(
                     g.compute_medoid(
@@ -390,12 +390,26 @@ class DiskANNIndex:
     def consolidate(self, chunk: int = 1024):
         """One background-sweep step: clear dangling edges to dead nodes."""
         neighbors, _, _, live, _ = self.pv.materialize(self.ctx)
+        old_nb = np.array(neighbors)  # copy: kernel donates its input
         new_nb = dmod.consolidate_chunk(
             neighbors, live, jnp.int32(self._consolidate_cursor), chunk
         )
-        self.pv.neighbors[:] = np.asarray(new_nb)
-        self.pv._dirty()
+        self._write_neighbor_diff(old_nb, np.asarray(new_nb))
         self._consolidate_cursor = (self._consolidate_cursor + chunk) % max(self.count, 1)
+
+    def _write_neighbor_diff(self, old_nb: np.ndarray, new_nb: np.ndarray):
+        """Write only the rows a graph repair changed, through the provider.
+
+        Durable providers log `set_neighbors` to their WAL; a direct
+        whole-array store would leave the repair invisible to replay, so
+        recovery would resurrect dangling edges the repair had cleared.
+        """
+        changed = np.nonzero((old_nb != new_nb).any(axis=1))[0]
+        if changed.size:
+            self.pv.set_neighbors(self.ctx, changed, new_nb[changed])
+        # the repair kernels donate the provider's cached device buffer, so
+        # the materialize cache is stale even when no row changed
+        self.pv._dirty()
 
     # ------------------------------------------------------------------
     # queries (§3.5)

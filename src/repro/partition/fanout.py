@@ -41,10 +41,16 @@ from ..core import paginate as pgmod
 from ..core import pq as pqmod
 from ..core import search as smod
 from ..core.index import QueryStats
+from ..store.faults import CrashError
 from ..store.props import words_to_mask
 from ..store.ru import counters_for_latency, counters_for_ru
 
 INF = jnp.float32(jnp.inf)
+
+
+class AllPartitionsFailed(RuntimeError):
+    """Zero partitions answered a fan-out: nothing to degrade to — the
+    only case where partial-result degradation still hard-fails."""
 
 
 # ---------------------------------------------------------------------------
@@ -115,6 +121,7 @@ def batched_fanout_search(
     L: Optional[int] = None,
     batch_buckets: Optional[tuple[int, ...]] = None,
     beam_width: Optional[int] = None,
+    health=None,  # optional callable(partition) -> bool (replica liveness)
 ) -> tuple[np.ndarray, np.ndarray, dict]:
     """Multi-query scatter/gather for the serving engine.
 
@@ -138,8 +145,18 @@ def batched_fanout_search(
         kw["beam_width"] = beam_width
     ids_l, dists_l, rus, lat_ms = [], [], [], []
     stats_l = []
+    failed: list[tuple[int, str]] = []
     for p in partitions:
-        ids, dists, ru, stats = p.search_batch(queries, k, L, **kw)
+        if health is not None and not health(p):
+            failed.append((int(p.pid), "replica set down"))
+            continue
+        try:
+            ids, dists, ru, stats = p.search_batch(queries, k, L, **kw)
+        except CrashError:
+            raise  # an injected process kill is not a partition fault
+        except Exception as e:  # noqa: BLE001 — degrade, don't collapse
+            failed.append((int(p.pid), f"{type(e).__name__}: {e}"))
+            continue
         ids_l.append(ids)
         dists_l.append(dists)
         rus.append(ru)
@@ -147,14 +164,24 @@ def batched_fanout_search(
         lat_ms.append(
             p.providers.meter.latency_ms(counters_for_latency(stats))
         )
-    ids, dists = merge_topk(ids_l, dists_l, k)
+    if failed and not ids_l:
+        raise AllPartitionsFailed(
+            f"all {len(list(partitions))} partitions failed: {failed}"
+        )
+    if ids_l:
+        ids, dists = merge_topk(ids_l, dists_l, k)
+    else:  # empty collection: nothing failed, nothing to merge
+        ids = np.full((len(queries), k), -1, np.int64)
+        dists = np.full((len(queries), k), np.inf, np.float32)
     info = dict(
         partition_ids=[int(p.pid) for p in partitions],
         ru_per_partition=rus,
-        ru_total=float(np.sum(rus)),
+        ru_total=float(np.sum(rus)) if rus else 0.0,
         stats_per_partition=stats_l,
         server_latencies_ms=lat_ms,
         service_latency_ms=float(np.max(lat_ms)) if lat_ms else 0.0,
+        failed_partitions=failed,
+        complete=not failed,
     )
     return ids, dists, info
 
@@ -183,6 +210,7 @@ def batched_filtered_fanout_search(
     L: Optional[int] = None,
     batch_buckets: Optional[tuple[int, ...]] = None,
     beam_width: Optional[int] = None,
+    health=None,  # optional callable(partition) -> bool (replica liveness)
 ) -> tuple[np.ndarray, np.ndarray, dict]:
     """Multi-query scatter/gather for FILTERED micro-batches: every lane
     shares the same canonical predicate (the engine groups by predicate
@@ -207,19 +235,33 @@ def batched_filtered_fanout_search(
     pids: list[int] = []
     plans: dict[str, int] = {}
     compile_ru = 0.0
+    failed: list[tuple[int, str]] = []
+    answered = 0  # searched OR legitimately skipped (known-empty) partitions
     for p in partitions:
         if p.num_docs == 0:
+            answered += 1
             continue
-        mask, words, nreads = compile_partition_filter(p, predicate)
-        if mask is None:
-            # the compile still read postings (cache miss) — a no-match
-            # partition is skipped, not free
-            compile_ru += nreads * p.providers.meter.cfg.ru_per_prop_read
+        if health is not None and not health(p):
+            failed.append((int(p.pid), "replica set down"))
             continue
-        ids, dists, ru, stats = p.filtered_search_batch(
-            queries, k, mask, L=L, term_reads=nreads,
-            filter_words=words, **kw
-        )
+        try:
+            mask, words, nreads = compile_partition_filter(p, predicate)
+            if mask is None:
+                # the compile still read postings (cache miss) — a no-match
+                # partition is skipped, not free
+                compile_ru += nreads * p.providers.meter.cfg.ru_per_prop_read
+                answered += 1
+                continue
+            ids, dists, ru, stats = p.filtered_search_batch(
+                queries, k, mask, L=L, term_reads=nreads,
+                filter_words=words, **kw
+            )
+        except CrashError:
+            raise  # an injected process kill is not a partition fault
+        except Exception as e:  # noqa: BLE001 — degrade, don't collapse
+            failed.append((int(p.pid), f"{type(e).__name__}: {e}"))
+            continue
+        answered += 1
         ids_l.append(ids)
         dists_l.append(dists)
         rus.append(ru)
@@ -229,7 +271,11 @@ def batched_filtered_fanout_search(
         lat_ms.append(
             p.providers.meter.latency_ms(counters_for_latency(stats))
         )
-    if not ids_l:  # predicate matches nothing anywhere
+    if failed and answered == 0:
+        raise AllPartitionsFailed(
+            f"all candidate partitions failed: {failed}"
+        )
+    if not ids_l:  # predicate matches nothing in any answering partition
         ids = np.full((B, k), -1, np.int64)
         dists = np.full((B, k), np.inf, np.float32)
         plan = "filtered-batched[empty]"
@@ -248,6 +294,8 @@ def batched_filtered_fanout_search(
         plan=plan,
         partitions_searched=len(ids_l),
         compile_ru=compile_ru,
+        failed_partitions=failed,
+        complete=not failed,
     )
     return ids, dists, info
 
@@ -683,14 +731,22 @@ class SpmdFanout:
         batch_buckets: tuple[int, ...] = smod.BATCH_BUCKETS,
         beam_width: Optional[int] = None,
         rerank_multiplier: float = fmod.QUANTIZED_LIST_MULTIPLIER,
+        health=None,  # optional callable(partition) -> bool
     ) -> tuple[np.ndarray, np.ndarray, dict]:
         """Drop-in for ``batched_fanout_search``: same (ids, dists, info)."""
         parts = list(partitions)
         queries = np.asarray(queries, np.float32)
         B, k = len(queries), int(k)
         n = len(parts)
+        failed: list[tuple[int, str]] = []
+        down = set()
+        for i, p in enumerate(parts):
+            if health is not None and not health(p):
+                down.add(i)
+                failed.append((int(p.pid), "replica set down"))
         prog_idx = [i for i, p in enumerate(parts)
-                    if p.index._graph_built and p.num_docs > 0]
+                    if i not in down
+                    and p.index._graph_built and p.num_docs > 0]
         in_prog = set(prog_idx)
 
         ids_by: list = [None] * n
@@ -702,12 +758,19 @@ class SpmdFanout:
         # host fallback — identical to the serial loop's search_batch call
         W = int(beam_width) if beam_width is not None else None
         for i, p in enumerate(parts):
-            if i in in_prog:
+            if i in in_prog or i in down:
                 continue
             kw: dict = dict(pad_to_bucket=True, batch_buckets=batch_buckets)
             if W is not None:
                 kw["beam_width"] = W
-            ids, dists, ru, stats = p.search_batch(queries, k, L, **kw)
+            try:
+                ids, dists, ru, stats = p.search_batch(queries, k, L, **kw)
+            except CrashError:
+                raise  # an injected process kill is not a partition fault
+            except Exception as e:  # noqa: BLE001 — degrade, don't collapse
+                down.add(i)
+                failed.append((int(p.pid), f"{type(e).__name__}: {e}"))
+                continue
             ids_by[i], d_by[i], rus[i], stats_by[i] = ids, dists, ru, stats
             lat_by[i] = p.providers.meter.latency_ms(
                 counters_for_latency(stats))
@@ -771,15 +834,28 @@ class SpmdFanout:
                 rus[i], stats_by[i] = ru, st
                 lat_by[i] = pv.meter.latency_ms(counters_for_latency(st))
 
-        ids, dists = merge_topk(ids_by, d_by, k)
+        ok = [i for i in range(n) if ids_by[i] is not None]
+        if failed and not ok:
+            raise AllPartitionsFailed(
+                f"all {n} partitions failed: {failed}"
+            )
+        if ok:
+            ids, dists = merge_topk([ids_by[i] for i in ok],
+                                    [d_by[i] for i in ok], k)
+        else:
+            ids = np.full((B, k), -1, np.int64)
+            dists = np.full((B, k), np.inf, np.float32)
         info = dict(
             partition_ids=[int(p.pid) for p in parts],
-            ru_per_partition=rus,
-            ru_total=float(np.sum(rus)),
-            stats_per_partition=stats_by,
-            server_latencies_ms=lat_by,
-            service_latency_ms=float(np.max(lat_by)) if lat_by else 0.0,
+            ru_per_partition=[rus[i] for i in ok],
+            ru_total=float(np.sum([rus[i] for i in ok])) if ok else 0.0,
+            stats_per_partition=[stats_by[i] for i in ok],
+            server_latencies_ms=[lat_by[i] for i in ok],
+            service_latency_ms=(float(np.max([lat_by[i] for i in ok]))
+                                if ok else 0.0),
             spmd=dict(partitions_in_program=len(prog_idx),
                       mesh_devices=self.n_devices),
+            failed_partitions=failed,
+            complete=not failed,
         )
         return ids, dists, info

@@ -78,7 +78,9 @@ class PhysicalPartition:
         None keeps a replaced doc's existing terms (core-level callers that
         never index properties stay property-free)."""
         self.providers.begin_op()
+        self.providers.barrier("upsert:begin")
         self.index.insert(doc_ids, vectors)
+        self.providers.barrier("upsert:post_index")
         for j, (d, h) in enumerate(zip(doc_ids, pk_hashes)):
             d = int(d)
             self.doc_pk[d] = int(h)
@@ -86,20 +88,24 @@ class PhysicalPartition:
                      else self.doc_props.get(d, ()))
             self.props.assign(self.index.doc_to_slot[d], items)
             self.doc_props[d] = items
+        self.providers.barrier("upsert:pre_commit")
         ru, lat = self.providers.end_op()
         delay = self.governor.request(ru)
         return ru, lat + delay * 1000.0
 
     def delete(self, doc_ids: Sequence[int]) -> float:
         self.providers.begin_op()
+        self.providers.barrier("delete:begin")
         for d in doc_ids:
             slot = self.index.doc_to_slot.get(int(d))
             if slot is not None:
                 self.props.remove(slot)
             self.doc_props.pop(int(d), None)
+        self.providers.barrier("delete:post_props")
         self.index.delete(doc_ids)
         for d in doc_ids:
             self.doc_pk.pop(int(d), None)
+        self.providers.barrier("delete:pre_commit")
         ru, _ = self.providers.end_op()
         self.governor.request(ru)
         return ru
@@ -268,11 +274,18 @@ class Collection:
         """Split partition j's hash range in half and re-home documents —
         the paper's partition split behind elastic scaling (§2.2)."""
         old = self.partitions[j]
+        # a crash anywhere before the final partition-list swap abandons
+        # the half-built children and leaves the collection untouched —
+        # split is all-or-nothing at the routing level by construction
+        old.providers.barrier("split:begin")
         mid = (old.lo + old.hi) // 2
         left = PhysicalPartition(self.cfg, old.lo, mid, self._next_pid)
         right = PhysicalPartition(self.cfg, mid, old.hi, self._next_pid + 1)
         self._next_pid += 2
-        for doc, h in old.doc_pk.items():
+        halfway = len(old.doc_pk) // 2
+        for i, (doc, h) in enumerate(old.doc_pk.items()):
+            if i == halfway:
+                old.providers.barrier("split:mid_rehome")
             slot = old.index.doc_to_slot.get(doc)
             if slot is None or not old.providers.live[slot]:
                 continue
@@ -281,6 +294,7 @@ class Collection:
             # property terms re-home with the document: the new partition's
             # posting bitmaps must track its doc_to_slot exactly
             dst.insert([doc], [h], vec, props=[old.doc_props.get(doc, ())])
+        old.providers.barrier("split:pre_commit")
         self.partitions = (
             self.partitions[:j] + [left, right] + self.partitions[j + 1 :]
         )
@@ -290,15 +304,19 @@ class Collection:
         """Merge partitions j and j+1 (adjacent ranges) — scale-in."""
         a, b = self.partitions[j], self.partitions[j + 1]
         assert a.hi == b.lo, "only adjacent ranges merge"
+        a.providers.barrier("merge:begin")
         big = PhysicalPartition(self.cfg, a.lo, b.hi, self._next_pid)
         self._next_pid += 1
         for src in (a, b):
+            if src is b:
+                a.providers.barrier("merge:mid")
             for doc, h in src.doc_pk.items():
                 slot = src.index.doc_to_slot.get(doc)
                 if slot is None or not src.providers.live[slot]:
                     continue
                 big.insert([doc], [h], src.providers.vectors[slot][None, :],
                            props=[src.doc_props.get(doc, ())])
+        a.providers.barrier("merge:pre_commit")
         self.partitions = self.partitions[:j] + [big] + self.partitions[j + 2 :]
         self.merges += 1
 

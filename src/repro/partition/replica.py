@@ -122,18 +122,35 @@ class ReplicaSet:
         self.primary = max(healthy, key=lambda r: r.applied_lsn).rid
         self.failovers += 1
 
-    def rebuild(self, rid: int):
-        """Replace a dead replica: snapshot + WAL replay through the real
-        recovery path, then mark caught up."""
+    def capture(self) -> tuple[bytes, bytes, int, int]:
+        """Atomically capture ``(snapshot, wal, set_lsn, store_lsn)``: the
+        replica-set LSN is read *with* the snapshot/WAL pair, so a rebuild
+        finishing later cannot claim writes that landed after the capture."""
         pv = self.partition.providers
+        lsn = self.lsn
         snap = pv.snapshot_bytes()
         wal = pv.wal_bytes()
+        return snap, wal, lsn, pv.committed
+
+    def rebuild(self, rid: int, capture=None):
+        """Replace a dead replica: snapshot + WAL replay through the real
+        recovery path. The revived replica's ``applied_lsn`` is the LSN
+        captured with the snapshot/WAL pair — NOT the set's current LSN,
+        which may have advanced past what the pair contains; a lagging
+        rebuild comes back behind and catches up like any other replica."""
+        snap, wal, lsn, store_lsn = capture or self.capture()
+        pv = self.partition.providers
         fresh = type(pv)(
             pv.neighbors.shape[0], pv.neighbors.shape[1],
             pv.codes.shape[1], pv.vectors.shape[1],
         )
-        fresh.recover(snap, wal)
-        assert np.array_equal(fresh.live, pv.live)
+        applied = fresh.recover(snap, wal)
+        assert applied == store_lsn, (
+            f"rebuild replayed {applied} committed records, capture had "
+            f"{store_lsn}"
+        )
+        if lsn == self.lsn:  # nothing landed since capture: full parity
+            assert np.array_equal(fresh.live, pv.live)
         self.replicas[rid].alive = True
-        self.replicas[rid].applied_lsn = self.lsn
+        self.replicas[rid].applied_lsn = lsn
         return fresh

@@ -10,12 +10,14 @@ from .trace import (FlightRecorder, Span, Trace, Tracer,
                     validate_trace_record)
 from .vector_engine import (EngineConfig, ServeRequest, ServeResponse,
                             Throttled, VectorServeEngine)
-from .vector_service import VectorCollectionService, VectorQuery
+from .vector_service import (DeadlineExceeded, VectorCollectionService,
+                             VectorQuery)
 
 __all__ = [
     "VectorCollectionService", "VectorQuery", "ServeEngine",
     "VectorServeEngine", "EngineConfig", "ServeRequest", "ServeResponse",
-    "Throttled", "EngineMetrics", "SimClock", "poisson_arrivals",
+    "Throttled", "DeadlineExceeded",
+    "EngineMetrics", "SimClock", "poisson_arrivals",
     "Histogram", "ExactHistogram", "MetricsRegistry",
     "Span", "Trace", "Tracer", "FlightRecorder", "validate_trace_record",
     "ContinuationError", "encode_continuation", "decode_continuation",

@@ -144,6 +144,8 @@ class EngineMetrics:
 
     queries_ok: int = 0
     queries_throttled: int = 0
+    queries_deadline: int = 0  # 408s: deadline expired while queued
+    queries_degraded: int = 0  # 200s served from a partial partition set
     pages_served: int = 0  # merged continuation pages (each RU-metered)
     batches: int = 0
     lanes_total: int = 0  # dispatched lanes incl. padding
@@ -205,6 +207,8 @@ class EngineMetrics:
         return dict(
             queries_ok=self.queries_ok,
             queries_throttled=self.queries_throttled,
+            queries_deadline=self.queries_deadline,
+            queries_degraded=self.queries_degraded,
             pages_served=self.pages_served,
             batches=self.batches,
             qps=self.queries_ok / elapsed,

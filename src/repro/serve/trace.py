@@ -47,6 +47,9 @@ Stage taxonomy (``STAGES``):
   retry       child of lane: a lane fault burned before the work ran
   merge       child of lane: host-side merge / dispatch overhead
   ingest      root span of an ingest mini-batch trace
+  deadline    point event: the request's deadline expired while it was
+              still queued; the engine abandoned it (status 408) and
+              refunded the admission reservation
 """
 from __future__ import annotations
 
@@ -58,7 +61,7 @@ from typing import Any, Optional
 from .metrics import SimClock
 
 STAGES = ("admission", "queue", "batch_form", "lane", "partition", "hedge",
-          "retry", "merge", "ingest")
+          "retry", "merge", "ingest", "deadline")
 
 TRACE_KINDS = ("query", "page", "ingest")
 
@@ -67,6 +70,8 @@ ANOMALY_THROTTLE = "throttle"
 ANOMALY_HEDGE = "hedge"
 ANOMALY_FAULT = "fault_retry"
 ANOMALY_SLO = "slo_violation"
+ANOMALY_DEADLINE = "deadline_exceeded"
+ANOMALY_DEGRADED = "degraded"
 
 
 @dataclasses.dataclass
@@ -232,6 +237,8 @@ class Tracer:
         tags = list(anomalies)
         if status == 429 and ANOMALY_THROTTLE not in tags:
             tags.append(ANOMALY_THROTTLE)
+        if status == 408 and ANOMALY_DEADLINE not in tags:
+            tags.append(ANOMALY_DEADLINE)
         stages = {s.stage for s in tr.spans}
         if "hedge" in stages:
             tags.append(ANOMALY_HEDGE)
@@ -291,10 +298,12 @@ def validate_trace_record(rec: dict) -> None:
 
     Beyond structural checks (keys, types, stage taxonomy, parent links),
     this enforces the cost-attribution contract: for a served (status
-    200) request, the root-level stage spans tile the request interval,
-    so their summed duration equals ``latency_ms`` within clock
-    resolution. That is the invariant that makes per-stage dashboards
-    trustworthy — stages can never silently leak time.
+    200) or deadline-abandoned (status 408) request, the root-level
+    stage spans tile the request interval, so their summed duration
+    equals ``latency_ms`` within clock resolution. That is the
+    invariant that makes per-stage dashboards trustworthy — stages can
+    never silently leak time, even for requests that never reached a
+    lane.
     """
     if not isinstance(rec, dict):
         raise ValueError("trace record must be a dict")
@@ -309,7 +318,7 @@ def validate_trace_record(rec: dict) -> None:
     if rec["t1_s"] < rec["t0_s"]:
         raise ValueError("trace t1_s < t0_s")
     spans = rec["spans"]
-    if rec["status"] == 200 and not spans:
+    if rec["status"] in (200, 408) and not spans:
         raise ValueError("served trace has no spans")
     for i, s in enumerate(spans):
         if not isinstance(s, dict):
@@ -326,7 +335,7 @@ def validate_trace_record(rec: dict) -> None:
         if not -1 <= s["parent"] < i:
             raise ValueError(f"span {i} parent {s['parent']} must point at "
                              f"an earlier span (or -1)")
-    if rec["status"] == 200:
+    if rec["status"] in (200, 408):
         root_ms = sum(s["dur_ms"] for s in spans if s["parent"] == -1)
         tol = 1e-6 + 1e-9 * abs(rec["latency_ms"])
         if abs(root_ms - rec["latency_ms"]) > tol:

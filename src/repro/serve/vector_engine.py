@@ -47,16 +47,18 @@ import numpy as np
 
 from ..core import flat as fmod
 from ..core import search as smod
-from ..partition.fanout import (SpmdFanout, batched_fanout_search,
+from ..partition.fanout import (AllPartitionsFailed, SpmdFanout,
+                                batched_fanout_search,
                                 batched_filtered_fanout_search,
                                 compile_partition_filter, merge_topk,
                                 spmd_jit_cache_size)
+from ..store.faults import CrashError
 from ..store.ru import OpCounters, ResourceGovernor
 from .executor import LaneExecutor
 from .metrics import EngineMetrics, SimClock
 from .obs import MetricsRegistry
 from .predicate import Predicate
-from .trace import Tracer
+from .trace import ANOMALY_DEGRADED, Tracer
 
 
 def serving_jit_cache_size() -> int:
@@ -111,6 +113,13 @@ class EngineConfig:
     trace: bool = True  # per-request lifecycle traces; off = zero overhead
     flight_recorder: int = 256  # trace records retained (ring + anomaly ring)
     trace_slo_ms: Optional[float] = 50.0  # SLO-violating traces always captured
+    # ---- fault tolerance ----
+    # engine-wide deadline bound: every request's effective deadline is
+    # min(request deadline, this). None → unbounded unless the request
+    # sets one. Deadlines are *queue-abandonment* budgets: a request whose
+    # deadline expires while still queued is answered 408 with its RU
+    # reservation refunded, before any lane work is spent on it.
+    default_deadline_ms: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -133,12 +142,18 @@ class ServeRequest:
     arrival_s: float = -1.0
     reserved_ru: float = 0.0  # admission reservation, reconciled at dispatch
     admit_s: float = -1.0  # when the admission decision was made (trace plane)
+    # queue-abandonment budget (ms from arrival). None → engine default.
+    # A request still queued past its deadline is abandoned with a 408
+    # and its reservation refunded; a request already dispatched runs to
+    # completion (its answer may arrive "late" but is still a 200).
+    deadline_ms: Optional[float] = None
+    deadline_s: float = np.inf  # absolute expiry, stamped at submit()
 
 
 @dataclasses.dataclass
 class ServeResponse:
     rid: int
-    status: int  # 200 served, 429 throttled
+    status: int  # 200 served, 408 deadline-abandoned, 429 throttled
     ids: Optional[np.ndarray] = None  # (k,)
     dists: Optional[np.ndarray] = None
     ru: float = 0.0
@@ -147,6 +162,10 @@ class ServeResponse:
     wait_ms: float = 0.0
     retry_after_s: float = 0.0
     batch_size: int = 0  # true lanes in the dispatching micro-batch
+    # False → degraded: one or more partitions were down/faulted and the
+    # results merge only the survivors (the plan carries a
+    # ``+degraded[pids]`` marker naming the missing partitions)
+    complete: bool = True
 
 
 class VectorServeEngine:
@@ -170,6 +189,11 @@ class VectorServeEngine:
         # replica in every set (reads stop routing there), a re-probed lane
         # rebuilds it through the real snapshot+WAL recovery path
         self.replica_sets = list(replica_sets) if replica_sets else []
+        # partition → its replica set, for per-partition health checks at
+        # dispatch time (degradation: a partition whose replica set is
+        # entirely down is skipped, not fatal)
+        self._rs_by_partition = {id(rs.partition): rs
+                                 for rs in self.replica_sets}
         on_down = on_up = on_read = None
         if self.replica_sets:
             def on_down(lane: int, now_s: float):
@@ -273,6 +297,12 @@ class VectorServeEngine:
         req.admit_s = self.clock.now()
         if req.arrival_s < 0:
             req.arrival_s = self.clock.now()
+        dl = req.deadline_ms
+        if self.cfg.default_deadline_ms is not None:
+            dl = (self.cfg.default_deadline_ms if dl is None
+                  else min(dl, self.cfg.default_deadline_ms))
+        if dl is not None:
+            req.deadline_s = req.arrival_s + dl / 1000.0
         self.queue.append(req)
         return None
 
@@ -280,13 +310,14 @@ class VectorServeEngine:
                      L: Optional[int] = None, tenant: Any = "default",
                      exact: bool = False, shard_key: Any = None,
                      arrival_s: float = -1.0,
-                     predicate: Optional[Predicate] = None) -> int:
+                     predicate: Optional[Predicate] = None,
+                     deadline_ms: Optional[float] = None) -> int:
         rid = self._next_rid
         self._next_rid += 1
         self.submit(ServeRequest(rid=rid, vector=np.asarray(vector, np.float32),
                                  k=k, L=L, tenant=tenant, exact=exact,
                                  shard_key=shard_key, arrival_s=arrival_s,
-                                 predicate=predicate))
+                                 predicate=predicate, deadline_ms=deadline_ms))
         return rid
 
     def submit_ingest(self, kind: str, apply_fn: Callable[[], float],
@@ -373,6 +404,17 @@ class VectorServeEngine:
     def _dispatch(self, key: tuple, batch: list[ServeRequest]):
         in_batch = set(id(r) for r in batch)
         self.queue = [r for r in self.queue if id(r) not in in_batch]
+        # deadline sweep: a request whose budget expired while it queued is
+        # abandoned HERE — before any lane work is spent on it — with its
+        # admission reservation refunded (the 408 path)
+        now = self.clock.now()
+        expired = [r for r in batch if r.deadline_s <= now]
+        if expired:
+            batch = [r for r in batch if r.deadline_s > now]
+            for r in expired:
+                self._expire(r, now)
+            if not batch:
+                return
         # a batch beyond the largest bucket is split into top-bucket chunks
         # instead of minting a new padded shape (each extra shape is a
         # compile stall — the tail-latency failure mode bucketing removes)
@@ -389,25 +431,61 @@ class VectorServeEngine:
                     self.tenant_governor(r.tenant).refund(r.reserved_ru)
                 raise
 
+    def _partition_health(self, p) -> bool:
+        """False when the partition's entire replica set is down (degrade:
+        skip it); partitions without a replica set are always healthy."""
+        rs = self._rs_by_partition.get(id(p))
+        return rs is None or bool(rs.healthy())
+
+    def _expire(self, r: ServeRequest, now_s: float):
+        """Abandon one deadline-expired queued request: refund the
+        admission reservation (no work was done on the tenant's dime),
+        answer 408, and emit a trace whose root spans — admission point,
+        queue [arrival → expiry], deadline point — tile the waited
+        interval exactly like a served request's do."""
+        self.tenant_governor(r.tenant).refund(r.reserved_ru)
+        waited_ms = (now_s - r.arrival_s) * 1000.0
+        assert r.rid not in self.responses
+        self.responses[r.rid] = ServeResponse(
+            rid=r.rid, status=408, latency_ms=waited_ms, wait_ms=waited_ms,
+        )
+        self.metrics.queries_deadline += 1
+        ts = str(r.tenant)
+        self.obs.inc("serve_requests_total", tenant=ts, kind="query",
+                     status="408")
+        self.obs.inc("serve_deadline_total", tenant=ts)
+        tr = self.tracer.begin("query", r.tenant, r.rid)
+        if tr is None:
+            return
+        tr.span("admission", "admission", r.admit_s, r.admit_s,
+                reserved_ru=r.reserved_ru, refunded=True)
+        tr.span("queue", "queue", r.arrival_s, now_s)
+        tr.span("deadline", "deadline", now_s, now_s,
+                deadline_ms=(r.deadline_s - r.arrival_s) * 1000.0,
+                waited_ms=waited_ms)
+        self.tracer.finish(tr, status=408, ru=0.0, latency_ms=waited_ms,
+                           t0_s=r.arrival_s, t1_s=now_s)
+
     def _dispatch_chunk(self, key: tuple, batch: list[ServeRequest]):
         shard_key, k, L, exact, _pred_key = key
         predicate = batch[0].predicate  # whole group shares one canonical key
         queries = np.stack([r.vector for r in batch]).astype(np.float32)
+        health = self._partition_health if self.replica_sets else None
 
         def run():
             # the plan body: the executor decides WHERE/WHEN this service
             # time is spent, never what runs
             partitions = self._resolve(shard_key)
             if exact:
-                ids, dists, ru_total, service_ms, plan, pspans = \
+                ids, dists, ru_total, service_ms, plan, pspans, failed = \
                     self._exact_scan(partitions, queries, k,
-                                     predicate=predicate)
+                                     predicate=predicate, health=health)
             else:
                 if predicate is not None:
                     ids, dists, info = batched_filtered_fanout_search(
                         partitions, queries, k, predicate, L=L,
                         batch_buckets=self.cfg.batch_buckets,
-                        beam_width=self.cfg.beam_width,
+                        beam_width=self.cfg.beam_width, health=health,
                     )
                     plan = info["plan"]
                 elif self.cfg.dispatch_mode == "spmd":
@@ -416,25 +494,32 @@ class VectorServeEngine:
                         batch_buckets=self.cfg.batch_buckets,
                         beam_width=self.cfg.beam_width,
                         rerank_multiplier=self.cfg.search_list_multiplier,
+                        health=health,
                     )
                     plan = "graph-spmd"
                 else:
                     ids, dists, info = batched_fanout_search(
                         partitions, queries, k, L=L,
                         batch_buckets=self.cfg.batch_buckets,
-                        beam_width=self.cfg.beam_width,
+                        beam_width=self.cfg.beam_width, health=health,
                     )
                     plan = "graph"
                 ru_total = info["ru_total"]
                 service_ms = info["service_latency_ms"]
                 pspans = self._partition_spans(info)
+                failed = list(info.get("failed_partitions", ()))
                 pstats = info["stats_per_partition"]
                 if pstats:
                     self.metrics.note_hops(
                         float(np.mean([s.hops for s in pstats])), len(batch)
                     )
+            # degraded fan-out: the survivors answered; record each missing
+            # partition as a zero-duration failure span under the lane
+            for pid, err in failed:
+                pspans.append((0.0, dict(pid=int(pid), failed=True,
+                                         error=str(err), ru=0.0)))
             service_ms += self.cfg.dispatch_overhead_ms
-            return (ids, dists, plan, pspans), service_ms, ru_total
+            return (ids, dists, plan, pspans, failed), service_ms, ru_total
 
         try:
             out = self.executor.dispatch(run)
@@ -445,7 +530,10 @@ class VectorServeEngine:
                 self.tenant_governor(r.tenant).refund(r.reserved_ru)
             raise
 
-        ids, dists, plan, pspans = out.payload
+        ids, dists, plan, pspans, failed = out.payload
+        complete = not failed
+        if failed:
+            plan += "+degraded[" + ",".join(str(p) for p, _ in failed) + "]"
         ru_work = out.ru  # the batch's search work, hedge surcharge apart
         ru_total = out.ru + out.hedge_ru  # hedged duplicates bill in full
         service_ms = (out.end_s - out.start_s) * 1000.0
@@ -473,8 +561,12 @@ class VectorServeEngine:
             self.responses[r.rid] = ServeResponse(
                 rid=r.rid, status=200, ids=ids[i], dists=dists[i], ru=ru_q,
                 plan=plan, latency_ms=lat_ms, wait_ms=wait_ms, batch_size=B,
+                complete=complete,
             )
             self.metrics.queries_ok += 1
+            if not complete:
+                self.metrics.queries_degraded += 1
+                self.obs.inc("serve_degraded_total", tenant=str(r.tenant))
             self.metrics.latency_ms.observe(lat_ms)
             self.metrics.wait_ms.observe(wait_ms)
             self._settle(r.tenant, ru_q, r.reserved_ru)
@@ -489,7 +581,9 @@ class VectorServeEngine:
             self.obs.observe("serve_stage_ms", lat_ms - wait_ms, stage="lane")
             self._emit_trace("query", r.rid, r.tenant, r.arrival_s,
                              r.admit_s, r.reserved_ru, out, plan, B, bucket,
-                             ru_q, lat_ms, pspans=pspans)
+                             ru_q, lat_ms, pspans=pspans,
+                             anomalies=() if complete
+                             else (ANOMALY_DEGRADED,))
 
     # ------------------------------------------------------------------
     # trace plane
@@ -532,7 +626,8 @@ class VectorServeEngine:
     def _emit_trace(self, kind: str, rid: int, tenant: Any, arrival_s: float,
                     admit_s: float, reserved_ru: float, out, plan: str,
                     batch_size: int, bucket: int, ru: float, lat_ms: float,
-                    pspans: Sequence = (), extra_spans: Sequence = ()):
+                    pspans: Sequence = (), extra_spans: Sequence = (),
+                    anomalies: tuple = ()):
         """Record one served request's lifecycle trace from its dispatch
         outcome. The root spans — queue [arrival → lane start] and lane
         [lane start → completion] — tile the request interval, so their
@@ -571,7 +666,7 @@ class VectorServeEngine:
         ov = min(self.cfg.dispatch_overhead_ms / 1000.0, end - start)
         tr.span("merge", "merge", end - max(ov, 0.0), end, parent=lane)
         self.tracer.finish(tr, status=200, ru=ru, latency_ms=lat_ms,
-                           t0_s=arrival_s, t1_s=end)
+                           t0_s=arrival_s, t1_s=end, anomalies=anomalies)
 
     def _spmd(self) -> SpmdFanout:
         if self._spmd_fanout is None:
@@ -583,44 +678,61 @@ class VectorServeEngine:
         return self._spmd_fanout
 
     def _exact_scan(self, partitions, queries: np.ndarray, k: int,
-                    predicate: Optional[Predicate] = None):
+                    predicate: Optional[Predicate] = None, health=None):
         """Batched VectorDistance(..., true): bucketed brute force per
         partition + merge (the paper's full-scan plan, RU-costed as a
         quantized-ish scan). With ``predicate`` the flat scan runs over
         the FILTERED subset — the compiled bitmap masks the scan, so
         ``WHERE`` + ``VectorDistance(..., true)`` brute-forces exactly the
-        matching documents instead of silently ignoring the filter."""
+        matching documents instead of silently ignoring the filter.
+        ``health``-failed or faulting partitions degrade (skipped, listed
+        in the returned ``failed``); only every partition failing raises
+        ``AllPartitionsFailed``."""
         B = len(queries)
         plan = "exact" if predicate is None else "exact-filtered"
+        failed: list = []  # (pid, error) per unreachable partition
         if not partitions:  # empty tenant collection: nothing to scan
             return (np.full((B, k), -1, np.int64), np.full((B, k), np.inf),
-                    0.0, 0.0, plan, [])
+                    0.0, 0.0, plan, [], failed)
         padded = smod.pad_batch_np(
             queries, smod.next_bucket(B, self.cfg.batch_buckets)
         )
         ids_l, d_l, ru, service_ms = [], [], 0.0, 0.0
         pspans: list = []  # (latency_ms, attrs) per scanned partition
+        answered = 0
         for p in partitions:
-            pv = p.providers
-            scan_mask = pv.live
-            n_scan = p.num_docs
-            ru_p = 0.0
-            if predicate is not None:
-                if p.num_docs == 0:
-                    continue
-                mask, _words, nreads = compile_partition_filter(p, predicate)
-                # bill the compile's posting lookups even when the
-                # partition is then skipped as a no-match
-                ru_p += nreads * pv.meter.cfg.ru_per_prop_read
-                if mask is None:
-                    ru += ru_p
-                    continue
-                scan_mask = mask & pv.live
-                n_scan = int(scan_mask.sum())
-            ids, dists = fmod.brute_force(
-                jnp.asarray(padded), jnp.asarray(pv.vectors),
-                jnp.asarray(scan_mask), k=k, metric=p.index.cfg.metric,
-            )
+            if health is not None and not health(p):
+                failed.append((p.pid, "replica set down"))
+                continue
+            try:
+                pv = p.providers
+                scan_mask = pv.live
+                n_scan = p.num_docs
+                ru_p = 0.0
+                if predicate is not None:
+                    if p.num_docs == 0:
+                        answered += 1
+                        continue
+                    mask, _words, nreads = compile_partition_filter(p, predicate)
+                    # bill the compile's posting lookups even when the
+                    # partition is then skipped as a no-match
+                    ru_p += nreads * pv.meter.cfg.ru_per_prop_read
+                    if mask is None:
+                        ru += ru_p
+                        answered += 1
+                        continue
+                    scan_mask = mask & pv.live
+                    n_scan = int(scan_mask.sum())
+                ids, dists = fmod.brute_force(
+                    jnp.asarray(padded), jnp.asarray(pv.vectors),
+                    jnp.asarray(scan_mask), k=k, metric=p.index.cfg.metric,
+                )
+            except CrashError:
+                raise  # injected process kill: never degrade past it
+            except Exception as e:  # noqa: BLE001 — degrade, don't fail
+                failed.append((p.pid, f"{type(e).__name__}: {e}"))
+                continue
+            answered += 1
             ids_l.append(p.index._to_doc_ids(np.asarray(ids))[:B])
             d_l.append(np.asarray(dists)[:B])
             # every lane scans the (filtered) subset: full scan at
@@ -634,11 +746,15 @@ class VectorServeEngine:
             service_ms = max(service_ms, lat_p)
             pspans.append((lat_p, dict(pid=int(p.pid), ru=ru_p,
                                        n_scan=n_scan, plan=plan)))
+        if failed and answered == 0:
+            raise AllPartitionsFailed(
+                f"exact scan: all partitions failed: {failed}"
+            )
         if not ids_l:  # predicate matched nothing anywhere
             return (np.full((B, k), -1, np.int64), np.full((B, k), np.inf),
-                    ru, service_ms, plan, pspans)
+                    ru, service_ms, plan, pspans, failed)
         ids, dists = merge_topk(ids_l, d_l, k)
-        return ids, dists, ru, service_ms, plan, pspans
+        return ids, dists, ru, service_ms, plan, pspans, failed
 
     # ------------------------------------------------------------------
     # host-path execution (filtered plans need the document store; the
@@ -786,6 +902,10 @@ class VectorServeEngine:
                 qps=served / elapsed,
                 throttled=self.obs.counter_value("serve_throttled_total",
                                                  tenant=t),
+                deadline_exceeded=self.obs.counter_value(
+                    "serve_deadline_total", tenant=t),
+                degraded=self.obs.counter_value("serve_degraded_total",
+                                                tenant=t),
                 ru_query=self.obs.counter_value("serve_ru_total", tenant=t,
                                                 op="query"),
                 ru_page=self.obs.counter_value("serve_ru_total", tenant=t,

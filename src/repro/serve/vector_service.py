@@ -40,6 +40,19 @@ from .predicate import Predicate, property_items
 from .vector_engine import EngineConfig, ServeRequest, Throttled, VectorServeEngine
 
 
+class DeadlineExceeded(Exception):
+    """408-style abandonment: the request's deadline expired while it was
+    still queued; no work was done and the RU reservation was refunded."""
+
+    def __init__(self, tenant: Any, waited_ms: float):
+        super().__init__(
+            f"tenant {tenant!r} request abandoned after waiting "
+            f"{waited_ms:.3f} ms past its deadline"
+        )
+        self.tenant = tenant
+        self.waited_ms = waited_ms
+
+
 @dataclasses.dataclass
 class VectorQuery:
     vector: np.ndarray
@@ -54,6 +67,9 @@ class VectorQuery:
     shard_key: Any = None  # route to a sharded-DiskANN tenant index
     tenant: Any = "default"  # RU-admission principal (429s when over budget)
     beam_width: Optional[int] = None  # paged-path W override; None → engine cfg
+    # queue-abandonment budget (ms): expires → DeadlineExceeded (408),
+    # reservation refunded. None → EngineConfig.default_deadline_ms.
+    deadline_ms: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -64,6 +80,9 @@ class QueryResult:
     plan: str
     continuation: Optional[bytes] = None
     latency_ms: float = 0.0
+    # False → one or more partitions were unreachable and the results
+    # merge only the survivors (see the plan's ``+degraded[pids]`` marker)
+    complete: bool = True
 
 
 class VectorCollectionService:
@@ -217,7 +236,13 @@ class VectorCollectionService:
     # ------------------------------------------------------------------
     def query(self, q: VectorQuery) -> QueryResult:
         """Route one query through the serving engine. Raises ``Throttled``
-        when the tenant is over its RU budget (the 429 path).
+        when the tenant is over its RU budget (the 429 path) and
+        ``DeadlineExceeded`` when ``q.deadline_ms`` (or the engine's
+        default) expires while the request is queued (the 408 path — the
+        reservation is refunded, no partition work happens). A query that
+        merged only a subset of partitions (the rest down/faulted)
+        returns ``complete=False`` rather than failing; only every
+        partition failing raises (``partition.fanout.AllPartitionsFailed``).
 
         ``q.filter`` must be a declarative ``Predicate`` (or None): it
         flows through the engine's micro-batcher (same-predicate queries
@@ -241,11 +266,15 @@ class VectorCollectionService:
         resp = self.engine.query_sync(ServeRequest(
             rid=rid, vector=qv, k=q.k, L=L, tenant=q.tenant,
             exact=q.exact, shard_key=q.shard_key, predicate=q.filter,
+            deadline_ms=q.deadline_ms,
         ))
         if resp.status == 429:
             raise Throttled(q.tenant, resp.retry_after_s)
+        if resp.status == 408:
+            raise DeadlineExceeded(q.tenant, resp.wait_ms)
         return QueryResult(resp.ids, resp.dists, resp.ru, resp.plan,
-                           latency_ms=resp.latency_ms)
+                           latency_ms=resp.latency_ms,
+                           complete=resp.complete)
 
     # ------------------------------------------------------------------
     # pagination / continuation tokens (§3.5 "Continuations")

@@ -226,6 +226,18 @@ class BwTree:
                 if not advanced and self._fences[pidx] > prefix + b"\xff" * 4:
                     return
 
+    def dump_items(self) -> list[tuple[bytes, bytes]]:
+        """Every (key, value) pair in key order, after consolidating all
+        delta chains — the logical content a snapshot must capture. Two
+        trees with equal dumps answer every read identically."""
+        pidx = 0
+        while pidx < len(self._pages):  # consolidation may split pages
+            self._maybe_consolidate(pidx, force=True)
+            pidx += 1
+        return [
+            (k, page.base[k]) for page in self._pages for k in page.keys
+        ]
+
     def chain_length(self, key: bytes) -> int:
         return len(self._pages[self._locate(key)].deltas)
 

@@ -9,17 +9,24 @@ store read path exists for cold reads and for benchmarks that need page /
 chain-length accounting (Figs 11-12).
 
 A write-ahead log provides crash recovery: `snapshot()` + WAL replay
-reconstructs both the store and the cache (tests/test_store.py exercises
-kill-and-recover).
+reconstructs both the store and the cache (tests/test_store.py and
+tests/test_faults.py exercise kill-and-recover). Durability bytes travel
+through the pickle-free codec in ``store/codec.py``: the snapshot is
+versioned + CRC'd, and each WAL record is one committed transaction with
+its own CRC, so recovery truncates a torn tail to the last whole
+transaction instead of raising — and rejects interior bit rot instead of
+silently losing committed data. Writes made inside a ``begin_op`` /
+``end_op`` window commit atomically at ``end_op``; a crash in between
+leaves no trace of the interrupted operation in the log.
 """
 from __future__ import annotations
 
-import pickle
 from typing import Optional
 
 import numpy as np
 
 from ..core.providers import ArrayProviderSet, Context
+from . import codec as storecodec
 from .bwtree import BwTree
 from .ru import OpCounters, RUConfig, RUMeter
 from .terms import TermCodec, merge_adjacency
@@ -40,31 +47,55 @@ class StoreProviderSet(ArrayProviderSet):
         wal: bool = True,
     ):
         super().__init__(capacity, R_slack, M, dim)
+        self._cache_pages = cache_pages
         self.tree = BwTree(merge_fn=merge_adjacency, cache_pages=cache_pages)
         self.codec = TermCodec(path)
         self.meter = ru or RUMeter(RUConfig())
         self.op = OpCounters()  # counters for the current logical operation
-        self._wal: list[tuple] | None = [] if wal else None
+        # committed WAL: one record (list of entries) per transaction
+        self._wal: list[list[tuple]] | None = [] if wal else None
+        self._txn: list[tuple] | None = None  # open (uncommitted) transaction
+        self.committed = 0  # committed records since construction/recovery
+        self.snapshot_lsn = 0  # `committed` as of the last snapshot
+        self.recovered_torn_tail = False
+        self.faults = None  # optional store.faults.FaultPlan
 
     # ------------------------------------------------------------------
+    def barrier(self, name: str):
+        """Crash-injection point: a no-op unless a FaultPlan is attached."""
+        if self.faults is not None:
+            self.faults.barrier(name)
+
     def begin_op(self):
         self.op = OpCounters()
+        # open a WAL transaction; an uncommitted one left behind by an
+        # injected crash is discarded — exactly what a process kill does
+        self._txn = [] if self._wal is not None else None
 
     def end_op(self) -> tuple[float, float]:
-        """Returns (RU charge, modelled latency ms) for the finished op."""
-        before = (self.tree.stats.page_reads, self.tree.stats.cache_misses,
-                  self.tree.stats.delta_traversals)
+        """Returns (RU charge, modelled latency ms) for the finished op.
+        Commits the op's WAL transaction atomically: all entries land as
+        one record, or (if the op crashed before reaching here) none do."""
         self.op.page_reads = self.tree.stats.page_reads
         self.op.cache_misses = self.tree.stats.cache_misses
         self.op.chain_records = self.tree.stats.delta_traversals
         self.tree.stats.reset()
         ru = self.meter.charge(self.op)
         lat = self.meter.latency_ms(self.op)
+        if self._wal is not None and self._txn:
+            self._wal.append(self._txn)
+            self.committed += 1
+        self._txn = None
         return ru, lat
 
     def _log(self, *entry):
-        if self._wal is not None:
-            self._wal.append(entry)
+        if self._wal is None:
+            return
+        if self._txn is not None:
+            self._txn.append(entry)
+        else:  # bare write outside a begin_op/end_op window: auto-commit
+            self._wal.append([entry])
+            self.committed += 1
 
     # ------------------------------------------------------------------
     # neighbor (forward) terms
@@ -130,6 +161,8 @@ class StoreProviderSet(ArrayProviderSet):
         and adjacency terms, and each upsert is RU-metered."""
         self.tree.upsert(term_key, self.codec.encode_posting(words))
         self.op.prop_writes += 1
+        self._log("write_prop_posting", bytes(term_key),
+                  np.asarray(words).copy())
 
     def read_prop_posting(self, term_key: bytes) -> Optional[np.ndarray]:
         self.op.prop_reads += 1
@@ -155,38 +188,84 @@ class StoreProviderSet(ArrayProviderSet):
         self._log("set_live", np.asarray(ids).copy(), value)
 
     # ------------------------------------------------------------------
-    # durability: snapshot + WAL replay
+    # durability: snapshot + WAL replay (pickle-free; store/codec.py)
     # ------------------------------------------------------------------
     def snapshot_bytes(self) -> bytes:
-        state = dict(
-            neighbors=self.neighbors,
-            codes=self.codes,
-            versions=self.versions,
-            live=self.live,
-            vectors=self.vectors,
-            tree=self.tree,  # the durable term state itself
-        )
+        """Checkpoint the durable state (dense caches + every term in the
+        Bw-Tree) and clear the committed WAL. Uncommitted transaction
+        entries are never captured — they don't exist durably yet."""
+        self.snapshot_lsn = self.committed
         if self._wal is not None:
             self._wal = []
-        return pickle.dumps(state)
+        return storecodec.encode_snapshot(
+            self.neighbors, self.codes, self.versions, self.live,
+            self.vectors, self.tree.dump_items(), self.snapshot_lsn,
+        )
 
     def wal_bytes(self) -> bytes:
-        return pickle.dumps(self._wal or [])
+        return storecodec.encode_wal(self._wal or [])
 
-    def recover(self, snapshot: bytes, wal: bytes, ctx: Context = Context()):
-        state = pickle.loads(snapshot)
-        self.neighbors[:] = state["neighbors"]
-        self.codes[:] = state["codes"]
-        self.versions[:] = state["versions"]
-        self.live[:] = state["live"]
-        self.vectors[:] = state["vectors"]
-        self.tree = state["tree"]
+    def _check_replay_entry(self, name: str, args: tuple):
+        """Schema-check decoded WAL args against THIS provider's topology
+        before they touch fancy indexing (recovery bytes are untrusted)."""
+        capacity = self.neighbors.shape[0]
+        if name == "write_prop_posting":
+            return
+        ids = np.atleast_1d(args[0])
+        if ids.size and (ids.min() < 0 or ids.max() >= capacity):
+            raise storecodec.StoreCodecError(f"{name}: doc id out of range")
+        want = {
+            "set_neighbors": (1, self.neighbors.shape[1]),
+            "set_quant": (1, self.codes.shape[1]),
+            "set_full": (1, self.vectors.shape[1]),
+        }.get(name)
+        if want is not None:
+            rows = np.asarray(args[1])
+            if rows.ndim != 2 or rows.shape[1] != want[1] \
+                    or rows.shape[0] != ids.shape[0]:
+                raise storecodec.StoreCodecError(f"{name}: row shape mismatch")
+
+    def recover(self, snapshot: bytes, wal: bytes,
+                ctx: Context = Context()) -> int:
+        """Restore from (snapshot, wal) bytes: validate + load the
+        snapshot, rebuild the term tree, then replay committed WAL records
+        to the longest consistent prefix. A torn tail is truncated
+        (``recovered_torn_tail`` flags it); interior corruption raises.
+        Returns the applied LSN (committed-record count)."""
+        arrays, tree_items, base_lsn = storecodec.decode_snapshot(
+            snapshot, self.neighbors.shape[0], self.neighbors.shape[1],
+            self.codes.shape[1], self.vectors.shape[1],
+        )
+        records, torn = storecodec.decode_wal(wal)  # parse BEFORE mutating
+        self.neighbors[:] = arrays["neighbors"].reshape(self.neighbors.shape)
+        self.codes[:] = arrays["codes"].reshape(self.codes.shape)
+        self.versions[:] = arrays["versions"]
+        self.live[:] = arrays["live"].astype(bool)
+        self.vectors[:] = arrays["vectors"].reshape(self.vectors.shape)
+        tree = BwTree(merge_fn=merge_adjacency, cache_pages=self._cache_pages)
+        for key, value in tree_items:
+            tree.upsert(key, value)
+        self.tree = tree
         self._dirty()
-        entries = pickle.loads(wal)
         saved_wal, self._wal = self._wal, None  # don't re-log during replay
+        self._txn = None
         try:
-            for entry in entries:
-                op, *args = entry
-                getattr(self, op)(ctx, *args)
+            for entries in records:
+                for name, *args in entries:
+                    self._check_replay_entry(name, tuple(args))
+                    if name == "write_prop_posting":
+                        self.write_prop_posting(args[0], args[1])
+                    elif name == "set_live":
+                        self.set_live(ctx, args[0], bool(args[1]))
+                    elif name == "append_neighbors":
+                        # python int → basic indexing (a 0-d array index
+                        # would copy the row instead of viewing it)
+                        self.append_neighbors(ctx, int(args[0]), args[1])
+                    else:
+                        getattr(self, name)(ctx, *args)
         finally:
             self._wal = [] if saved_wal is not None else None
+        self.committed = base_lsn + len(records)
+        self.snapshot_lsn = base_lsn
+        self.recovered_torn_tail = torn
+        return self.committed
