@@ -73,7 +73,8 @@ def _build(n: int, dim: int, parts: int, replicas: int, seed: int):
     return svc, data, rng
 
 
-def _engine(svc, flight: int, lanes: int) -> VectorServeEngine:
+def _engine(svc, flight: int, lanes: int,
+            policy: str = "static") -> VectorServeEngine:
     # admission ON with an unreachable budget: every RU flows through the
     # governors (reservation → settle/refund) so conservation is testable,
     # but no request 429s — the run measures faults, not throttling.
@@ -82,7 +83,8 @@ def _engine(svc, flight: int, lanes: int) -> VectorServeEngine:
     cfg = EngineConfig(max_batch=8, dispatch_mode="replica", lanes=lanes,
                       admission_control=True, tenant_ru_s=10**9,
                       straggler_p=0.2, hedge_at_ms=0.5, dispatch_seed=7,
-                      lane_reprobe_after_s=0.05, flight_recorder=flight)
+                      lane_reprobe_after_s=0.05, flight_recorder=flight,
+                      policy=policy)
     return VectorServeEngine(svc.collection, cfg=cfg,
                              replica_sets=svc.replica_sets)
 
@@ -247,7 +249,7 @@ def _crash_cycles(seed: int, barriers=CRASH_BARRIERS) -> dict:
 
 def run_chaos(n: int = 2000, dim: int = 32, parts: int = 3, replicas: int = 3,
               n_queries: int = 400, rate_qps: float = 400.0, seed: int = 29,
-              n_tight_deadlines: int = 3) -> dict:
+              n_tight_deadlines: int = 3, policy: str = "static") -> dict:
     svc, data, rng = _build(n, dim, parts, replicas, seed)
     queries = data[rng.choice(n, n_queries, replace=False)] + 0.01
     gt = rec.ground_truth(queries, data, np.ones(n, bool), 10)
@@ -265,9 +267,15 @@ def run_chaos(n: int = 2000, dim: int = 32, parts: int = 3, replicas: int = 3,
     base_p95 = eng0.metrics.latency_ms.percentile(95)
 
     # chaos run: same traffic + seeded fault schedule + a deadline wave
-    # (a handful of sub-queue-wait budgets mid-stream MUST be abandoned)
-    eng = _engine(svc, flight=4 * n_queries, lanes=replicas)
-    warmup(eng, data)
+    # (a handful of sub-queue-wait budgets mid-stream MUST be abandoned).
+    # With policy="adaptive" the SAME fault gates must hold while the
+    # control loop actuates W / ingest yield mid-chaos (ISSUE 9).
+    eng = _engine(svc, flight=4 * n_queries, lanes=replicas, policy=policy)
+    if eng.policy.enabled:
+        from .bench_adaptive import warmup_widths
+        warmup_widths(eng, data, eng.cfg.policy_widths)
+    else:
+        warmup(eng, data)
     # governors survive the warmup metrics reset; conservation is checked
     # against what THIS epoch settles, so baseline the consumed totals
     consumed0 = {t: g.consumed for t, g in eng.tenants.items()}
@@ -323,7 +331,8 @@ def run_chaos(n: int = 2000, dim: int = 32, parts: int = 3, replicas: int = 3,
     m = eng.metrics
     out = dict(
         config=dict(n=n, dim=dim, parts=parts, replicas=replicas,
-                    n_queries=n_queries, rate_qps=rate_qps, seed=seed),
+                    n_queries=n_queries, rate_qps=rate_qps, seed=seed,
+                    policy=policy),
         schedule=stats,
         availability=availability,
         served=len(ok), deadline_abandoned=len(aborted),
@@ -365,11 +374,11 @@ def run_chaos(n: int = 2000, dim: int = 32, parts: int = 3, replicas: int = 3,
     return out
 
 
-def run(smoke: bool = False) -> dict:
+def run(smoke: bool = False, policy: str = "static") -> dict:
     if smoke:
         return run_chaos(n=600, dim=32, parts=3, replicas=3, n_queries=160,
-                         rate_qps=400.0, n_tight_deadlines=1)
-    return run_chaos()
+                         rate_qps=400.0, n_tight_deadlines=1, policy=policy)
+    return run_chaos(policy=policy)
 
 
 def main(smoke: bool = False):

@@ -624,6 +624,14 @@ def run(n: int = 3000, dim: int = 32, n_queries: int = 384,
     # traffic, self-asserting its availability/recall/RU-conservation floors
     from . import bench_chaos
     chaos = bench_chaos.run(smoke=smoke)
+    # ISSUE 9: the adaptive control plane — static vs adaptive policy on
+    # diurnal traffic, plus the chaos gates re-run with the policy live.
+    # Smoke runs get this section from check.sh's separate
+    # `bench_adaptive --smoke` step (it merges into the same json).
+    adaptive = None
+    if not smoke:
+        from . import bench_adaptive
+        adaptive = bench_adaptive.run(smoke=False)
 
     out = dict(
         config=dict(n=n, dim=dim, n_queries=n_queries, rates=list(rates),
@@ -638,6 +646,8 @@ def run(n: int = 3000, dim: int = 32, n_queries: int = 384,
         observability=obs,
         chaos=chaos,
     )
+    if adaptive is not None:
+        out["adaptive"] = adaptive
     return out
 
 
@@ -726,6 +736,14 @@ def main(smoke: bool = False):
           f"RU err {ch['ru_conservation_rel_err']:.2e}, "
           f"recoveries={ch['replica_recoveries']}, crash cycles "
           f"{ch['crash_recovery']['parity_ok']}/{ch['crash_recovery']['cycles']}")
+    if "adaptive" in out:
+        ad = out["adaptive"]
+        print(f"  adaptive: SLO {100 * ad['slo_compliance_adaptive']:.1f}% "
+              f"(static W4 "
+              f"{100 * ad['runs']['static_w4']['phases']['all']['slo_ok']:.1f}%), "
+              f"idle RU vs W1 {ad['idle_ru_adaptive_vs_w1']:.3f}x, "
+              f"recompiles={ad['recompiles_steady_adaptive']}, "
+              f"chaos avail={ad['chaos_adaptive']['availability']:.4f}")
 
     # acceptance floors (ISSUE 2 + ISSUE 3): the batch-16 speedup and the
     # zero-recompile contract gate at BOTH scales (scripts/check.sh --smoke

@@ -38,6 +38,9 @@ def main() -> None:
                       f"page_ru_min={out['pagination']['ru_min_page']:.1f};"
                       f"scaling_gain={out['dispatch']['scaling_gain_lanes4']:.2f}x;"
                       f"trace_ovh={100 * out['observability']['overhead_frac']:.1f}%;"
+                      f"adaptive_slo={out['adaptive']['slo_compliance_adaptive']:.3f};"
+                      f"adaptive_idle_ru_vs_w1="
+                      f"{out['adaptive']['idle_ru_adaptive_vs_w1']:.2f}x;"
                       f"stage_breakdown="
                       + "|".join(
                           f"{s}:{st['mean_ms']:.2f}ms"

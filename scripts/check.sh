@@ -4,7 +4,8 @@
 #
 #   scripts/check.sh            # import lint + tier-1 tests
 #   scripts/check.sh --smoke    # ...then bench_serve + bench_query +
-#                               # bench_filtered at tiny sizes, so
+#                               # bench_filtered + bench_chaos +
+#                               # bench_adaptive at tiny sizes, so
 #                               # benchmarks can't silently rot
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -101,6 +102,14 @@ if [[ "$SMOKE" == 1 ]]; then
 
   echo "== chaos gate: fault schedule vs availability/recall/RU floors =="
   python -m benchmarks.bench_chaos --smoke
+
+  echo "== adaptive gate: policy loop vs SLO/RU/recompile + chaos floors =="
+  # bench_adaptive self-asserts the ISSUE 9 floors (SLO ≥ 99%, idle RU at
+  # the static-W1 level, zero steady-state recompiles, ingest ledger
+  # closed) AND re-runs the chaos schedule with the policy enabled — its
+  # run_chaos(policy="adaptive") call asserts availability ≥ 0.99,
+  # recall Δ ≤ 0.01, and exact RU conservation internally.
+  python -m benchmarks.bench_adaptive --smoke
 
   echo "== observability gate: trace overhead + exported schema =="
   python - <<'EOF'

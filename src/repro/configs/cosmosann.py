@@ -28,6 +28,13 @@ class VectorWorkloadConfig:
     query_batch: int = 128
     metric: str = "l2"
     beam_width: int = 4  # W-way hop batching on the search loop (§3.2)
+    # serving control plane (repro.serve.policy): "static" pins every
+    # knob; "adaptive" closes the loop — beam width / ingest yield /
+    # topology actuate per pump tick from the observability rollups
+    policy: str = "static"
+    # the adaptive W ladder; warmup compiles every (bucket, L, W) in it
+    # once so policy moves never recompile in steady state
+    policy_widths: tuple[int, ...] = (1, 2, 4)
 
 
 def config() -> VectorWorkloadConfig:

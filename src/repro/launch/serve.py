@@ -34,6 +34,12 @@ def main(argv=None):
                          "(shard_map partition fan-out)")
     ap.add_argument("--lanes", type=int, default=4,
                     help="replica lanes for --dispatch-mode=replica")
+    ap.add_argument("--policy", default="static",
+                    choices=("static", "adaptive"),
+                    help="serving control plane: static pins beam width / "
+                         "ingest yield / topology at their configured "
+                         "values; adaptive closes the loop on the "
+                         "observability rollups (serve/policy.py)")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="dump retained request traces as JSON lines "
                          "(flight recorder + anomaly ring)")
@@ -56,7 +62,7 @@ def main(argv=None):
                           L_search=48, bootstrap_sample=128, refine_sample=10**9),
         max_vectors_per_partition=args.corpus + 128,
         engine_cfg=EngineConfig(dispatch_mode=args.dispatch_mode,
-                                lanes=args.lanes),
+                                lanes=args.lanes, policy=args.policy),
     )
     vecs = rng.randn(args.corpus, dim).astype(np.float32)
     svc.upsert([{"id": i} for i in range(args.corpus)], vecs)
@@ -74,6 +80,10 @@ def main(argv=None):
     tokens = sum(len(v) for v in out.values())
     print(f"served {len(out)} requests, {tokens} tokens in {dt:.1f}s "
           f"({tokens/dt:.1f} tok/s on CPU), search RU total {total_ru:.0f}")
+    pol = svc.engine.snapshot()["policy"]
+    print(f"policy[{pol['mode']}]: W={pol['beam_width']} "
+          f"interleave={pol['ingest_interleave']} ticks={pol['ticks']} "
+          f"w_changes={pol['w_changes']} last_scale={pol['last_scale']}")
 
     if args.trace_out:
         n = svc.engine.tracer.dump_jsonl(args.trace_out)

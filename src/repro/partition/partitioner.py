@@ -300,6 +300,17 @@ class Collection:
         )
         self.splits += 1
 
+    def split_hottest(self) -> tuple[int, tuple]:
+        """Split the fullest partition — the control-plane actuation for
+        sustained overload (serve/policy.py): more partitions means more
+        parallel fan-out lanes and smaller per-partition search cost.
+        Returns ``(j, (left, right))`` — the split index and the two new
+        partitions that replaced it."""
+        j = max(range(len(self.partitions)),
+                key=lambda i: self.partitions[i].num_docs)
+        self.split(j)
+        return j, (self.partitions[j], self.partitions[j + 1])
+
     def merge(self, j: int):
         """Merge partitions j and j+1 (adjacent ranges) — scale-in."""
         a, b = self.partitions[j], self.partitions[j + 1]

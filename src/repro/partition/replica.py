@@ -52,6 +52,17 @@ class ReplicaSet:
     def healthy(self) -> list[ReplicaState]:
         return [r for r in self.replicas if r.alive]
 
+    def add_replica(self) -> ReplicaState:
+        """Scale-out actuation (serve/policy.py): a new replica joins at
+        the set's current LSN — in this model the authoritative store
+        already holds every applied write, so the joiner is immediately
+        caught up (the real path would seed it via ``capture()`` +
+        WAL replay, which ``rebuild()`` exercises). Quorum grows with
+        the set (⌈(R+1)/2⌉ over the new count)."""
+        r = ReplicaState(rid=len(self.replicas), applied_lsn=self.lsn)
+        self.replicas.append(r)
+        return r
+
     # ------------------------------------------------------------------
     def insert(self, doc_ids, pk_hashes, vectors: np.ndarray, props=None):
         """Write through the primary; ack at quorum."""

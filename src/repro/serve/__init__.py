@@ -4,7 +4,9 @@ from .continuation import (ContinuationError, decode_continuation,
 from .engine import ServeEngine
 from .metrics import (EngineMetrics, ExactHistogram, Histogram, SimClock,
                       poisson_arrivals)
-from .obs import MetricsRegistry
+from .obs import MetricsRegistry, RollupWindow
+from .policy import (AdaptivePolicy, ControlPolicy, PolicyDecision,
+                     PolicySignals, StaticPolicy, make_policy)
 from .predicate import F, Predicate, from_obj, property_items
 from .trace import (FlightRecorder, Span, Trace, Tracer,
                     validate_trace_record)
@@ -18,7 +20,9 @@ __all__ = [
     "VectorServeEngine", "EngineConfig", "ServeRequest", "ServeResponse",
     "Throttled", "DeadlineExceeded",
     "EngineMetrics", "SimClock", "poisson_arrivals",
-    "Histogram", "ExactHistogram", "MetricsRegistry",
+    "Histogram", "ExactHistogram", "MetricsRegistry", "RollupWindow",
+    "ControlPolicy", "AdaptivePolicy", "StaticPolicy", "PolicyDecision",
+    "PolicySignals", "make_policy",
     "Span", "Trace", "Tracer", "FlightRecorder", "validate_trace_record",
     "ContinuationError", "encode_continuation", "decode_continuation",
     "F", "Predicate", "from_obj", "property_items",

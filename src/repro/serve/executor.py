@@ -124,6 +124,17 @@ class LaneExecutor:
     def healthy_lanes(self) -> list:
         return [ln for ln in self.lanes if not ln.down]
 
+    def add_lane(self) -> int:
+        """Scale-out actuation (serve.policy): a new healthy lane joins
+        the plane and starts taking dispatches immediately — its empty
+        timeline makes it the earliest-free pick, so it absorbs the
+        backlog first. Returns the new lane id. Only meaningful under
+        ``replica`` dispatch (serial/spmd planes are one lane by
+        construction)."""
+        ln = LaneState(len(self.lanes))
+        self.lanes.append(ln)
+        return ln.lane_id
+
     def _probe(self, now_s: float):
         """Revive lanes whose down-cooldown has elapsed (the re-probe
         path: a dead lane is not dead forever)."""

@@ -168,6 +168,16 @@ class EngineMetrics:
     hedges: int = 0
     hedges_won: int = 0
     hedge_ru_total: float = 0.0
+    # control-plane telemetry (serve.policy): ticks evaluated, beam-width
+    # moves, topology actions, and the ingest-yield debt ledger (chunks
+    # the policy deferred under latency pressure vs chunks repaid by
+    # idle catch-up beyond the static 1-chunk trickle)
+    policy_ticks: int = 0
+    policy_w_changes: int = 0
+    policy_splits: int = 0
+    policy_lanes_added: int = 0
+    ingest_deferred_chunks: int = 0
+    ingest_catchup_chunks: int = 0
     started_s: float = 0.0
     latency_ms: Histogram = dataclasses.field(default_factory=Histogram)
     wait_ms: Histogram = dataclasses.field(default_factory=Histogram)

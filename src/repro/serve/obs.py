@@ -39,6 +39,31 @@ def _label_key(labels: dict) -> tuple:
     return tuple(sorted(labels))
 
 
+class RollupWindow:
+    """Differencing window over cumulative rollups (the (count, sum)
+    pairs ``observability_summary`` reports per stage/tenant). The
+    registry's histograms never decay, so cumulative percentiles go
+    sticky under changing load; count/sum *deltas* between reads window
+    exactly. ``delta`` returns ``max(new - prev, 0)`` — a value that
+    shrank means a metrics-epoch reset (``engine.reset_metrics`` at a
+    warmup boundary), so the window re-bases at the new value instead of
+    reporting a negative rate. The control plane (serve/policy.py) runs
+    on these windows."""
+
+    __slots__ = ("_prev",)
+
+    def __init__(self):
+        self._prev: dict = {}
+
+    def delta(self, key: str, value: float) -> float:
+        prev = self._prev.get(key, 0.0)
+        self._prev[key] = value
+        return value - prev if value >= prev else 0.0
+
+    def reset(self) -> None:
+        self._prev.clear()
+
+
 class _Family:
     __slots__ = ("name", "kind", "labelnames", "series")
 

@@ -50,6 +50,9 @@ Stage taxonomy (``STAGES``):
   deadline    point event: the request's deadline expired while it was
               still queued; the engine abandoned it (status 408) and
               refunded the admission reservation
+  policy      point event: a control-plane action (serve/policy.py) —
+              a topology split / replica scale-out with the signals
+              that triggered it, so scaling is attributable in traces
 """
 from __future__ import annotations
 
@@ -61,9 +64,9 @@ from typing import Any, Optional
 from .metrics import SimClock
 
 STAGES = ("admission", "queue", "batch_form", "lane", "partition", "hedge",
-          "retry", "merge", "ingest", "deadline")
+          "retry", "merge", "ingest", "deadline", "policy")
 
-TRACE_KINDS = ("query", "page", "ingest")
+TRACE_KINDS = ("query", "page", "ingest", "policy")
 
 # anomaly tags the flight recorder always captures
 ANOMALY_THROTTLE = "throttle"

@@ -57,6 +57,7 @@ from ..store.ru import OpCounters, ResourceGovernor
 from .executor import LaneExecutor
 from .metrics import EngineMetrics, SimClock
 from .obs import MetricsRegistry
+from .policy import ControlPolicy, PolicySignals, make_policy
 from .predicate import Predicate
 from .trace import ANOMALY_DEGRADED, Tracer
 
@@ -120,6 +121,16 @@ class EngineConfig:
     # deadline expires while still queued is answered 408 with its RU
     # reservation refunded, before any lane work is spent on it.
     default_deadline_ms: Optional[float] = None
+    # ---- adaptive control plane (serve.policy) ----
+    # "static" keeps every knob at its configured value (bit-identical to
+    # the pre-policy engine); "adaptive" closes the loop: beam width,
+    # ingest yield and topology actuate per ``pump()`` tick from the
+    # observability rollups (see serve/policy.py for the decision rules)
+    policy: str = "static"
+    # the W decision ladder. Warmup must compile every (bucket, L, W)
+    # signature in this set once — the engine clamps every policy W into
+    # it, so steady-state adaptive traffic never recompiles
+    policy_widths: tuple[int, ...] = (1, 2, 4)
 
 
 @dataclasses.dataclass
@@ -179,6 +190,7 @@ class VectorServeEngine:
         resolver: Optional[Callable[[Any], Sequence]] = None,
         replica_sets: Optional[Sequence] = None,  # partition.ReplicaSet list
         spmd_mesh=None,  # jax Mesh for dispatch_mode="spmd"; None → default
+        policy: Optional[ControlPolicy] = None,  # None → from cfg.policy
     ):
         self.collection = collection
         self.cfg = cfg
@@ -230,14 +242,24 @@ class VectorServeEngine:
         self.tracer = Tracer(self.clock, enabled=cfg.trace,
                              capacity=cfg.flight_recorder,
                              slo_ms=cfg.trace_slo_ms)
+        # control plane (serve.policy): disabled policies short-circuit
+        # before signal collection — the static path never pays for them
+        self.policy = policy if policy is not None else make_policy(cfg)
+        self._allowed_widths = tuple(sorted(set(cfg.policy_widths))) \
+            or (cfg.beam_width,)
+        self._decision = self.policy.initial()
+        self._last_scale: Optional[dict] = None
 
     def reset_metrics(self):
         """Metrics epoch boundary (benchmark warmup): fresh aggregates,
         fresh labeled registry, fresh flight recorder. Tenant governors
-        keep their budgets — only the telemetry resets."""
+        keep their budgets — only the telemetry resets. The policy's
+        rollup window re-bases with the registry (its deltas would
+        otherwise go negative against the fresh epoch)."""
         self.metrics = EngineMetrics(started_s=self.clock.now())
         self.obs = MetricsRegistry()
         self.tracer.reset()
+        self.policy.reset_epoch()
 
     # ------------------------------------------------------------------
     # admission control
@@ -352,20 +374,25 @@ class VectorServeEngine:
 
     def pump(self, force: bool = False) -> int:
         """Dispatch due micro-batches (and interleave ingest). Returns the
-        number of queries served this pump."""
+        number of queries served this pump. With an enabled control
+        policy every loop iteration opens with a policy tick — the
+        beam-width / ingest-yield decision is PER MICRO-BATCH, re-read
+        from the rollups as the backlog drains, and a tick may fire a
+        topology action (split / lane scale-out)."""
         served = 0
         progressed = True
         while progressed:
             progressed = False
+            self._policy_tick()
             for key, reqs in self._due_groups(force):
                 batch = reqs[: self.cfg.max_batch]
                 self._dispatch(key, batch)
                 served += len(batch)
-                self._drain_ingest(self.cfg.ingest_interleave)
+                self._interleave_ingest()
                 progressed = True
                 break  # re-derive groups: the clock moved
         if not served:
-            self._drain_ingest(1 if self._ingest_q else 0)
+            self._idle_ingest()
         return served
 
     def drain(self) -> dict[int, ServeResponse]:
@@ -471,6 +498,10 @@ class VectorServeEngine:
         predicate = batch[0].predicate  # whole group shares one canonical key
         queries = np.stack([r.vector for r in batch]).astype(np.float32)
         health = self._partition_health if self.replica_sets else None
+        # ONE resolved chunk-plan beam width: every search flavor below
+        # shares it, and the control policy may move it per micro-batch
+        # (clamped into the compiled policy_widths signature set)
+        beam_width = self._chunk_beam_width()
 
         def run():
             # the plan body: the executor decides WHERE/WHEN this service
@@ -485,14 +516,14 @@ class VectorServeEngine:
                     ids, dists, info = batched_filtered_fanout_search(
                         partitions, queries, k, predicate, L=L,
                         batch_buckets=self.cfg.batch_buckets,
-                        beam_width=self.cfg.beam_width, health=health,
+                        beam_width=beam_width, health=health,
                     )
                     plan = info["plan"]
                 elif self.cfg.dispatch_mode == "spmd":
                     ids, dists, info = self._spmd().search(
                         partitions, queries, k, L=L,
                         batch_buckets=self.cfg.batch_buckets,
-                        beam_width=self.cfg.beam_width,
+                        beam_width=beam_width,
                         rerank_multiplier=self.cfg.search_list_multiplier,
                         health=health,
                     )
@@ -501,7 +532,7 @@ class VectorServeEngine:
                     ids, dists, info = batched_fanout_search(
                         partitions, queries, k, L=L,
                         batch_buckets=self.cfg.batch_buckets,
-                        beam_width=self.cfg.beam_width, health=health,
+                        beam_width=beam_width, health=health,
                     )
                     plan = "graph"
                 ru_total = info["ru_total"]
@@ -583,7 +614,8 @@ class VectorServeEngine:
                              r.admit_s, r.reserved_ru, out, plan, B, bucket,
                              ru_q, lat_ms, pspans=pspans,
                              anomalies=() if complete
-                             else (ANOMALY_DEGRADED,))
+                             else (ANOMALY_DEGRADED,),
+                             beam_width=beam_width)
 
     # ------------------------------------------------------------------
     # trace plane
@@ -627,7 +659,8 @@ class VectorServeEngine:
                     admit_s: float, reserved_ru: float, out, plan: str,
                     batch_size: int, bucket: int, ru: float, lat_ms: float,
                     pspans: Sequence = (), extra_spans: Sequence = (),
-                    anomalies: tuple = ()):
+                    anomalies: tuple = (),
+                    beam_width: Optional[int] = None):
         """Record one served request's lifecycle trace from its dispatch
         outcome. The root spans — queue [arrival → lane start] and lane
         [lane start → completion] — tile the request interval, so their
@@ -644,8 +677,10 @@ class VectorServeEngine:
         tr.span("admission", "admission", admit_s, admit_s,
                 reserved_ru=reserved_ru)
         tr.span("queue", "queue", arrival_s, q1)
-        tr.span("batch_form", "batch_form", q1, q1, batch_size=batch_size,
-                bucket=bucket, plan=plan)
+        attrs = dict(batch_size=batch_size, bucket=bucket, plan=plan)
+        if beam_width is not None:  # the resolved chunk-plan W (policy-set)
+            attrs["beam_width"] = beam_width
+        tr.span("batch_form", "batch_form", q1, q1, **attrs)
         lane = tr.span("lane", "lane", q1, end, lane=out.lane,
                        hedged=out.hedged, straggled=out.straggled,
                        retried_lanes=list(out.retried_lanes), ru=ru)
@@ -830,13 +865,174 @@ class VectorServeEngine:
                              batch_size=1)
 
     # ------------------------------------------------------------------
+    # control plane (serve.policy)
+    # ------------------------------------------------------------------
+    def _chunk_beam_width(self) -> int:
+        """The resolved per-micro-batch W. Static policy → the config
+        constant, untouched. Active policy → the current decision,
+        clamped into ``policy_widths`` (the compiled signature set) so a
+        policy bug can never mint a compile stall mid-traffic."""
+        if not self.policy.enabled:
+            return self.cfg.beam_width
+        W = self._decision.beam_width
+        if W in self._allowed_widths:
+            return W
+        return min(self._allowed_widths, key=lambda w: abs(w - W))
+
+    def _policy_tick(self):
+        """One control-loop evaluation at the top of ``pump()``: collect
+        rollup signals, ask the policy, record knob moves in the
+        ``serve_policy_total`` metric family, actuate topology."""
+        if not self.policy.enabled:
+            return
+        prev = self._decision
+        sig = self._policy_signals()
+        dec = self.policy.tick(sig)
+        self.metrics.policy_ticks += 1
+        if dec.beam_width != prev.beam_width:
+            self.metrics.policy_w_changes += 1
+            self.obs.inc("serve_policy_total", knob="beam_width",
+                         action=f"w{dec.beam_width}")
+        if dec.ingest_interleave != prev.ingest_interleave:
+            self.obs.inc("serve_policy_total", knob="ingest",
+                         action=f"interleave{dec.ingest_interleave}")
+        if dec.idle_ingest != prev.idle_ingest:
+            self.obs.inc("serve_policy_total", knob="ingest",
+                         action=f"idle{dec.idle_ingest}")
+        self._decision = dec
+        if dec.scale is not None:
+            self._apply_scale(dec, sig)
+
+    def _policy_signals(self) -> PolicySignals:
+        """The policy's view of the plane, derived from the same rollups
+        operators read (``observability_summary``) — never raw counters."""
+        summ = self.observability_summary()
+        stages = {name: (int(row["count"]), float(row["total_ms"]))
+                  for name, row in summ["stages"].items()}
+        ru_total = sum(
+            row["ru_query"] + row["ru_page"] + row["ru_hedge"]
+            + row["ru_ingest"] for row in summ["per_tenant"].values()
+        )
+        disp = self.executor.snapshot()
+        occ = disp["lane_occupancy"]
+        return PolicySignals(
+            now_s=self.clock.now(),
+            queue_depth=len(self.queue),
+            ingest_backlog_chunks=len(self._ingest_q),
+            ingest_backlog_ops=self.ingest_backlog,
+            slo_ms=self.cfg.trace_slo_ms,
+            stages=stages,
+            ru_total=float(ru_total),
+            lanes_busy_s=float(sum(disp["lane_busy_s"])),
+            lane_occupancy=float(sum(occ) / len(occ)) if occ else 0.0,
+            lanes=len(self.executor.lanes),
+            partitions=len(self.collection.partitions),
+        )
+
+    def _apply_scale(self, dec, sig: PolicySignals):
+        """Actuate one topology decision: a replica-lane scale-out (the
+        executor grows a lane and every replica set gains a member) or a
+        partition split (the fullest partition halves). The action is
+        attributable: a ``policy``-kind trace records the triggering
+        signals, and ``serve_policy_total{knob="topology"}`` counts it."""
+        now = self.clock.now()
+        detail = ""
+        if dec.scale == "scale_out" and self.cfg.dispatch_mode == "replica":
+            lane_id = self.executor.add_lane()
+            for rs in self.replica_sets:
+                rs.add_replica()
+            self.metrics.policy_lanes_added += 1
+            detail = f"lane{lane_id}"
+        elif dec.scale in ("split", "scale_out"):
+            # scale_out outside the replica plane degrades to a split —
+            # the only topology lever the serial/spmd planes have
+            j, (left, right) = self.collection.split_hottest()
+            self.metrics.policy_splits += 1
+            detail = f"j{j}->p{left.pid},p{right.pid}"
+        else:
+            raise ValueError(f"unknown scale action {dec.scale!r}")
+        self._last_scale = dict(action=dec.scale, t_s=now, detail=detail,
+                                reason=dec.reason)
+        self.obs.inc("serve_policy_total", knob="topology", action=dec.scale)
+        tr = self.tracer.begin("policy", "engine", -1)
+        if tr is not None:
+            tr.span(f"policy[{dec.scale}]", "policy", now, now,
+                    action=dec.scale, detail=detail, reason=dec.reason,
+                    queue_depth=sig.queue_depth, lanes=sig.lanes,
+                    partitions=sig.partitions)
+            self.tracer.finish(tr, status=200, ru=0.0, latency_ms=0.0,
+                               t0_s=now, t1_s=now)
+
+    def _interleave_ingest(self):
+        """Post-batch ingest drain. Static policy: exactly the configured
+        interleave (the pre-policy behavior). Active policy: the current
+        yield decision — 0 under latency pressure (the deferral is
+        recorded as catch-up debt), ``catchup_chunks`` when the queue is
+        empty."""
+        if not self.policy.enabled:
+            self._drain_ingest(self.cfg.ingest_interleave)
+            return
+        n = self._decision.ingest_interleave
+        if self._ingest_q and n < self.cfg.ingest_interleave:
+            self.metrics.ingest_deferred_chunks += min(
+                self.cfg.ingest_interleave - n, len(self._ingest_q))
+        self._drain_ingest(n)
+
+    def _idle_ingest(self):
+        """Idle-pump ingest drain. Static policy: the 1-chunk trickle.
+        Active policy: the decision's idle allowance (≥ 1 — deferral
+        must never starve the backlog forever); chunks beyond the
+        trickle count as repaid catch-up debt."""
+        if not self._ingest_q:
+            return
+        if not self.policy.enabled:
+            self._drain_ingest(1)
+            return
+        drained = self._drain_ingest(max(1, self._decision.idle_ingest))
+        if drained > 1:
+            self.metrics.ingest_catchup_chunks += drained - 1
+
+    def policy_state(self) -> dict:
+        """The control plane's externally visible state (also under
+        ``snapshot()["policy"]``): current knob positions, decision
+        counters, the ingest catch-up debt ledger, and the last topology
+        action with the signals that triggered it."""
+        m = self.metrics
+        return dict(
+            mode="adaptive" if self.policy.enabled else "static",
+            enabled=self.policy.enabled,
+            beam_width=self._chunk_beam_width(),
+            ingest_interleave=(self._decision.ingest_interleave
+                               if self.policy.enabled
+                               else self.cfg.ingest_interleave),
+            idle_ingest=(self._decision.idle_ingest
+                         if self.policy.enabled else 1),
+            widths=list(self._allowed_widths),
+            ticks=m.policy_ticks,
+            w_changes=m.policy_w_changes,
+            splits=m.policy_splits,
+            lanes_added=m.policy_lanes_added,
+            last_scale=self._last_scale,
+            ingest_debt=dict(
+                backlog_chunks=len(self._ingest_q),
+                backlog_ops=self.ingest_backlog,
+                deferred_chunks=m.ingest_deferred_chunks,
+                catchup_chunks=m.ingest_catchup_chunks,
+            ),
+        )
+
+    # ------------------------------------------------------------------
     # interleaved ingest
     # ------------------------------------------------------------------
-    def _drain_ingest(self, n_chunks: int):
+    def _drain_ingest(self, n_chunks: int) -> int:
+        """Apply up to ``n_chunks`` queued ingest mini-batches; returns
+        how many actually drained."""
+        drained = 0
         for _ in range(n_chunks):
             if not self._ingest_q:
-                return
+                return drained
             kind, apply_fn, n_ops, tenant = self._ingest_q.popleft()
+            drained += 1
             t0 = self.clock.now()
             ru = float(apply_fn())
             t1 = self.clock.advance(ru * self.cfg.ingest_ms_per_ru / 1000.0)
@@ -854,6 +1050,7 @@ class VectorServeEngine:
                 self.tracer.finish(tr, status=200, ru=ru,
                                    latency_ms=(t1 - t0) * 1000.0,
                                    t0_s=t0, t1_s=t1)
+        return drained
 
     def flush_ingest(self):
         """Apply every queued ingest mini-batch now (synchronous ingest)."""
@@ -874,6 +1071,7 @@ class VectorServeEngine:
         snap["queue_depth"] = len(self.queue)
         snap["ingest_backlog"] = self.ingest_backlog
         snap["dispatch"] = self.executor.snapshot()
+        snap["policy"] = self.policy_state()
         snap["tenants"] = {
             t: dict(available_ru=g.available, consumed_ru=g.consumed,
                     throttle_events=g.throttle_events,

@@ -1,0 +1,389 @@
+"""Adaptive serving control plane (ISSUE 9): serve/policy.py + the
+engine's actuation paths.
+
+The contracts under test:
+
+  * **disabled = invisible** — ``policy="static"`` (the default) must be
+    bit-identical to an engine handed an explicit ``StaticPolicy``: the
+    engine short-circuits before signal collection, never ticks, and
+    every response (ids, distances, RU, latency) matches.
+  * **idle economics** — an adaptive engine under trickle traffic parks
+    at W=1 and serves bit-identically to a static W=1 engine (the ladder
+    actually reaches the cheapest compiled point, not merely "narrower").
+  * **compiled-signature confinement** — every W the policy actuates is
+    drawn from ``policy_widths``, and a warmed engine's jit cache does
+    not grow while the ladder moves (zero steady-state recompiles).
+  * **determinism** — the same seed + arrival schedule reproduces the
+    same ``decision_log`` bit for bit (the loop's inputs are the
+    deterministic clock + rollup deltas, nothing wall-clock).
+  * **hysteresis** — bursts widen W and idle narrows it back (one rung
+    per tick, hold band between); topology actions need the overload
+    predicate sustained for ``window_s`` AND a ``cooldown_s`` gap, so a
+    short burst fires nothing and a sustained one fires exactly once.
+  * **ingest yield ledger** — latency pressure defers catch-up chunks
+    (debt recorded), idle repays them (catch-up recorded), and the
+    backlog always drains to zero.
+  * **conservation under actuation** — per-tenant attributed RU still
+    equals governor settlements, and every retained trace (including the
+    ``policy``-kind topology traces) passes root-span tiling validation,
+    while the policy is live.
+"""
+import numpy as np
+import pytest
+
+from repro.core import GraphConfig
+from repro.serve import (AdaptivePolicy, EngineConfig, PolicyDecision,
+                         StaticPolicy, VectorCollectionService,
+                         VectorServeEngine, make_policy,
+                         validate_trace_record)
+from repro.serve.vector_engine import serving_jit_cache_size
+
+from conftest import clustered_data
+
+
+def make_service(n=240, dim=16, parts=1, replicas=0, seed=3):
+    rng = np.random.RandomState(seed)
+    g = GraphConfig(capacity=2 * n + 64, R=16, M=8, L_build=32, L_search=32,
+                    bootstrap_sample=48, refine_sample=10**9, batch_size=64)
+    kw = dict(replicas=replicas) if replicas else {}
+    svc = VectorCollectionService(dim=dim, graph=g,
+                                  max_vectors_per_partition=2 * n,
+                                  initial_partitions=parts, **kw)
+    data = clustered_data(rng, n, dim)
+    svc.upsert([{"id": i} for i in range(n)], data,
+               partition_keys=[f"pk{i}" for i in range(n)])
+    return svc, data, rng
+
+
+def warm(eng, data, k=10):
+    """Compile every (bucket, L, W) signature the policy may actuate —
+    widths pinned in DESCENDING order so the ladder ends parked at its
+    cheapest rung (the idle state) — then reset the metrics epoch."""
+    pol = eng.policy
+    widths = eng.cfg.policy_widths if pol.enabled else (eng.cfg.beam_width,)
+    for W in sorted(set(widths), reverse=True):
+        if pol.enabled:
+            pol.pinned_width = W
+        for B in (1, 2, 4, 8):
+            for q in data[:B]:
+                eng.submit_query(q, k=k)
+            eng.drain()
+    if pol.enabled:
+        pol.pinned_width = None
+    eng.reset_metrics()
+
+
+def burst(eng, queries, k=10):
+    """Offer every query at once (deep backlog) and drain: the policy
+    ticks once per micro-batch while the backlog empties."""
+    now = eng.clock.now()
+    rids = [eng.submit_query(q, k=k, arrival_s=now) for q in queries]
+    eng.drain()
+    return [eng.pop_response(r) for r in rids]
+
+
+def trickle(eng, queries, k=10):
+    """One query at a time, fully drained between arrivals: the queue
+    never exceeds depth 1, so an adaptive ladder must sit at W=1."""
+    out = []
+    for q in queries:
+        rid = eng.submit_query(q, k=k, arrival_s=eng.clock.now())
+        eng.drain()
+        out.append(eng.pop_response(rid))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# construction + disabled parity
+# ---------------------------------------------------------------------------
+
+def test_make_policy_and_unknown_name_raises():
+    cfg = EngineConfig()
+    assert isinstance(make_policy(cfg), StaticPolicy)
+    assert not make_policy(cfg).enabled
+    ad = make_policy(EngineConfig(policy="adaptive"))
+    assert isinstance(ad, AdaptivePolicy) and ad.enabled
+    with pytest.raises(ValueError, match="adative"):
+        make_policy(EngineConfig(policy="adative"))
+
+
+def test_static_policy_is_bit_invisible(rng):
+    """Default engine vs an engine handed an explicit StaticPolicy: the
+    policy plane must not perturb a single bit of the serving path —
+    same ids, distances, RU, latency; zero ticks; static snapshot."""
+    svc, data, _ = make_service()
+    queries = data[rng.choice(len(data), 24, replace=False)] + 0.01
+    resps = []
+    for policy in (None, StaticPolicy(EngineConfig(max_batch=8))):
+        eng = VectorServeEngine(svc.collection,
+                                cfg=EngineConfig(max_batch=8),
+                                policy=policy)
+        warm(eng, data)
+        r = burst(eng, queries[:12]) + trickle(eng, queries[12:])
+        resps.append(r)
+        assert eng.metrics.policy_ticks == 0
+        st = eng.snapshot()["policy"]
+        assert st["mode"] == "static" and not st["enabled"]
+        assert st["beam_width"] == eng.cfg.beam_width
+    for a, b in zip(*resps):
+        assert np.array_equal(a.ids, b.ids)
+        assert np.array_equal(a.dists, b.dists)
+        assert a.ru == b.ru and a.latency_ms == b.latency_ms
+        assert a.plan == b.plan
+
+
+def test_adaptive_idle_parks_at_w1_bit_identical(rng):
+    """Trickle traffic through an adaptive engine must serve bit-
+    identically to a static W=1 engine: the ladder's idle point IS the
+    cheapest compiled configuration, not an approximation of it."""
+    svc, data, _ = make_service()
+    queries = data[rng.choice(len(data), 16, replace=False)] + 0.01
+    eng_w1 = VectorServeEngine(
+        svc.collection, cfg=EngineConfig(max_batch=8, beam_width=1))
+    eng_ad = VectorServeEngine(
+        svc.collection, cfg=EngineConfig(max_batch=8, beam_width=4,
+                                         policy="adaptive"))
+    warm(eng_w1, data)
+    warm(eng_ad, data)
+    a, b = trickle(eng_w1, queries), trickle(eng_ad, queries)
+    for ra, rb in zip(a, b):
+        assert np.array_equal(ra.ids, rb.ids)
+        assert np.array_equal(ra.dists, rb.dists)
+        assert ra.ru == rb.ru
+        # the engines' clocks sit at different absolute times after their
+        # different warmups, so t1-t0 carries float rounding at the ULP
+        assert ra.latency_ms == pytest.approx(rb.latency_ms, abs=1e-9)
+    assert eng_ad.snapshot()["policy"]["beam_width"] == 1
+    assert eng_ad.metrics.policy_ticks > 0  # the loop ran; it chose W=1
+
+
+# ---------------------------------------------------------------------------
+# W ladder: confinement, recompiles, hysteresis, determinism
+# ---------------------------------------------------------------------------
+
+def test_burst_widens_idle_narrows_confined_no_recompiles(rng):
+    """A deep backlog climbs the ladder to its widest rung; the idle
+    tail walks it back to W=1. Every decision stays inside
+    policy_widths and the warmed jit cache does not grow."""
+    svc, data, _ = make_service()
+    eng = VectorServeEngine(
+        svc.collection, cfg=EngineConfig(max_batch=8, policy="adaptive"))
+    warm(eng, data)
+    cache0 = serving_jit_cache_size()
+    queries = data[rng.choice(len(data), 48, replace=True)] + 0.01
+    resps = burst(eng, queries)
+    assert all(r.status == 200 for r in resps)
+    widths_used = {d[1] for d in eng.policy.decision_log}
+    assert max(widths_used) == max(eng.cfg.policy_widths), \
+        "the burst never reached the widest rung"
+    assert widths_used <= set(eng.cfg.policy_widths)
+    trickle(eng, queries[:6])
+    assert eng.snapshot()["policy"]["beam_width"] == 1, \
+        "idle traffic did not narrow back to W=1"
+    assert serving_jit_cache_size() == cache0, \
+        "a policy W move minted a steady-state recompile"
+    assert eng.metrics.policy_w_changes >= 2  # at least up once + down once
+
+
+def test_out_of_ladder_decision_is_clamped():
+    """A policy bug returning W outside policy_widths must be clamped
+    into the compiled set, never dispatched raw."""
+    svc, data, _ = make_service(n=120)
+
+    class RogueW:
+        enabled = True
+        def initial(self):
+            return PolicyDecision(beam_width=64, ingest_interleave=1)
+        def tick(self, sig):
+            return PolicyDecision(beam_width=64, ingest_interleave=1)
+        def reset_epoch(self):
+            pass
+
+    eng = VectorServeEngine(
+        svc.collection, cfg=EngineConfig(max_batch=8, policy="adaptive"),
+        policy=RogueW())
+    assert eng._chunk_beam_width() == max(eng.cfg.policy_widths)
+
+
+def test_decision_log_deterministic(rng):
+    """Same corpus, same arrivals, two fresh engines → bit-identical
+    decision logs (timestamps included)."""
+    svc, data, _ = make_service()
+    queries = data[rng.choice(len(data), 40, replace=True)] + 0.01
+    logs = []
+    for _ in range(2):
+        eng = VectorServeEngine(
+            svc.collection, cfg=EngineConfig(max_batch=8, policy="adaptive"))
+        warm(eng, data)
+        for _ in range(3):
+            eng.submit_ingest("upsert", lambda: 10.0, 4)
+        burst(eng, queries)
+        trickle(eng, queries[:4])
+        logs.append(list(eng.policy.decision_log))
+    assert logs[0] == logs[1]
+    assert len(logs[0]) >= 3  # the run actually moved knobs
+
+
+# ---------------------------------------------------------------------------
+# ingest yield: deferral debt + idle catch-up
+# ---------------------------------------------------------------------------
+
+def test_ingest_yield_defers_under_pressure_then_repays(rng):
+    """Chunks queued at a burst's front edge must NOT drain while the
+    queue is deep (deferred debt recorded); the idle tail repays the
+    debt at the catch-up rate and the backlog reaches zero."""
+    svc, data, _ = make_service()
+    eng = VectorServeEngine(
+        svc.collection, cfg=EngineConfig(max_batch=8, policy="adaptive"))
+    warm(eng, data)
+    queries = data[rng.choice(len(data), 48, replace=True)] + 0.01
+    now = eng.clock.now()
+    rids = [eng.submit_query(q, k=10, arrival_s=now) for q in queries]
+    for _ in range(10):
+        eng.submit_ingest("upsert", lambda: 10.0, 4)
+    while eng.queue:
+        eng.pump(force=not eng.pump())
+    debt_mid = eng.snapshot()["policy"]["ingest_debt"]
+    assert debt_mid["deferred_chunks"] > 0, \
+        "the burst never deferred an ingest chunk"
+    eng.drain()  # idle: catch-up repays the debt
+    debt = eng.snapshot()["policy"]["ingest_debt"]
+    assert debt["catchup_chunks"] > 0, "idle never repaid deferred debt"
+    assert debt["backlog_chunks"] == 0 and debt["backlog_ops"] == 0
+    assert eng.metrics.ingest_batches == 10  # every chunk applied exactly once
+    assert all(eng.pop_response(r).status == 200 for r in rids)
+
+
+def test_static_ingest_interleave_unchanged(rng):
+    """The static path must keep the pre-policy behavior: exactly
+    ``ingest_interleave`` chunks drain after each batch, debt counters
+    stay zero."""
+    svc, data, _ = make_service()
+    eng = VectorServeEngine(svc.collection, cfg=EngineConfig(max_batch=8))
+    warm(eng, data)
+    for _ in range(4):
+        eng.submit_ingest("upsert", lambda: 10.0, 4)
+    burst(eng, data[:8] + 0.01)
+    debt = eng.snapshot()["policy"]["ingest_debt"]
+    assert debt["deferred_chunks"] == 0 and debt["catchup_chunks"] == 0
+    assert eng.ingest_backlog == 0
+
+
+# ---------------------------------------------------------------------------
+# topology: split / scale-out with hysteresis
+# ---------------------------------------------------------------------------
+
+def _overload_policy(cfg, **kw):
+    """A policy tuned so a sustained in-test burst trips the overload
+    predicate quickly, with a cooldown long enough that a second action
+    within the run would be a hysteresis failure."""
+    kw.setdefault("window_s", 0.005)
+    kw.setdefault("cooldown_s", 10.0)
+    kw.setdefault("overload_backlog", 16)
+    kw.setdefault("overload_occupancy", 0.3)
+    return AdaptivePolicy(cfg, **kw)
+
+
+def test_sustained_overload_splits_exactly_once(rng):
+    """Serial plane: sustained overload fires ONE partition split (the
+    hottest partition halves) and the cooldown swallows the rest of the
+    burst — no flapping. Uses a local service: the split mutates it."""
+    svc, data, _ = make_service(n=200, parts=1, seed=7)
+    cfg = EngineConfig(max_batch=8, policy="adaptive")
+    eng = VectorServeEngine(svc.collection, cfg=cfg,
+                            policy=_overload_policy(cfg))
+    warm(eng, data)
+    parts0 = len(svc.collection.partitions)
+    queries = data[rng.choice(len(data), 220, replace=True)] + 0.01
+    resps = burst(eng, queries)
+    assert all(r.status == 200 for r in resps)
+    st = eng.snapshot()["policy"]
+    assert st["splits"] == 1, f"expected exactly one split, got {st['splits']}"
+    assert len(svc.collection.partitions) == parts0 + 1
+    assert st["last_scale"]["action"] == "split"
+    assert "depth=" in st["last_scale"]["reason"]
+    assert eng.obs.total("serve_policy_total", knob="topology",
+                         action="split") == 1.0
+
+
+def test_short_burst_fires_no_topology_action(rng):
+    """Hysteresis: a burst shorter than the persistence window must not
+    split — the overload predicate has to HOLD, not merely occur."""
+    svc, data, _ = make_service(n=200, parts=1, seed=7)
+    cfg = EngineConfig(max_batch=8, policy="adaptive")
+    eng = VectorServeEngine(svc.collection, cfg=cfg,
+                            policy=_overload_policy(cfg, window_s=60.0))
+    warm(eng, data)
+    queries = data[rng.choice(len(data), 220, replace=True)] + 0.01
+    burst(eng, queries)
+    st = eng.snapshot()["policy"]
+    assert st["splits"] == 0 and st["lanes_added"] == 0
+    assert st["last_scale"] is None
+    assert len(svc.collection.partitions) == 1
+
+
+def test_replica_overload_scales_out_lanes(rng):
+    """Replica plane: sustained overload grows the dispatch plane — one
+    executor lane plus one replica per set — instead of splitting."""
+    svc, data, _ = make_service(n=200, parts=1, replicas=2, seed=9)
+    cfg = EngineConfig(max_batch=8, dispatch_mode="replica", lanes=2,
+                       policy="adaptive")
+    eng = VectorServeEngine(svc.collection, cfg=cfg,
+                            replica_sets=svc.replica_sets,
+                            policy=_overload_policy(cfg))
+    warm(eng, data)
+    lanes0 = len(eng.executor.lanes)
+    reps0 = [len(rs.replicas) for rs in svc.replica_sets]
+    queries = data[rng.choice(len(data), 220, replace=True)] + 0.01
+    resps = burst(eng, queries)
+    assert all(r.status == 200 for r in resps)
+    st = eng.snapshot()["policy"]
+    assert st["lanes_added"] == 1 and st["splits"] == 0
+    assert len(eng.executor.lanes) == lanes0 + 1
+    assert [len(rs.replicas) for rs in svc.replica_sets] == \
+        [r + 1 for r in reps0]
+    assert st["last_scale"]["action"] == "scale_out"
+
+
+# ---------------------------------------------------------------------------
+# conservation + trace validity under a live policy
+# ---------------------------------------------------------------------------
+
+def test_ru_conservation_and_trace_tiling_under_policy(rng):
+    """The accounting contracts survive actuation: attributed RU equals
+    governor settlements per tenant, every retained trace (query AND
+    policy kinds) passes root-span tiling, and the knob moves show up in
+    the serve_policy_total metric family."""
+    svc, data, _ = make_service(n=200, parts=1, seed=5)
+    cfg = EngineConfig(max_batch=8, policy="adaptive",
+                       admission_control=True, tenant_ru_s=10**9,
+                       flight_recorder=512)
+    eng = VectorServeEngine(svc.collection, cfg=cfg,
+                            policy=_overload_policy(cfg))
+    warm(eng, data)
+    consumed0 = {t: g.consumed for t, g in eng.tenants.items()}
+    queries = data[rng.choice(len(data), 180, replace=True)] + 0.01
+    now = eng.clock.now()
+    rids = [eng.submit_query(q, k=10, tenant=f"t{i % 2}", arrival_s=now)
+            for i, q in enumerate(queries)]
+    for _ in range(4):
+        eng.submit_ingest("upsert", lambda: 10.0, 4, tenant="t0")
+    eng.drain()
+    assert all(eng.pop_response(r).status == 200 for r in rids)
+    for t, gov in eng.tenants.items():
+        attributed = sum(
+            eng.obs.total("serve_ru_total", tenant=str(t), op=op)
+            for op in ("query", "page", "hedge"))
+        settled = gov.consumed - consumed0.get(t, 0.0)
+        assert abs(attributed - settled) <= 1e-9 * max(abs(settled), 1.0)
+    recs = eng.tracer.recorder.records()
+    kinds = {t["kind"] for t in recs}
+    assert "policy" in kinds, "the split emitted no policy-kind trace"
+    for t in recs:
+        validate_trace_record(t)
+    assert eng.metrics.policy_w_changes > 0
+    assert eng.obs.total("serve_policy_total", knob="beam_width",
+                         action=f"w{max(cfg.policy_widths)}") >= 1.0
+    st = eng.snapshot()["policy"]
+    assert st["ticks"] == eng.metrics.policy_ticks > 0
+    assert set(st["widths"]) == set(cfg.policy_widths)
