@@ -52,7 +52,7 @@ from repro.store.provider import StoreProviderSet
 from .bench_serve import warmup
 from .common import clustered
 
-CRASH_BARRIERS = ("upsert:begin", "upsert:pre_commit",
+CRASH_BARRIERS = ("upsert:begin", "upsert:pre_commit", "upsert:post_full",
                   "delete:post_props", "delete:pre_commit")
 
 
@@ -249,8 +249,15 @@ def _crash_cycles(seed: int, barriers=CRASH_BARRIERS) -> dict:
 
 def run_chaos(n: int = 2000, dim: int = 32, parts: int = 3, replicas: int = 3,
               n_queries: int = 400, rate_qps: float = 400.0, seed: int = 29,
-              n_tight_deadlines: int = 3, policy: str = "static") -> dict:
+              n_tight_deadlines: int = 3, policy: str = "static",
+              tiered: "float | None" = None) -> dict:
     svc, data, rng = _build(n, dim, parts, replicas, seed)
+    if tiered is not None:
+        # paged-tier chaos (ISSUE 10): the SAME fault gates must hold with
+        # only `tiered` of each partition's vector pages resident. Both
+        # the fault-free baseline and the chaos run see the tier, so the
+        # recall/latency deltas still isolate the faults.
+        svc.set_residency(tiered)
     queries = data[rng.choice(n, n_queries, replace=False)] + 0.01
     gt = rec.ground_truth(queries, data, np.ones(n, bool), 10)
     gaps = rng.exponential(1.0 / rate_qps, size=n_queries)
@@ -332,7 +339,7 @@ def run_chaos(n: int = 2000, dim: int = 32, parts: int = 3, replicas: int = 3,
     out = dict(
         config=dict(n=n, dim=dim, parts=parts, replicas=replicas,
                     n_queries=n_queries, rate_qps=rate_qps, seed=seed,
-                    policy=policy),
+                    policy=policy, tiered=tiered),
         schedule=stats,
         availability=availability,
         served=len(ok), deadline_abandoned=len(aborted),

@@ -1,0 +1,268 @@
+"""Tiered-storage benchmark (ISSUE 10): larger-than-memory partitions.
+
+The arXiv 2511.14748 curve this reproduces: with the PQ codes, graph
+adjacency and postings always resident, search quality is INDEPENDENT of
+how much of the full-precision vector store fits in memory — only the
+final rerank touches vector pages, so shrinking residency moves cost
+(RU/query) and latency (page-fetch time on the lane critical path), not
+recall. The sweep holds the offered load and the arrival realization
+fixed and varies only the resident fraction ∈ {1.0, 0.5, 0.25, 0.1}:
+
+  * **recall flat** — recall Δ ≤ 0.01 vs the fully-resident run at every
+    residency level; stronger, the returned ids are BIT-identical (the
+    paged tier is modelled residency: the rerank inputs never change);
+  * **RU/query rising** — every page miss bills
+    ``ru_per_vector_page``, so RU/query is monotone non-decreasing as
+    residency shrinks, strictly higher at 0.1 than fully resident;
+  * **p95 rising, bounded** — misses add ``us_per_vector_page`` to the
+    lane service time; the 0.25-residency p95 must stay within 2× the
+    fully-resident p95 (the metered-rerank acceptance floor);
+  * **cache effectiveness** — on a skewed query mix (80% of queries over
+    20% of the corpus) the clock cache holds the hot pages: hit rate
+    ≥ 0.8 at 0.5 residency;
+  * **accounting closes** — the ``serve_tier_total`` registry totals
+    equal the page stores' own hit/miss counter deltas;
+  * **budget=∞ unchanged** — the frac=1.0 run returns bit-identical ids
+    and identical RU/p95 to a run with no budget at all (the pre-tier
+    engine's behavior, by construction);
+  * **chaos with the tier live** — the full ISSUE 8 fault gates
+    (availability, recall, RU conservation, crash parity — now including
+    the ``upsert:post_full`` barrier and the paged-tier bit-compare)
+    re-run at 0.5 residency.
+
+Standalone ``python -m benchmarks.bench_tiered [--smoke]`` merges the
+``tiered`` section into ``BENCH_serve[.smoke].json``.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import GraphConfig
+from repro.core import recall as rec
+from repro.serve import EngineConfig, VectorCollectionService, VectorServeEngine
+
+from .bench_serve import _drive, warmup
+from .common import clustered
+
+FRACS = (1.0, 0.5, 0.25, 0.1)
+
+
+def _build(n: int, dim: int, parts: int, seed: int):
+    rng = np.random.RandomState(seed)
+    g = GraphConfig(capacity=2 * (n // parts) + 256, R=16, M=8, L_build=32,
+                    L_search=32, bootstrap_sample=48, refine_sample=10**9,
+                    batch_size=64)
+    svc = VectorCollectionService(
+        dim=dim, graph=g, max_vectors_per_partition=2 * (n // parts),
+        initial_partitions=parts,
+    )
+    data = clustered(rng, n, dim)
+    svc.upsert([{"id": i} for i in range(n)], data,
+               partition_keys=[f"pk{i}" for i in range(n)])
+    return svc, data, rng
+
+
+def _skewed_queries(data: np.ndarray, rng: np.random.RandomState,
+                    n_queries: int, hot_frac: float = 0.2,
+                    hot_weight: float = 0.8) -> np.ndarray:
+    """80/20 mix: ``hot_weight`` of queries target the first ``hot_frac``
+    of the corpus (low slots → few vector pages, per partition), the rest
+    are uniform. The hot pages are what a working-set cache must hold."""
+    n = len(data)
+    hot = int(round(hot_frac * n))
+    idx = np.where(rng.uniform(size=n_queries) < hot_weight,
+                   rng.randint(0, max(hot, 1), size=n_queries),
+                   rng.randint(0, n, size=n_queries))
+    return data[idx] + 0.01
+
+
+def _tier_counters(svc) -> tuple[int, int]:
+    hits = misses = 0
+    for p in svc.collection.partitions:
+        pages = p.providers.pages
+        hits += pages.hits
+        misses += pages.misses
+    return hits, misses
+
+
+def _measure_frac(svc, data, queries, arrivals_gaps, gt, frac: float,
+                  use_budget_none: bool = False) -> dict:
+    """One residency level on the shared collection: re-seed the cache
+    (None → frac transition re-draws the seeded warm set), fresh engine,
+    identical arrival realization."""
+    svc.set_residency(None)
+    if not use_budget_none:
+        svc.set_residency(frac)
+    eng = VectorServeEngine(
+        svc.collection,
+        cfg=EngineConfig(max_batch=16, beam_width=4, admission_control=False),
+    )
+    warmup(eng, data)
+    h0, m0 = _tier_counters(svc)
+    arrivals = eng.clock.now() + np.cumsum(arrivals_gaps)
+    # _drive submits in arrival order, so the measured requests' rids are
+    # sequential from the post-warmup counter (warmup consumed rids too)
+    rid0 = eng._next_rid
+    rids = list(range(rid0, rid0 + len(queries)))
+    _drive(eng, queries, arrivals)
+    resps = [eng.pop_response(r) for r in rids]
+    assert all(r is not None and r.status == 200 for r in resps)
+    ids = np.stack([r.ids for r in resps])
+    h1, m1 = _tier_counters(svc)
+    hits, misses = h1 - h0, m1 - m0
+    snap = eng.snapshot()
+    reg_hits = reg_misses = 0.0
+    for t in eng.obs.label_values("serve_tier_total", "tenant"):
+        reg_hits += eng.obs.counter_value("serve_tier_total", tenant=t,
+                                          tier="vector", outcome="hit")
+        reg_misses += eng.obs.counter_value("serve_tier_total", tenant=t,
+                                            tier="vector", outcome="miss")
+    mem = snap["memory"]["vector_tier"]
+    return dict(
+        resident_frac=None if use_budget_none else frac,
+        recall=rec.recall_at_k(ids, gt, 10),
+        ru_per_query=float(eng.metrics.ru_query_total
+                           / max(eng.metrics.queries_ok, 1)),
+        p50_ms=snap["p50_ms"], p95_ms=snap["p95_ms"],
+        qps=snap["qps"],
+        tier_hits=int(hits), tier_misses=int(misses),
+        hit_rate=hits / max(hits + misses, 1),
+        registry_hits=float(reg_hits), registry_misses=float(reg_misses),
+        resident_pages=int(mem["resident_pages"]),
+        capacity_pages=int(mem["capacity_pages"]),
+        resident_bytes=int(mem["resident_bytes"]),
+        total_bytes=int(mem["total_bytes"]),
+        _ids=ids,
+    )
+
+
+def run(n: int = 3000, dim: int = 32, parts: int = 3, n_queries: int = 256,
+        rate_qps: float = 300.0, seed: int = 31, fracs=FRACS,
+        smoke: bool = False) -> dict:
+    svc, data, rng = _build(n, dim, parts, seed)
+    queries = _skewed_queries(data, rng, n_queries)
+    gt = rec.ground_truth(queries, data, np.ones(n, bool), 10)
+    gaps = rng.exponential(1.0 / rate_qps, size=n_queries)
+
+    # the no-budget engine: the pre-tier behavior every frac is judged
+    # against (and the frac=1.0 row must match bit for bit)
+    base = _measure_frac(svc, data, queries, gaps, gt, 1.0,
+                         use_budget_none=True)
+    rows = [_measure_frac(svc, data, queries, gaps, gt, f) for f in fracs]
+    by = {r["resident_frac"]: r for r in rows}
+
+    # ids bit-identical at EVERY residency: the paged tier meters cost,
+    # never the math (modelled residency — rerank inputs are unchanged)
+    for r in rows:
+        assert np.array_equal(r["_ids"], base["_ids"]), \
+            f"ids diverged at residency {r['resident_frac']}"
+    # registry totals close against the page stores' own counters
+    for r in rows + [base]:
+        touched = r["tier_hits"] + r["tier_misses"]
+        reg = r["registry_hits"] + r["registry_misses"]
+        assert abs(reg - touched) <= 1e-6 * max(touched, 1), \
+            f"serve_tier_total drifted from page counters: {r}"
+    base_ids = base.pop("_ids")
+    for r in rows:
+        del r["_ids"]
+
+    full, half, quarter, tenth = by[1.0], by[0.5], by[0.25], by[0.1]
+    out = dict(
+        config=dict(n=n, dim=dim, parts=parts, n_queries=n_queries,
+                    rate_qps=rate_qps, seed=seed, fracs=list(fracs),
+                    smoke=smoke),
+        budget_none=base,
+        per_frac=rows,
+        ids_bit_identical=True,  # asserted above, at every residency
+        recall_delta_max=max(abs(r["recall"] - full["recall"])
+                             for r in rows),
+        ru_ratio_tenth=tenth["ru_per_query"] / max(full["ru_per_query"],
+                                                   1e-9),
+        p95_ratio_quarter=quarter["p95_ms"] / max(full["p95_ms"], 1e-9),
+        hit_rate_half=half["hit_rate"],
+    )
+
+    # acceptance floors (ISSUE 10)
+    assert base["tier_misses"] == 0, "budget=None must never miss"
+    for k in ("recall", "ru_per_query", "p50_ms", "p95_ms"):
+        assert abs(full[k] - base[k]) <= 1e-9 * max(abs(base[k]), 1.0), \
+            f"frac=1.0 diverged from budget=None on {k}: " \
+            f"{full[k]} vs {base[k]}"
+    assert out["recall_delta_max"] <= 0.01, \
+        f"recall moved with residency: Δ={out['recall_delta_max']:.4f}"
+    ordered = [by[f] for f in sorted(fracs, reverse=True)]  # 1.0 → 0.1
+    for a, b in zip(ordered, ordered[1:]):
+        assert b["ru_per_query"] >= a["ru_per_query"] - 1e-9, \
+            f"RU/query fell as residency shrank: {a} → {b}"
+        assert b["tier_misses"] >= a["tier_misses"], \
+            f"misses fell as residency shrank: {a} → {b}"
+    assert tenth["ru_per_query"] > full["ru_per_query"], \
+        "0.1 residency must bill page-fetch RU above fully resident"
+    assert tenth["p95_ms"] >= full["p95_ms"] - 1e-9, \
+        "page misses must not LOWER tail latency"
+    assert out["p95_ratio_quarter"] <= 2.0, \
+        f"0.25-residency p95 {quarter['p95_ms']:.2f}ms > " \
+        f"2x fully-resident {full['p95_ms']:.2f}ms"
+    assert out["hit_rate_half"] >= 0.8, \
+        f"hit rate {half['hit_rate']:.3f} < 0.8 at 0.5 residency " \
+        f"on the skewed mix"
+
+    # chaos with the paged tier live (0.5 residency): the ISSUE 8 gates —
+    # availability, recall, RU conservation, crash parity (now with the
+    # upsert:post_full barrier + the paged-tier bit-compare) — must hold
+    from . import bench_chaos
+    if smoke:
+        chaos = bench_chaos.run_chaos(
+            n=600, dim=32, parts=3, replicas=3, n_queries=160,
+            rate_qps=400.0, n_tight_deadlines=1, tiered=0.5)
+    else:
+        chaos = bench_chaos.run_chaos(tiered=0.5)
+    out["chaos_tiered"] = chaos
+    del base_ids
+    return out
+
+
+def main(smoke: bool = False):
+    if smoke:
+        out = run(n=600, dim=32, parts=3, n_queries=96, rate_qps=300.0,
+                  smoke=True)
+    else:
+        out = run()
+    name = "BENCH_serve.smoke.json" if smoke else "BENCH_serve.json"
+    path = Path(__file__).resolve().parent.parent / name
+    doc = json.loads(path.read_text()) if path.exists() else {}
+    doc["tiered"] = out
+    path.write_text(json.dumps(doc, indent=2))
+    print(f"bench_tiered → {path} (tiered section)")
+    b = out["budget_none"]
+    print(f"  budget=None: recall={b['recall']:.3f} "
+          f"RU/q={b['ru_per_query']:.2f} p95={b['p95_ms']:.2f}ms "
+          f"(misses={b['tier_misses']})")
+    for r in out["per_frac"]:
+        print(f"  frac={r['resident_frac']:<4}: recall={r['recall']:.3f} "
+              f"RU/q={r['ru_per_query']:.2f} p95={r['p95_ms']:.2f}ms "
+              f"hit_rate={r['hit_rate']:.3f} "
+              f"({r['resident_pages']}/{r['capacity_pages']} pages, "
+              f"{r['resident_bytes'] / 1024:.0f}KiB resident)")
+    print(f"  ids bit-identical at every residency: "
+          f"{out['ids_bit_identical']}; recall Δmax "
+          f"{out['recall_delta_max']:.4f}")
+    print(f"  RU/q at 0.1 residency: {out['ru_ratio_tenth']:.2f}x fully "
+          f"resident; p95 at 0.25: {out['p95_ratio_quarter']:.2f}x "
+          f"(floor ≤ 2x); hit rate at 0.5: {out['hit_rate_half']:.3f} "
+          f"(floor ≥ 0.8)")
+    ch = out["chaos_tiered"]
+    print(f"  chaos@0.5 residency: availability={ch['availability']:.4f} "
+          f"recall Δ={ch['recall_delta']:.3f} "
+          f"RU err {ch['ru_conservation_rel_err']:.2e} crash cycles "
+          f"{ch['crash_recovery']['parity_ok']}"
+          f"/{ch['crash_recovery']['cycles']}")
+    return out
+
+
+if __name__ == "__main__":
+    main(smoke="--smoke" in sys.argv[1:])

@@ -27,7 +27,7 @@ def _entry(name, fn, derive):
 def main() -> None:
     from . import (bench_algo_compare, bench_cost, bench_filtered,
                    bench_ingest, bench_query, bench_runbooks, bench_scaleout,
-                   bench_scaling, bench_serve, bench_sharded)
+                   bench_scaling, bench_serve, bench_sharded, bench_tiered)
 
     jobs = [
         ("serve_engine", bench_serve.main,
@@ -46,6 +46,12 @@ def main() -> None:
                           f"{s}:{st['mean_ms']:.2f}ms"
                           for s, st in sorted(
                               out["loads"][-1]["stages"].items())))),
+        ("tiered_residency", bench_tiered.main,
+         lambda out: (f"recall_dmax={out['recall_delta_max']:.3f};"
+                      f"hit_rate@0.5={out['hit_rate_half']:.2f};"
+                      f"p95@0.25={out['p95_ratio_quarter']:.2f}x;"
+                      f"ru@0.1={out['ru_ratio_tenth']:.2f}x;"
+                      f"ids_bit_identical={out['ids_bit_identical']}")),
         ("fig6_query_vs_L", bench_query.main,
          lambda out: (f"recall@L100={out[0][-1]['recall']:.3f};"
                       f"p50={out[0][-1]['p50_ms']:.2f}ms;"

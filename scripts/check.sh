@@ -5,7 +5,7 @@
 #   scripts/check.sh            # import lint + tier-1 tests
 #   scripts/check.sh --smoke    # ...then bench_serve + bench_query +
 #                               # bench_filtered + bench_chaos +
-#                               # bench_adaptive at tiny sizes, so
+#                               # bench_adaptive + bench_tiered at tiny sizes, so
 #                               # benchmarks can't silently rot
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -110,6 +110,15 @@ if [[ "$SMOKE" == 1 ]]; then
   # run_chaos(policy="adaptive") call asserts availability ≥ 0.99,
   # recall Δ ≤ 0.01, and exact RU conservation internally.
   python -m benchmarks.bench_adaptive --smoke
+
+  echo "== tiered gate: residency sweep vs recall-flat/hit-rate floors =="
+  # bench_tiered self-asserts the ISSUE 10 floors: ids bit-identical at
+  # every residency (recall Δ ≤ 0.01), RU/query monotone in shrinking
+  # residency, hit rate ≥ 0.8 at 0.5 residency on the skewed mix, p95 at
+  # 0.25 residency ≤ 2× fully resident, budget=None zero-miss parity,
+  # registry-vs-page-counter conservation, and the chaos schedule green
+  # with a 0.5-residency paged tier live.
+  python -m benchmarks.bench_tiered --smoke
 
   echo "== observability gate: trace overhead + exported schema =="
   python - <<'EOF'

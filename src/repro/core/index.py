@@ -53,6 +53,11 @@ class QueryStats:
     cmps: float = 0.0  # quantized distance comparisons (≈3500 @ L=100 in paper)
     full_reads: float = 0.0  # full-precision vectors touched (≈50 in paper)
     expansions: float = 0.0  # adjacency rows fetched (= hops·W̄; RU-relevant)
+    # paged vector tier (ISSUE 10): rerank-stage page touches, per-query
+    # means (= batch page totals / B, the same convention as cmps/hops);
+    # a miss costs RU + modelled latency via store/ru.py, a hit is free
+    tier_hits: float = 0.0
+    tier_misses: float = 0.0
     plan: str = "graph"
 
 
@@ -82,6 +87,10 @@ class DiskANNIndex:
         self._pending: list[int] = []  # slots awaiting first graph build
         self._requant_cursor = 0  # background re-encode progress
         self._consolidate_cursor = 0
+        # tier touches of the most recent next_page() call (pagination has
+        # no QueryStats of its own; the partition layer folds these into
+        # the page_stats delta)
+        self.last_page_tier: tuple[float, float] = (0.0, 0.0)
 
     # ------------------------------------------------------------------
     # helpers
@@ -101,6 +110,28 @@ class DiskANNIndex:
     def _next_key(self) -> jax.Array:
         self.key, sub = jax.random.split(self.key)
         return sub
+
+    # -- paged vector tier (ISSUE 10) ----------------------------------
+    def _touch_tier(self, slots, stats: QueryStats, B: int,
+                    admit: bool = True, pin: bool = False):
+        """Record a rerank-stage access to the paged full-precision tier.
+
+        Folds page-level hit/miss counts into ``stats`` as per-query
+        means (batch totals / B). With ``pin=True`` the touched pages
+        stay pinned (never evicted mid-rerank) until the returned handle
+        is passed to :meth:`_unpin_tier`. ``admit=False`` marks a full
+        scan (brute/exact): billed, never cached."""
+        pages = getattr(self.pv, "pages", None)
+        if pages is None:
+            return None
+        hits, misses, touched = pages.touch(slots, admit=admit, pin=pin)
+        stats.tier_hits += hits / max(B, 1)
+        stats.tier_misses += misses / max(B, 1)
+        return touched if pin else None
+
+    def _unpin_tier(self, handle) -> None:
+        if handle is not None:
+            self.pv.pages.unpin(handle)
 
     # ------------------------------------------------------------------
     # ingestion
@@ -144,6 +175,10 @@ class DiskANNIndex:
             self.doc_to_slot[int(d)] = int(s)
             self.slot_to_doc[s] = int(d)
         self.pv.set_full(self.ctx, slots, vecs)
+        # crash point right after the full-vector (paged tier) write: a
+        # WAL that loses set_full replay would resurface stale vectors
+        # at rerank — recovery_invariants bit-compares the tier
+        self.pv.barrier("upsert:post_full")
 
         if not self.schemas:
             self._pending.extend(int(s) for s in slots)
@@ -302,6 +337,7 @@ class DiskANNIndex:
     def _replace_one(self, doc_id: int, vec: np.ndarray):
         slot = self.doc_to_slot[doc_id]
         self.pv.set_full(self.ctx, np.asarray([slot]), vec[None, :])
+        self.pv.barrier("upsert:post_full")
         if self.schemas:
             codes = np.asarray(pqmod.encode(self.schemas[-1], jnp.asarray(vec[None, :])))
             self.pv.set_quant(
@@ -450,6 +486,11 @@ class DiskANNIndex:
                 jnp.asarray(queries), vectors, live, k=k, metric=self.cfg.metric
             )
             stats.full_reads = self.num_live
+            # a full sweep reads every live page once for the whole
+            # batch; scan-resistant (admit=False) so it can't flush the
+            # rerank working set
+            self._touch_tier(np.nonzero(self.pv.live)[0], stats, B,
+                             admit=False)
             return (
                 self._to_doc_ids(np.asarray(ids))[:B],
                 np.asarray(dists)[:B],
@@ -466,10 +507,16 @@ class DiskANNIndex:
             neighbors, codes, versions, live, luts, jnp.int32(self.medoid),
             L=L_eff, batch_buckets=batch_buckets, beam_width=W,
         )
+        # final rerank is the ONLY stage that reads full-precision
+        # vectors: pin the candidate pages (they must not be evicted
+        # mid-rerank), fetch misses, release after
+        pinned = self._touch_tier(
+            np.asarray(res.beam_ids)[:B, :kprime], stats, B, pin=True)
         ids, dists = fmod.rerank(
             jnp.asarray(queries), res.beam_ids[:, :kprime], vectors,
             k=k, metric=self.cfg.metric,
         )
+        self._unpin_tier(pinned)
         stats.hops = float(np.asarray(res.n_hops)[:B].mean())
         stats.cmps = float(np.asarray(res.n_cmps)[:B].mean())
         stats.expansions = float(np.asarray(res.n_exp)[:B].mean())
@@ -534,6 +581,8 @@ class DiskANNIndex:
                 jnp.asarray(queries), vectors, fmask, k=k, metric=self.cfg.metric
             )
             stats.full_reads = matches
+            self._touch_tier(np.nonzero(doc_filter & self.pv.live)[0],
+                             stats, B, admit=False)
             return (self._to_doc_ids(np.asarray(ids))[:B],
                     np.asarray(dists)[:B], stats)
 
@@ -542,9 +591,12 @@ class DiskANNIndex:
             cand, _ = fmod.qflat_scan(
                 luts, codes, versions, fmask, kprime=kprime, metric=self.cfg.metric
             )
+            pinned = self._touch_tier(np.asarray(cand)[:B], stats, B,
+                                      pin=True)
             ids, dists = fmod.rerank(
                 jnp.asarray(queries), cand, vectors, k=k, metric=self.cfg.metric
             )
+            self._unpin_tier(pinned)
             stats.cmps = matches
             stats.full_reads = kprime
             return (self._to_doc_ids(np.asarray(ids))[:B],
@@ -573,10 +625,13 @@ class DiskANNIndex:
             beam = np.asarray(res.beam_ids)
             passes = doc_filter[np.maximum(beam, 0)] & (beam >= 0)
             beam = np.where(passes, beam, -1)
+        pinned = self._touch_tier(beam[:B, : max(L, kprime)], stats, B,
+                                  pin=True)
         ids, dists = fmod.rerank(
             jnp.asarray(queries), jnp.asarray(beam[:, : max(L, kprime)]), vectors,
             k=k, metric=self.cfg.metric,
         )
+        self._unpin_tier(pinned)
         stats.hops = float(np.asarray(res.n_hops)[:B].mean())
         stats.cmps = float(np.asarray(res.n_cmps)[:B].mean())
         stats.expansions = float(np.asarray(res.n_exp)[:B].mean())
@@ -640,11 +695,16 @@ class DiskANNIndex:
             keep = (arr >= 0) & slot_filter[np.maximum(arr, 0)]
             ids = jnp.asarray(np.where(keep, arr, -1))
             dists = jnp.asarray(np.where(keep, np.asarray(dists), np.inf))
+        self.last_page_tier = (0.0, 0.0)
         if rerank:
+            tst = QueryStats()
+            pinned = self._touch_tier(np.asarray(ids), tst, 1, pin=True)
             rids, rd = fmod.rerank(
                 jnp.asarray(query[None, :]), ids[None, :], vectors,
                 k=k, metric=self.cfg.metric,
             )
+            self._unpin_tier(pinned)
+            self.last_page_tier = (tst.tier_hits, tst.tier_misses)
             return self._to_doc_ids(np.asarray(rids))[0], np.asarray(rd)[0], state
         return self._to_doc_ids(np.asarray(ids[None, :]))[0], np.asarray(dists), state
 

@@ -55,19 +55,31 @@ class ProviderSet(Protocol):
     def set_full(self, ctx: Context, ids: np.ndarray, vecs: np.ndarray) -> None: ...
     def set_live(self, ctx: Context, ids: np.ndarray, value: bool) -> None: ...
     def materialize(self, ctx: Context): ...
+    def barrier(self, name: str) -> None: ...
 
 
 class ArrayProviderSet:
     """Memory-backed providers: numpy canonical state, jnp cache for jit."""
 
     def __init__(self, capacity: int, R_slack: int, M: int, dim: int):
+        # deferred import: store.provider subclasses this module, so a
+        # top-level import of store.pages would be circular
+        from repro.store.pages import PagedVectorStore
+
         self.neighbors = np.full((capacity, R_slack), -1, np.int32)
         self.codes = np.zeros((capacity, M), np.uint8)
         self.versions = np.zeros((capacity,), np.uint8)
         self.live = np.zeros((capacity,), bool)
         self.vectors = np.zeros((capacity, dim), np.float32)
+        # tiered residency ledger for the full-precision tier (ISSUE 10):
+        # budget=None → fully resident → bit-identical pre-tier behaviour
+        self.pages = PagedVectorStore(capacity, dim)
         self._cache = None  # jnp materialization
         self.write_count = 0
+
+    def barrier(self, name: str) -> None:
+        """Named crash-barrier hook; no-op without an attached FaultPlan
+        (StoreProviderSet overrides with the armed version)."""
 
     # -- invalidation ------------------------------------------------------
     def _dirty(self):

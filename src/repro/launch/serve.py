@@ -34,6 +34,12 @@ def main(argv=None):
                          "(shard_map partition fan-out)")
     ap.add_argument("--lanes", type=int, default=4,
                     help="replica lanes for --dispatch-mode=replica")
+    ap.add_argument("--resident-frac", type=float, default=None,
+                    metavar="F",
+                    help="paged vector tier: keep only F of each "
+                         "partition's full-precision pages resident "
+                         "(search stays PQ-resident; rerank faults pages "
+                         "in). Default: fully resident")
     ap.add_argument("--policy", default="static",
                     choices=("static", "adaptive"),
                     help="serving control plane: static pins beam width / "
@@ -66,6 +72,8 @@ def main(argv=None):
     )
     vecs = rng.randn(args.corpus, dim).astype(np.float32)
     svc.upsert([{"id": i} for i in range(args.corpus)], vecs)
+    if args.resident_frac is not None:
+        svc.set_residency(args.resident_frac)
 
     engine = ServeEngine(cfg, params, batch_slots=4, s_max=128)
     t0 = time.time()
@@ -80,10 +88,18 @@ def main(argv=None):
     tokens = sum(len(v) for v in out.values())
     print(f"served {len(out)} requests, {tokens} tokens in {dt:.1f}s "
           f"({tokens/dt:.1f} tok/s on CPU), search RU total {total_ru:.0f}")
-    pol = svc.engine.snapshot()["policy"]
+    snap = svc.engine.snapshot()
+    pol = snap["policy"]
     print(f"policy[{pol['mode']}]: W={pol['beam_width']} "
           f"interleave={pol['ingest_interleave']} ticks={pol['ticks']} "
           f"w_changes={pol['w_changes']} last_scale={pol['last_scale']}")
+    mem, vt = snap["memory"], snap["memory"]["vector_tier"]
+    print(f"memory: pq={mem['resident']['pq_codes_bytes']/1024:.0f}KiB "
+          f"adj={mem['resident']['adjacency_bytes']/1024:.0f}KiB resident; "
+          f"vector tier {vt['resident_bytes']/1024:.0f}"
+          f"/{vt['total_bytes']/1024:.0f}KiB paged "
+          f"({vt['resident_pages']}/{vt['capacity_pages']} pages, "
+          f"hit rate {vt['hit_rate']:.2f})")
 
     if args.trace_out:
         n = svc.engine.tracer.dump_jsonl(args.trace_out)

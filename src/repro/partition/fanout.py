@@ -705,7 +705,10 @@ class SpmdFanout:
                     queries, res.beam_ids[:, :kprime], vc, k=k, metric=metric
                 )
                 doc = jnp.where(ids >= 0, sd[jnp.maximum(ids, 0)], -1)
-                return doc, dists, res.n_hops, res.n_exp, res.n_cmps
+                # beam ids ride back out so the host can meter the paged
+                # vector tier on the SAME candidate set the rerank read
+                return (doc, dists, res.n_hops, res.n_exp, res.n_cmps,
+                        res.beam_ids[:, :kprime])
 
             return jax.vmap(one_partition)(
                 neighbors, codes, versions, live, vectors, s2d, medoid, luts
@@ -714,7 +717,7 @@ class SpmdFanout:
         fn = jax.jit(compat.shard_map(
             local, self.mesh,
             in_specs=(sh,) * 8 + (rep,),
-            out_specs=(sh,) * 5,
+            out_specs=(sh,) * 6,
             check=False,
         ))
         self._programs[key] = fn
@@ -805,7 +808,7 @@ class SpmdFanout:
             arrs = self._stacked(prog_parts, P_pad)
             fn = self._program(L_eff, k, kprime, int(W_eff),
                                idx0.cfg.metric)
-            doc, dist, hops, exps, cmps = fn(
+            doc, dist, hops, exps, cmps, beams = fn(
                 arrs["neighbors"], arrs["codes"], arrs["versions"],
                 arrs["live"], arrs["vectors"], arrs["slot_to_doc"],
                 arrs["medoid"], luts_st, jnp.asarray(padded),
@@ -813,6 +816,7 @@ class SpmdFanout:
             doc, dist = np.asarray(doc), np.asarray(dist)
             hops, exps, cmps = (np.asarray(hops), np.asarray(exps),
                                 np.asarray(cmps))
+            beams = np.asarray(beams)
             for j, i in enumerate(prog_idx):
                 p = parts[i]
                 st = QueryStats(
@@ -822,6 +826,15 @@ class SpmdFanout:
                     full_reads=float(kprime),
                     plan="graph-spmd",
                 )
+                # paged-tier metering on the identical candidate pages the
+                # serial path touches (same pin→touch→unpin sequence, so
+                # cache state and hit/miss counts match bit for bit)
+                pages = getattr(p.providers, "pages", None)
+                if pages is not None:
+                    th, tm, pinned = pages.touch(beams[j, :B], pin=True)
+                    pages.unpin(pinned)
+                    st.tier_hits = th / max(B, 1)
+                    st.tier_misses = tm / max(B, 1)
                 # meter exactly like PhysicalPartition.search_batch: the
                 # work ran on the mesh, but it is THIS partition's work
                 pv = p.providers

@@ -21,6 +21,7 @@ import numpy as np
 
 from ..core import DiskANNIndex, GraphConfig
 from ..core.providers import Context
+from ..store.pages import PagedVectorStore
 from ..store.props import PropertyTermIndex
 from ..store.provider import StoreProviderSet
 from ..store.ru import ResourceGovernor, RUMeter, counters_for_ru
@@ -42,6 +43,13 @@ class CollectionConfig:
     provisioned_ru_s: float = 10000.0
     vector_path: str = "/embedding"
     shard_key_path: Optional[str] = None  # sharded DiskANN (§3.3) when set
+    # tiered storage (ISSUE 10): fraction of each partition's full-
+    # precision vector pages kept resident. None → fully resident
+    # (bit-identical to the pre-tier engine); e.g. 0.25 keeps PQ codes +
+    # adjacency + postings resident and pages the vectors, billing RU +
+    # modelled latency per rerank-stage page miss
+    resident_frac: Optional[float] = None
+    vector_page_size: int = 64
 
 
 class PhysicalPartition:
@@ -55,6 +63,13 @@ class PhysicalPartition:
         )
         self.index = DiskANNIndex(cfg.graph, cfg.dim, providers=self.providers,
                                   seed=pid, context=Context(replica=pid))
+        # configure the paged full-precision tier: page size from config,
+        # cache seeded per-partition so eviction is deterministic per pid
+        self.providers.pages = PagedVectorStore(
+            cfg.graph.capacity, cfg.dim, page_size=cfg.vector_page_size,
+            seed=pid,
+        )
+        self.set_residency(cfg.resident_frac)
         self.governor = ResourceGovernor(cfg.provisioned_ru_s)
         self.doc_pk: dict[int, int] = {}  # doc id -> partition key hash
         # inverted property-term postings over THIS partition's slots (the
@@ -62,6 +77,16 @@ class PhysicalPartition:
         # so re-homing (split/merge/re-key) carries the terms along
         self.props = PropertyTermIndex(cfg.graph.capacity, store=self.providers)
         self.doc_props: dict[int, tuple] = {}
+
+    def set_residency(self, frac: Optional[float]) -> None:
+        """(Re)size this partition's resident vector budget. ``None`` →
+        fully resident (the paged tier never misses); ``frac`` ∈ (0, 1]
+        caps the page cache at that fraction of the partition's pages."""
+        pages = self.providers.pages
+        if frac is None:
+            pages.set_budget(None)
+        else:
+            pages.set_budget(max(1, int(round(float(frac) * pages.n_pages))))
 
     def owns(self, h: int) -> bool:
         return self.lo <= h < self.hi
@@ -170,6 +195,9 @@ class PhysicalPartition:
             query, state, k=k, beam_width=beam_width, slot_filter=slot_filter
         )
         stats = self.index.page_stats(state, new_state, k)
+        # fold the page's rerank-stage tier touches (recorded by the index
+        # since PageState carries no tier counters) into the billing stats
+        stats.tier_hits, stats.tier_misses = self.index.last_page_tier
         self.providers.op += counters_for_ru(stats)
         ru, _ = self.providers.end_op()
         self.governor.request(ru)

@@ -176,6 +176,7 @@ class EngineMetrics:
     policy_w_changes: int = 0
     policy_splits: int = 0
     policy_lanes_added: int = 0
+    policy_cache_resizes: int = 0  # paged-tier budget moves (ISSUE 10)
     ingest_deferred_chunks: int = 0
     ingest_catchup_chunks: int = 0
     started_s: float = 0.0

@@ -62,6 +62,14 @@ class PolicySignals:
     lane_occupancy: float  # cumulative busy/elapsed mean (display only)
     lanes: int
     partitions: int
+    # paged vector tier (ISSUE 10). Cumulative page-cache touch counters
+    # summed over partitions (epoch-independent: read from the stores, not
+    # the registry) plus current residency; ``tiered`` is False when every
+    # partition is fully resident — the cache knob stays dormant then.
+    tier_hits: float = 0.0
+    tier_misses: float = 0.0
+    tier_resident_frac: float = 1.0
+    tiered: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,6 +81,10 @@ class PolicyDecision:
     beam_width: int
     ingest_interleave: int
     idle_ingest: int = 1
+    # page-cache impulse: +1 grow / -1 shrink the paged tier's budget by
+    # one step (engine clamps into [min_frac, 1.0]); 0 = hold. Only ever
+    # nonzero when the signals say some partition runs a finite budget.
+    cache_step: int = 0
     scale: Optional[str] = None  # "split" | "scale_out"
     reason: str = ""
 
@@ -158,7 +170,11 @@ class AdaptivePolicy:
                  cooldown_s: float = 0.5,
                  max_lanes: int = 8,
                  max_partitions: int = 8,
-                 topology: bool = True):
+                 topology: bool = True,
+                 cache_grow_miss: float = 0.5,
+                 cache_shrink_miss: float = 0.05,
+                 cache_cooldown_s: float = 0.25,
+                 cache_min_frac: float = 0.1):
         self.widths = tuple(sorted(set(
             widths if widths is not None else cfg.policy_widths
         ))) or (cfg.beam_width,)
@@ -181,6 +197,17 @@ class AdaptivePolicy:
         self.max_lanes = max_lanes
         self.max_partitions = max_partitions
         self.topology = topology
+        # knob (d) — page-cache sizing (ISSUE 10). Grow when the windowed
+        # miss RATE says rerank keeps faulting pages in; shrink only when
+        # the cache is demonstrably oversized (near-zero misses) AND the
+        # queue is idle. Its own cooldown so the cache never flaps with W.
+        self.cache_grow_miss = cache_grow_miss
+        self.cache_shrink_miss = cache_shrink_miss
+        assert cache_shrink_miss < cache_grow_miss, (
+            "cache hold band is empty: shrink threshold must sit below grow")
+        self.cache_cooldown_s = cache_cooldown_s
+        self.cache_min_frac = cache_min_frac
+        self._last_cache_s = -float("inf")
         self.dispatch_mode = cfg.dispatch_mode
         self._slo_ms = cfg.trace_slo_ms if cfg.trace_slo_ms else 50.0
         # idle engines start at the cheapest point of the ladder; the
@@ -300,20 +327,42 @@ class AdaptivePolicy:
         else:
             self._over_since = None
 
+        # (d) page-cache sizing: DORMANT unless some partition actually
+        # runs a finite budget — an untiered engine's decisions (and its
+        # idle-RU profile) must be unchanged by this knob existing
+        cache = 0
+        if sig.tiered:
+            d_hit = self._win.delta("tier_hits", sig.tier_hits)
+            d_miss = self._win.delta("tier_misses", sig.tier_misses)
+            touches = d_hit + d_miss
+            miss_rate = d_miss / touches if touches else 0.0
+            if (touches
+                    and sig.now_s - self._last_cache_s
+                    >= self.cache_cooldown_s):
+                if (miss_rate >= self.cache_grow_miss
+                        and sig.tier_resident_frac < 1.0):
+                    cache = 1
+                elif (miss_rate <= self.cache_shrink_miss
+                        and sig.queue_depth == 0
+                        and sig.tier_resident_frac > self.cache_min_frac):
+                    cache = -1
+                if cache:
+                    self._last_cache_s = sig.now_s
+
         dec = PolicyDecision(
             beam_width=W, ingest_interleave=inter, idle_ingest=idle,
-            scale=scale,
+            cache_step=cache, scale=scale,
             reason=(f"depth={sig.queue_depth} wait={wait_ms:.3f}ms "
                     f"e2e={e2e_ms:.3f}ms occ={occ:.3f} "
                     f"backlog={sig.ingest_backlog_chunks}"),
         )
         prev = self._last
-        if (scale is not None or prev is None
+        if (scale is not None or cache or prev is None
                 or dec.beam_width != prev.beam_width
                 or dec.ingest_interleave != prev.ingest_interleave
                 or dec.idle_ingest != prev.idle_ingest):
             self.decision_log.append(
-                (round(sig.now_s, 9), W, inter, idle, scale or ""))
+                (round(sig.now_s, 9), W, inter, idle, scale or "", cache))
         self._last = dec
         return dec
 

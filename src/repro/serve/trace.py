@@ -64,7 +64,7 @@ from typing import Any, Optional
 from .metrics import SimClock
 
 STAGES = ("admission", "queue", "batch_form", "lane", "partition", "hedge",
-          "retry", "merge", "ingest", "deadline", "policy")
+          "retry", "merge", "ingest", "deadline", "policy", "rerank")
 
 TRACE_KINDS = ("query", "page", "ingest", "policy")
 

@@ -565,6 +565,10 @@ class VectorServeEngine:
         complete = not failed
         if failed:
             plan += "+degraded[" + ",".join(str(p) for p, _ in failed) + "]"
+        # paged-tier accounting (ISSUE 10): per-query hit/miss shares from
+        # the partition stats, surfaced as metrics + rerank child spans
+        tier_h, tier_m = self._tier_totals(pspans)
+        rerank_spans = self._rerank_spans(pspans)
         ru_work = out.ru  # the batch's search work, hedge surcharge apart
         ru_total = out.ru + out.hedge_ru  # hedged duplicates bill in full
         service_ms = (out.end_s - out.start_s) * 1000.0
@@ -610,9 +614,15 @@ class VectorServeEngine:
             self.obs.observe("serve_latency_ms", lat_ms, tenant=ts)
             self.obs.observe("serve_stage_ms", wait_ms, stage="queue")
             self.obs.observe("serve_stage_ms", lat_ms - wait_ms, stage="lane")
+            if tier_h or tier_m:
+                self.obs.inc("serve_tier_total", tier_h, tenant=ts,
+                             tier="vector", outcome="hit")
+                self.obs.inc("serve_tier_total", tier_m, tenant=ts,
+                             tier="vector", outcome="miss")
             self._emit_trace("query", r.rid, r.tenant, r.arrival_s,
                              r.admit_s, r.reserved_ru, out, plan, B, bucket,
                              ru_q, lat_ms, pspans=pspans,
+                             extra_spans=rerank_spans,
                              anomalies=() if complete
                              else (ANOMALY_DEGRADED,),
                              beam_width=beam_width)
@@ -635,8 +645,41 @@ class VectorServeEngine:
             if st is not None:
                 attrs.update(hops=float(st.hops),
                              expansions=float(st.expansions),
-                             cmps=float(st.cmps), plan=st.plan)
+                             cmps=float(st.cmps), plan=st.plan,
+                             tier_hits=float(getattr(st, "tier_hits", 0.0)),
+                             tier_misses=float(
+                                 getattr(st, "tier_misses", 0.0)))
             out.append((float(lat_i), attrs))
+        return out
+
+    def _tier_totals(self, pspans: Sequence) -> tuple[float, float]:
+        """Per-query paged-tier touches summed over the fan-out (partition
+        stats carry per-query means, so the sum IS the per-request
+        share)."""
+        h = sum(float(a.get("tier_hits", 0.0)) for _, a in pspans)
+        m = sum(float(a.get("tier_misses", 0.0)) for _, a in pspans)
+        return h, m
+
+    def _rerank_spans(self, pspans: Sequence) -> list:
+        """One rerank child span per partition that touched the paged
+        vector tier: duration = the modelled miss-fetch time, attrs carry
+        the hit/miss counts (the trace-plane face of ISSUE 10)."""
+        us_pp = 0.0
+        parts = self.collection.partitions
+        if parts:
+            us_pp = parts[0].providers.meter.cfg.us_per_vector_page
+        out = []
+        for _, a in pspans:
+            if "tier_hits" not in a:
+                continue
+            th, tm = a["tier_hits"], a["tier_misses"]
+            if th == 0.0 and tm == 0.0:
+                continue
+            out.append(dict(
+                name=f"rerank[p{a['pid']}]", stage="rerank",
+                dur_ms=tm * us_pp / 1000.0,
+                attrs=dict(pid=a["pid"], tier_hits=th, tier_misses=tm),
+            ))
         return out
 
     def _note_throttle(self, kind: str, rid: int, tenant: Any,
@@ -774,13 +817,27 @@ class VectorServeEngine:
             # quantized-ish cost, PER QUERY (RU must not deflate with
             # batch size)
             ru_p += 0.5 * n_scan * 0.0125 * B
+            # paged-tier touch (ISSUE 10): an exact scan streams every
+            # scanned vector through once, so non-resident pages bill one
+            # fetch for the whole batch (shared stream, NOT ×B) and the
+            # sequential sweep must not evict the working set (admit=False
+            # scan resistance)
+            th = tm = 0
+            pages = getattr(pv, "pages", None)
+            if pages is not None and n_scan:
+                th, tm, _ = pages.touch(np.nonzero(np.asarray(scan_mask))[0],
+                                        admit=False)
+                ru_p += tm * pv.meter.cfg.ru_per_vector_page
             ru += ru_p
             # partitions scan in parallel — client latency tracks the worst
             # partition (§4.3), same model as the graph path
-            lat_p = pv.meter.latency_ms(OpCounters(quant_reads=n_scan))
+            lat_p = pv.meter.latency_ms(OpCounters(quant_reads=n_scan,
+                                                   vector_page_misses=tm))
             service_ms = max(service_ms, lat_p)
             pspans.append((lat_p, dict(pid=int(p.pid), ru=ru_p,
-                                       n_scan=n_scan, plan=plan)))
+                                       n_scan=n_scan, plan=plan,
+                                       tier_hits=float(th) / max(B, 1),
+                                       tier_misses=float(tm) / max(B, 1))))
         if failed and answered == 0:
             raise AllPartitionsFailed(
                 f"exact scan: all partitions failed: {failed}"
@@ -900,6 +957,8 @@ class VectorServeEngine:
             self.obs.inc("serve_policy_total", knob="ingest",
                          action=f"idle{dec.idle_ingest}")
         self._decision = dec
+        if dec.cache_step:
+            self._apply_cache_step(dec.cache_step)
         if dec.scale is not None:
             self._apply_scale(dec, sig)
 
@@ -915,6 +974,7 @@ class VectorServeEngine:
         )
         disp = self.executor.snapshot()
         occ = disp["lane_occupancy"]
+        mem = self.memory_snapshot()["vector_tier"]
         return PolicySignals(
             now_s=self.clock.now(),
             queue_depth=len(self.queue),
@@ -927,7 +987,38 @@ class VectorServeEngine:
             lane_occupancy=float(sum(occ) / len(occ)) if occ else 0.0,
             lanes=len(self.executor.lanes),
             partitions=len(self.collection.partitions),
+            # cumulative page-cache counters straight off the stores (NOT
+            # the registry: they survive metrics-epoch resets, so the
+            # policy's windowed deltas never go negative at a warmup
+            # boundary)
+            tier_hits=float(mem["hits"]),
+            tier_misses=float(mem["misses"]),
+            tier_resident_frac=float(mem["resident_frac"]),
+            tiered=bool(mem["tiered"]),
         )
+
+    def _apply_cache_step(self, step: int):
+        """Actuate one page-cache sizing impulse: every finite-budget
+        partition's paged tier grows/shrinks by ~10% of its page count,
+        clamped into [10%, 100%] residency. Fully-resident (budget=None)
+        partitions are NEVER touched — the policy may only resize a tier
+        the operator already opted into."""
+        moved = False
+        for p in self.collection.partitions:
+            pages = getattr(p.providers, "pages", None)
+            if pages is None or pages.budget_pages is None:
+                continue
+            delta = max(1, pages.n_pages // 10)
+            lo = max(1, int(round(0.1 * pages.n_pages)))
+            new = int(np.clip(pages.budget_pages + step * delta,
+                              lo, pages.n_pages))
+            if new != pages.budget_pages:
+                pages.resize_budget(new)
+                moved = True
+        if moved:
+            self.metrics.policy_cache_resizes += 1
+            self.obs.inc("serve_policy_total", knob="cache",
+                         action="grow" if step > 0 else "shrink")
 
     def _apply_scale(self, dec, sig: PolicySignals):
         """Actuate one topology decision: a replica-lane scale-out (the
@@ -1012,6 +1103,7 @@ class VectorServeEngine:
             w_changes=m.policy_w_changes,
             splits=m.policy_splits,
             lanes_added=m.policy_lanes_added,
+            cache_resizes=m.policy_cache_resizes,
             last_scale=self._last_scale,
             ingest_debt=dict(
                 backlog_chunks=len(self._ingest_q),
@@ -1066,12 +1158,61 @@ class VectorServeEngine:
         return rid
 
     # ------------------------------------------------------------------
+    def memory_snapshot(self) -> dict:
+        """Per-tier residency accounting (ISSUE 10): what is pinned in
+        memory per partition (PQ codes, adjacency, postings metadata) vs
+        what lives in the paged full-precision tier, plus the page cache's
+        capacity/occupancy and cumulative hit/miss counters."""
+        resident = dict(pq_codes_bytes=0, adjacency_bytes=0,
+                        tombstone_bytes=0)
+        per_partition = []
+        agg = dict(total_bytes=0, resident_bytes=0, capacity_pages=0,
+                   resident_pages=0, hits=0, misses=0, evictions=0)
+        tiered = False
+        for p in self.collection.partitions:
+            pv = p.providers
+            resident["pq_codes_bytes"] += int(pv.codes.nbytes
+                                              + pv.versions.nbytes)
+            resident["adjacency_bytes"] += int(pv.neighbors.nbytes)
+            resident["tombstone_bytes"] += int(pv.live.nbytes)
+            pages = getattr(pv, "pages", None)
+            if pages is None:
+                continue
+            st = pages.state()
+            st["pid"] = int(p.pid)
+            per_partition.append(st)
+            cap = st["budget_pages"]
+            if cap is None:
+                cap = st["n_pages"]
+            else:
+                tiered = True
+            agg["total_bytes"] += st["total_bytes"]
+            agg["resident_bytes"] += st["resident_bytes"]
+            agg["capacity_pages"] += cap
+            agg["resident_pages"] += st["resident_pages"]
+            agg["hits"] += st["hits"]
+            agg["misses"] += st["misses"]
+            agg["evictions"] += st["evictions"]
+        touches = agg["hits"] + agg["misses"]
+        return dict(
+            resident=resident,
+            vector_tier=dict(
+                tiered=tiered,
+                hit_rate=agg["hits"] / touches if touches else 1.0,
+                resident_frac=(agg["resident_bytes"] / agg["total_bytes"]
+                               if agg["total_bytes"] else 1.0),
+                **agg,
+            ),
+            per_partition=per_partition,
+        )
+
     def snapshot(self) -> dict:
         snap = self.metrics.snapshot(self.clock.now())
         snap["queue_depth"] = len(self.queue)
         snap["ingest_backlog"] = self.ingest_backlog
         snap["dispatch"] = self.executor.snapshot()
         snap["policy"] = self.policy_state()
+        snap["memory"] = self.memory_snapshot()
         snap["tenants"] = {
             t: dict(available_ru=g.available, consumed_ru=g.consumed,
                     throttle_events=g.throttle_events,

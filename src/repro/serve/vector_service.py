@@ -97,6 +97,8 @@ class VectorCollectionService:
         replicas: int = 4,
         shard_key_path: Optional[str] = None,
         engine_cfg: EngineConfig = EngineConfig(),
+        resident_frac: Optional[float] = None,
+        vector_page_size: int = 64,
     ):
         graph = graph or GraphConfig(capacity=max_vectors_per_partition + 1024)
         self.cfg = CollectionConfig(
@@ -105,6 +107,8 @@ class VectorCollectionService:
             max_vectors_per_partition=max_vectors_per_partition,
             initial_partitions=initial_partitions,
             shard_key_path=shard_key_path,
+            resident_frac=resident_frac,
+            vector_page_size=vector_page_size,
         )
         self.collection = Collection(self.cfg)
         self.replica_sets = [
@@ -123,6 +127,14 @@ class VectorCollectionService:
         if shard_key is not None and self.shard_key_path:
             return self._tenant(shard_key).partitions
         return self.collection.partitions
+
+    def set_residency(self, frac: Optional[float]) -> None:
+        """Resize every partition's paged full-precision tier to hold
+        ``frac`` of its vector pages (None → fully resident). Search keeps
+        answering out of the always-resident PQ codes + adjacency; only
+        the final-rerank page fetches see the new budget."""
+        for p in self.collection.partitions:
+            p.set_residency(frac)
 
     # ------------------------------------------------------------------
     # ingest (through the engine's interleaved mini-batch queue)

@@ -145,6 +145,21 @@ def recovery_invariants(recovered, twin) -> dict[str, bool]:
             a.shape == b.shape and a.dtype == b.dtype and np.array_equal(a, b)
         )
     checks["terms"] = recovered.tree.dump_items() == twin.tree.dump_items()
+    # the paged full-precision tier, page by page (ISSUE 10): a WAL that
+    # loses a ``set_full`` replay would serve stale vectors at rerank.
+    # Page CONTENT must match regardless of either side's cache residency
+    # (budgets may differ between a recovered replica and its twin), so
+    # compare through the residency-independent page→slot mapping.
+    pages = getattr(recovered, "pages", None)
+    if pages is not None and hasattr(twin, "vectors"):
+        bad_pages = [
+            pg for pg in range(pages.n_pages)
+            if not np.array_equal(recovered.vectors[pages.page_slots(pg)],
+                                  twin.vectors[pages.page_slots(pg)])
+        ]
+        checks["paged_tier"] = not bad_pages
+        if bad_pages:
+            checks["paged_tier_bad_pages"] = False  # surfaced in the assert
     bad = [name for name, ok in checks.items() if not ok]
     assert not bad, f"recovery parity violated: {bad}"
     return checks

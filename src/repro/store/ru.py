@@ -47,12 +47,18 @@ class RUConfig:
     # every request at least the request-processing floor, so a paginated
     # query is never free even when a page is answered from buffered state
     ru_per_page_request: float = 1.0
+    # tiered vector storage (ISSUE 10): full-precision vectors live in a
+    # paged tier; a rerank-stage page miss is a cold fetch billed in RU
+    # AND modelled latency, a hit costs neither (the resident set is the
+    # cost lever the "Cloud-Native Vector Search" curve sweeps)
+    ru_per_vector_page: float = 0.25
 
     # latency model (paper §4.4 micro-measurements)
     us_per_quant_read: float = 10.0
     us_per_adj_read: float = 25.0
     us_per_full_read: float = 100.0  # random document-store access
     us_per_chain_record: float = 0.8  # extra per delta-chain record walked
+    us_per_vector_page: float = 110.0  # cold paged-tier vector fetch
 
 
 @dataclasses.dataclass
@@ -70,6 +76,7 @@ class OpCounters:
     cache_misses: int = 0
     chain_records: int = 0
     vector_kb: float = 0.0
+    vector_page_misses: int = 0  # paged-tier cold fetches (rerank stage)
 
     def __iadd__(self, o: "OpCounters"):
         for f in dataclasses.fields(self):
@@ -103,6 +110,7 @@ class RUMeter:
             + g.ru_per_page_read * c.page_reads
             + g.ru_per_cache_miss * c.cache_misses
             + g.ru_upfront_per_kb * c.vector_kb
+            + g.ru_per_vector_page * c.vector_page_misses
         )
 
     def latency_ms(self, c: OpCounters) -> float:
@@ -114,6 +122,7 @@ class RUMeter:
             + g.us_per_adj_read * c.adj_reads
             + g.us_per_full_read * c.full_reads
             + g.us_per_chain_record * c.chain_records
+            + g.us_per_vector_page * c.vector_page_misses
         )
         return us / 1000.0 + c.cpu_ms
 
@@ -127,6 +136,10 @@ def counters_for_ru(stats, lanes: int = 1) -> OpCounters:
         quant_reads=int(stats.cmps * lanes),
         adj_reads=int(adj * lanes),
         full_reads=int(stats.full_reads * lanes),
+        # tier misses in QueryStats are per-query means; RU bills the
+        # whole batch's page fetches (work-based), so scale back up
+        vector_page_misses=int(
+            round(getattr(stats, "tier_misses", 0.0) * lanes)),
     )
 
 
@@ -145,6 +158,10 @@ def counters_for_latency(stats) -> OpCounters:
         quant_reads=int(round(stats.cmps / w_bar)),
         adj_reads=int(stats.hops),
         full_reads=int(stats.full_reads),
+        # per-query critical path: this query's own page misses (the
+        # batch amortizes fetches, the mean IS the per-query cost)
+        vector_page_misses=int(
+            round(getattr(stats, "tier_misses", 0.0))),
     )
 
 

@@ -1,0 +1,380 @@
+"""Tiered storage subsystem (ISSUE 10): ``store/pages.py`` + the metered
+rerank path that threads page misses through RU, latency, and the serve
+plane.
+
+The contracts under test:
+
+  * **determinism** — the resident set is a pure function of
+    (seed, budget history, touch sequence): two same-seed caches fed the
+    same touches are bit-identical; the seeded warm set reproduces when a
+    partition is un-tiered and re-tiered.
+  * **pin-during-rerank** — a page pinned by an in-flight rerank is never
+    an eviction victim, even under transient budget overflow; ``unpin``
+    drains the overflow, and an unbalanced unpin is an error.
+  * **modelled residency** — search results (ids, distances) are
+    bit-identical at every residency level; only the RU/latency bill
+    changes, and the bill is exactly ``misses * ru_per_vector_page``.
+  * **RU conservation** — at the serve plane, per-tenant registry
+    attribution still equals governor settlements with a live paged
+    tier, and ``serve_tier_total`` totals equal the page-counter deltas.
+  * **crash recovery** — a crash at ``upsert:post_full`` loses the
+    uncommitted ``set_full`` replay entirely (all-or-nothing), and
+    ``recovery_invariants`` bit-compares the paged tier page by page.
+  * **memory accounting** — ``snapshot()["memory"]`` reports per-tier
+    bytes and cache occupancy that reconcile with the per-partition
+    page-store states.
+  * **policy knob (d)** — the cache-sizing knob is dormant on untiered
+    collections and moves only on windowed miss-rate evidence, with its
+    own cooldown; engine actuation resizes only opted-in partitions.
+"""
+import numpy as np
+import pytest
+
+from repro.core import GraphConfig
+from repro.partition.partitioner import (CollectionConfig, PhysicalPartition,
+                                         hash_key)
+from repro.serve import (AdaptivePolicy, EngineConfig, PolicySignals,
+                         VectorCollectionService)
+from repro.store.faults import CrashError, FaultPlan, recovery_invariants
+from repro.store.pages import PagedVectorStore
+from repro.store.provider import StoreProviderSet
+
+from conftest import clustered_data
+
+DIM = 16
+
+
+# ---------------------------------------------------------------------------
+# page cache: determinism, pinning, scan resistance
+# ---------------------------------------------------------------------------
+
+
+def _touch_script(seed, n_touches=200, capacity=640, page_size=64):
+    r = np.random.RandomState(seed)
+    return [r.randint(0, capacity, size=r.randint(1, 12))
+            for _ in range(n_touches)]
+
+
+def test_eviction_determinism_same_seed():
+    """Same seed + same touch sequence → bit-identical cache state: the
+    per-touch (hits, misses), the final resident set, the clock hand,
+    and every cumulative counter."""
+    script = _touch_script(3)
+    a, b = (PagedVectorStore(640, DIM, page_size=64, budget_pages=4, seed=7)
+            for _ in range(2))
+    for slots in script:
+        assert a.touch(slots)[:2] == b.touch(slots)[:2]
+    assert np.array_equal(a.resident, b.resident)
+    assert a.hand == b.hand
+    assert a.state() == b.state()
+    assert a.evictions > 0, "script must actually exercise eviction"
+
+
+def test_warm_set_is_seeded_and_reseeds_on_retier():
+    """A cold finite-budget cache warms a seeded page subset; un-tiering
+    (budget=None) and re-tiering reproduces that exact warm set, and a
+    different seed produces a different one."""
+    a = PagedVectorStore(640, DIM, page_size=64, budget_pages=5, seed=1)
+    warm = a.resident.copy()
+    assert warm.sum() == 5
+    a.set_budget(None)
+    assert a.resident.all()
+    a.set_budget(5)
+    assert np.array_equal(a.resident, warm)
+    b = PagedVectorStore(640, DIM, page_size=64, budget_pages=5, seed=2)
+    assert not np.array_equal(b.resident, warm)
+
+
+def test_pin_during_rerank_never_evicts_inflight_page():
+    """An in-flight rerank pins its working set: later misses admitting
+    other pages must not evict a pinned page, even when the pin set
+    transiently overflows the budget. ``unpin`` drains back to budget."""
+    pv = PagedVectorStore(640, DIM, page_size=64, budget_pages=2, seed=0)
+    # pin a 3-page working set (overflows budget=2: allowed while pinned)
+    _, _, pinned = pv.touch([0, 70, 140], pin=True)
+    assert pinned.size == 3 and pv.resident[pinned].all()
+    # hammer the other pages; the pinned trio must survive every sweep
+    for s in range(200, 640, 30):
+        pv.touch([s])
+        assert pv.resident[pinned].all(), "evicted a pinned in-flight page"
+    pv.unpin(pinned)
+    assert pv.n_resident <= 2, "unpin must drain the transient overflow"
+    with pytest.raises(AssertionError, match="unpin"):
+        pv.unpin(pinned)  # double release: pins would go negative
+
+
+def test_scan_touches_are_billed_but_never_admitted():
+    """``admit=False`` (brute/exact sweeps): misses are counted — the
+    fetch is real and billed — but the hot set is scan-resistant."""
+    pv = PagedVectorStore(640, DIM, page_size=64, budget_pages=3, seed=4)
+    warm = pv.resident.copy()
+    hits, misses, _ = pv.touch(np.arange(640), admit=False)
+    assert hits == 3 and misses == 7
+    assert np.array_equal(pv.resident, warm), "a scan flushed the hot set"
+    assert pv.admits == 0 and pv.evictions == 0
+
+
+def test_zero_budget_never_admits():
+    pv = PagedVectorStore(640, DIM, page_size=64, budget_pages=0, seed=0)
+    hits, misses, _ = pv.touch(np.arange(640))
+    assert hits == 0 and misses == 10 and pv.n_resident == 0
+
+
+# ---------------------------------------------------------------------------
+# modelled residency: bit-identical results, metered bill
+# ---------------------------------------------------------------------------
+
+
+def _partition(rng, n=160):
+    g = GraphConfig(capacity=2 * n + 64, R=16, M=8, L_build=32, L_search=32,
+                    bootstrap_sample=48, refine_sample=10**9, batch_size=64)
+    cc = CollectionConfig(dim=DIM, graph=g, max_vectors_per_partition=2 * n)
+    part = PhysicalPartition(cc, 0, 1 << 32, 0)
+    data = clustered_data(rng, n, DIM)
+    ids = list(range(n))
+    part.insert(ids, [hash_key(i) for i in ids], data)
+    return part, data
+
+
+def test_residency_changes_bill_not_results(rng):
+    """The tier is modelled: shrinking residency leaves ids/distances
+    bit-identical and raises RU by EXACTLY the page-miss bill. frac=1.0
+    is indistinguishable from budget=None on every axis."""
+    part, data = _partition(rng)
+    queries = data[rng.choice(len(data), 16, replace=False)] + 0.01
+    pages = part.providers.pages
+    ids0, d0, ru0, st0 = part.search_batch(queries, k=10)
+    assert st0.tier_misses == 0 and pages.misses == 0
+
+    part.set_residency(1.0)  # finite budget == n_pages: still all-hit
+    ids1, d1, ru1, _ = part.search_batch(queries, k=10)
+    assert np.array_equal(ids0, ids1) and np.array_equal(d0, d1)
+    assert ru1 == ru0 and pages.misses == 0
+
+    part.set_residency(0.25)
+    m0 = pages.misses
+    ids2, d2, ru2, st2 = part.search_batch(queries, k=10)
+    miss_delta = pages.misses - m0
+    assert np.array_equal(ids0, ids2) and np.array_equal(d0, d2)
+    assert st2.tier_misses > 0 and miss_delta > 0
+    assert ru2 - ru0 == pytest.approx(
+        miss_delta * part.providers.meter.cfg.ru_per_vector_page, rel=1e-9), \
+        "RU delta must be exactly the page-miss bill"
+    assert int((pages.pins > 0).sum()) == 0, "rerank left pages pinned"
+
+
+# ---------------------------------------------------------------------------
+# serve plane: RU conservation + tier counter conservation
+# ---------------------------------------------------------------------------
+
+
+def _tiered_service(rng, n=360, parts=3, frac=0.5, **engine_kw):
+    g = GraphConfig(capacity=240, R=16, M=8, L_build=32, L_search=32,
+                    bootstrap_sample=48, refine_sample=10**9, batch_size=64)
+    svc = VectorCollectionService(dim=DIM, graph=g,
+                                  max_vectors_per_partition=200,
+                                  initial_partitions=parts,
+                                  engine_cfg=EngineConfig(**engine_kw))
+    data = clustered_data(rng, n, DIM)
+    svc.upsert([{"id": i} for i in range(n)], data,
+               partition_keys=[f"pk{i}" for i in range(n)])
+    svc.set_residency(frac)
+    return svc, data
+
+
+def _page_counters(svc):
+    h = sum(p.providers.pages.hits for p in svc.collection.partitions)
+    m = sum(p.providers.pages.misses for p in svc.collection.partitions)
+    return h, m
+
+
+def test_tiered_ru_and_tier_counter_conservation(rng):
+    """With a live paged tier, the three RU views still agree exactly
+    (registry == engine aggregates == governor settlements, miss bill
+    included), and ``serve_tier_total{outcome}`` equals the page stores'
+    own hit/miss deltas — the registry never invents or drops a fetch."""
+    svc, data = _tiered_service(rng, frac=0.5, admission_control=True,
+                                tenant_ru_s=10**9)
+    eng = svc.engine
+    h0, m0 = _page_counters(svc)
+    queries = data[rng.choice(len(data), 24, replace=False)] + 0.01
+    for i, q in enumerate(queries):
+        eng.submit_query(q, k=5, tenant=f"t{i % 2}")
+    eng.drain()
+    m, obs = eng.metrics, eng.obs
+    assert obs.total("serve_ru_total", op="query") == \
+        pytest.approx(m.ru_query_total, rel=1e-9)
+    for t, gov in eng.tenants.items():
+        attributed = sum(obs.total("serve_ru_total", tenant=str(t), op=op)
+                         for op in ("query", "page", "hedge"))
+        assert attributed == pytest.approx(gov.consumed, rel=1e-9), \
+            f"tenant {t}: registry {attributed} vs governor {gov.consumed}"
+    dh, dm = (a - b for a, b in zip(_page_counters(svc), (h0, m0)))
+    assert dm > 0, "a 0.5-residency run must actually miss"
+    assert obs.total("serve_tier_total", outcome="hit") == \
+        pytest.approx(dh, rel=1e-6)
+    assert obs.total("serve_tier_total", outcome="miss") == \
+        pytest.approx(dm, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# crash recovery: set_full replay through the paged tier (satellite a)
+# ---------------------------------------------------------------------------
+
+
+def _crash_at_post_full(seed=29, n0=20, dim=8):
+    g = GraphConfig(capacity=96, R=8, M=4, L_build=16, L_search=24,
+                    bootstrap_sample=16, refine_sample=10**9, batch_size=8)
+    cc = CollectionConfig(dim=dim, graph=g, max_vectors_per_partition=80)
+    rng = np.random.RandomState(seed)
+    subject, twin = (PhysicalPartition(cc, 0, 1 << 32, 0) for _ in range(2))
+    data = rng.randn(n0, dim).astype(np.float32)
+    ids = list(range(n0))
+    props = [(("cat", i % 3),) for i in ids]
+    for p in (subject, twin):
+        p.insert(ids, [hash_key(i) for i in ids], data, props=props)
+    snap = subject.providers.snapshot_bytes()
+    FaultPlan(seed=seed).arm("upsert:post_full").attach(subject.providers)
+    with pytest.raises(CrashError):
+        subject.insert([n0], [hash_key(n0)],
+                       rng.randn(1, dim).astype(np.float32),
+                       props=[(("cat", 0),)])
+    fresh = StoreProviderSet(
+        subject.providers.neighbors.shape[0],
+        subject.providers.neighbors.shape[1],
+        subject.providers.codes.shape[1],
+        subject.providers.vectors.shape[1],
+    )
+    fresh.recover(snap, subject.providers.wal_bytes())
+    # the recovered node fronts its vectors with a paged tier too — the
+    # parity check must hold regardless of either side's cache residency
+    fresh.pages = PagedVectorStore(fresh.vectors.shape[0],
+                                   fresh.vectors.shape[1],
+                                   page_size=cc.vector_page_size,
+                                   budget_pages=1, seed=0)
+    return fresh, twin
+
+
+def test_post_full_crash_discards_uncommitted_vector_write():
+    """A crash AT ``upsert:post_full`` — after the full-precision write
+    hit the provider but before commit — must leave no trace: the WAL's
+    ``set_full`` replay is transactional, so recovery equals a twin that
+    never attempted the op, bit for bit including the paged tier."""
+    fresh, twin = _crash_at_post_full()
+    checks = recovery_invariants(fresh, twin.providers)
+    assert checks["paged_tier"], "paged-tier page compare must have run"
+
+
+def test_recovery_invariants_catch_stale_paged_vector():
+    """The paged-tier check has teeth: a recovered node serving one stale
+    vector page (a lost ``set_full`` replay) fails parity by name."""
+    fresh, twin = _crash_at_post_full()
+    fresh.vectors[3, 0] += 1.0  # one stale slot on page 0
+    with pytest.raises(AssertionError, match="paged_tier"):
+        recovery_invariants(fresh, twin.providers)
+
+
+# ---------------------------------------------------------------------------
+# memory snapshot (satellite b)
+# ---------------------------------------------------------------------------
+
+
+def test_memory_snapshot_reconciles_with_page_stores(rng):
+    svc, data = _tiered_service(rng, frac=None)
+    eng = svc.engine
+    mem = eng.snapshot()["memory"]
+    assert set(mem) == {"resident", "vector_tier", "per_partition"}
+    vt = mem["vector_tier"]
+    assert not vt["tiered"] and vt["resident_frac"] == 1.0
+    assert vt["resident_bytes"] == vt["total_bytes"] > 0
+    for key in ("pq_codes_bytes", "adjacency_bytes", "tombstone_bytes"):
+        assert mem["resident"][key] > 0
+    svc.set_residency(0.25)
+    for q in data[:8]:
+        eng.submit_query(q + 0.01, k=5)
+    eng.drain()
+    mem = eng.memory_snapshot()
+    vt = mem["vector_tier"]
+    states = [p.providers.pages.state()
+              for p in svc.collection.partitions]
+    assert vt["tiered"]
+    assert vt["resident_bytes"] == sum(s["resident_bytes"] for s in states)
+    assert vt["capacity_pages"] == sum(s["budget_pages"] for s in states)
+    assert vt["resident_pages"] <= vt["capacity_pages"]
+    assert vt["hits"] == sum(s["hits"] for s in states)
+    assert vt["misses"] == sum(s["misses"] for s in states) > 0
+    assert 0.0 <= vt["hit_rate"] <= 1.0
+    assert len(mem["per_partition"]) == len(states)
+
+
+# ---------------------------------------------------------------------------
+# policy knob (d): cache sizing (dormant untiered, evidence-driven tiered)
+# ---------------------------------------------------------------------------
+
+
+def _sig(now_s, *, hits=0.0, misses=0.0, frac=0.5, tiered=True, depth=0):
+    return PolicySignals(
+        now_s=now_s, queue_depth=depth, ingest_backlog_chunks=0,
+        ingest_backlog_ops=0, slo_ms=None, stages={}, ru_total=0.0,
+        lanes_busy_s=0.0, lane_occupancy=0.0, lanes=1, partitions=1,
+        tier_hits=hits, tier_misses=misses, tier_resident_frac=frac,
+        tiered=tiered,
+    )
+
+
+def test_cache_knob_dormant_without_a_tier():
+    """Untiered signals (every partition fully resident) must never move
+    the cache knob, whatever the counters claim — the knob may only act
+    on a tier the operator opted into."""
+    pol = AdaptivePolicy(EngineConfig(policy="adaptive"))
+    for t in range(5):
+        dec = pol.tick(_sig(float(t), hits=0.0, misses=100.0 * (t + 1),
+                            tiered=False))
+        assert dec.cache_step == 0
+
+
+def test_cache_knob_grows_on_misses_with_cooldown():
+    pol = AdaptivePolicy(EngineConfig(policy="adaptive"),
+                         cache_cooldown_s=1.0)
+    assert pol.tick(_sig(0.0, hits=5.0, misses=95.0)).cache_step == 1
+    # within cooldown: held, even under a 100% miss rate
+    assert pol.tick(_sig(0.5, hits=5.0, misses=195.0)).cache_step == 0
+    assert pol.tick(_sig(1.5, hits=5.0, misses=295.0)).cache_step == 1
+    # fully resident already: nothing left to grow
+    assert pol.tick(_sig(3.0, hits=5.0, misses=395.0,
+                         frac=1.0)).cache_step == 0
+
+
+def test_cache_knob_shrinks_only_when_idle_and_above_floor():
+    pol = AdaptivePolicy(EngineConfig(policy="adaptive"),
+                         cache_cooldown_s=0.0)
+    # near-zero miss rate but a busy queue: hold (shrinking under load
+    # would trade p95 for bytes exactly when latency matters)
+    assert pol.tick(_sig(0.0, hits=100.0, misses=1.0,
+                         depth=4)).cache_step == 0
+    assert pol.tick(_sig(1.0, hits=300.0, misses=2.0)).cache_step == -1
+    # at the floor: never shrink below min_frac
+    assert pol.tick(_sig(2.0, hits=500.0, misses=3.0,
+                         frac=0.1)).cache_step == 0
+
+
+def test_engine_cache_actuation_resizes_only_opted_in_partitions(rng):
+    """``_apply_cache_step`` grows every finite-budget tier by ~10% of
+    its pages (clamped), never touches budget=None partitions, and the
+    move is attributable in metrics + the labeled registry."""
+    svc, _ = _tiered_service(rng, frac=0.5)
+    eng = svc.engine
+    parts = svc.collection.partitions
+    parts[0].set_residency(None)  # opted back out: must stay untouched
+    before = [p.providers.pages.budget_pages for p in parts]
+    eng._apply_cache_step(+1)
+    after = [p.providers.pages.budget_pages for p in parts]
+    assert after[0] is None
+    assert all(a > b for a, b in zip(after[1:], before[1:]))
+    assert eng.metrics.policy_cache_resizes == 1
+    assert eng.obs.total("serve_policy_total", knob="cache",
+                         action="grow") == 1.0
+    eng._apply_cache_step(-1)
+    assert [p.providers.pages.budget_pages for p in parts][1:] == before[1:]
+    assert eng.obs.total("serve_policy_total", knob="cache",
+                         action="shrink") == 1.0
